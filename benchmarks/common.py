@@ -1,0 +1,163 @@
+"""Shared benchmark infrastructure.
+
+Two tensor sources back every accuracy benchmark:
+  1. `trained_lm()` — a small dense transformer trained in-repo on the
+     synthetic bigram corpus until held-out perplexity is far below the
+     unigram entropy. Its weights/activations are the "real model" tensors.
+  2. `transformer_like()` — synthetic heavy-tailed tensors calibrated to the
+     paper's Fig. 2 measurements (Max-σ up to ~325, >3σ fraction ≲0.5%),
+     because a 4M-param LM trained for minutes does not develop OPT-scale
+     outliers; the paper's phenomenon is injected with measured statistics.
+
+Everything is cached under EXPERIMENTS/bench_cache so reruns are cheap.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS",
+                     "bench_cache")
+
+# Small LM used across benchmarks (dense GQA transformer, ~4M params).
+LM_STEPS = int(os.environ.get("BENCH_LM_STEPS", "400"))
+LM_SEQ = 128
+LM_BATCH = 16
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The run.py output contract: ``name,us_per_call,derived`` CSV."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timer(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (after warmup/jit)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+# --------------------------------------------------------------------------
+# Synthetic transformer-like tensors (Fig. 2 statistics)
+# --------------------------------------------------------------------------
+def transformer_like(key, shape, max_sigma: float = 60.0,
+                     outlier_frac: float = 0.003) -> jax.Array:
+    """Gaussian bulk + sparse symmetric outliers up to ``max_sigma``·σ.
+
+    Matches the paper's Fig. 2 transformer profile: >3σ fraction well under
+    0.5%, maxima one to two orders above σ. Outlier magnitudes are
+    log-uniform in [4σ, max_sigma·σ] so every abfloat exponent bucket is
+    exercised (the Fig. 5 sweep needs the full dynamic range).
+    """
+    kb, km, ks, kg = jax.random.split(key, 4)
+    x = jax.random.normal(kb, shape)
+    mask = jax.random.uniform(km, shape) < outlier_frac
+    logmag = jax.random.uniform(ks, shape, minval=jnp.log(4.0),
+                                maxval=jnp.log(max_sigma))
+    sign = jnp.sign(jax.random.normal(kg, shape))
+    out = sign * jnp.exp(logmag)
+    return jnp.where(mask, out, x).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# The trained small LM (shared fixture, cached)
+# --------------------------------------------------------------------------
+def _lm_cfg():
+    from repro.configs.base import ArchConfig
+    return ArchConfig(
+        name="bench-lm", family="dense", n_layers=4, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=384, vocab=512, head_dim=32,
+        block_pattern=("attn",), source="in-repo benchmark fixture")
+
+
+def _corpus():
+    from repro.data.synthetic import CorpusCfg
+    return CorpusCfg(vocab=512, seed=1234)
+
+
+def trained_lm(steps: int = LM_STEPS):
+    """Returns (model_fp, params_fp32, loader). Cached after first train."""
+    from repro.core.policy import QuantPolicy
+    from repro.data.loader import LoaderCfg, SyntheticLoader
+    from repro.models.model import build_model
+    from repro.optim.adamw import AdamW
+    from repro.train.train_step import init_state, make_train_step
+
+    cfg = _lm_cfg()
+    loader = SyntheticLoader(LoaderCfg(global_batch=LM_BATCH, seq_len=LM_SEQ,
+                                       corpus=_corpus()))
+    model = build_model(cfg, QuantPolicy(compute_dtype="float32"),
+                        remat=False)
+
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"bench_lm_{steps}.npz")
+    if os.path.exists(path):
+        raw = np.load(path)
+        params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        flat = [jnp.asarray(raw[f"a{i}"]) for i in range(len(flat))]
+        return model, jax.tree_util.tree_unflatten(treedef, flat), loader
+
+    opt = AdamW(lr=3e-3, weight_decay=0.0, moment_dtype=jnp.float32)
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, opt))
+    t0 = time.time()
+    for s in range(steps):
+        state, metrics = step_fn(state, loader.batch_at(s))
+        if s % 100 == 0:
+            print(f"# bench-lm step {s}: loss={float(metrics['loss']):.3f}")
+    print(f"# bench-lm trained {steps} steps in {time.time()-t0:.0f}s, "
+          f"final loss={float(metrics['loss']):.3f}")
+    flat, _ = jax.tree_util.tree_flatten(state.params)
+    np.savez(path, **{f"a{i}": np.asarray(v) for i, v in enumerate(flat)})
+    return model, state.params, loader
+
+
+def eval_ppl(model, params, loader, n_batches: int = 4) -> float:
+    """Held-out perplexity of a (possibly quantized) parameter set."""
+    from repro.train.train_step import lm_loss
+
+    @jax.jit
+    def ce(params, batch):
+        _, parts = lm_loss(model, params, batch)
+        return parts["ce"]
+
+    tot = 0.0
+    for s in range(n_batches):
+        batch = loader.batch_at(s, eval_split=True)
+        tot += float(ce(params, batch))
+    return float(np.exp(tot / n_batches))
+
+
+def weight_tensors(params, min_size: int = 4096) -> Dict[str, np.ndarray]:
+    """Flatten the trained LM's linear weights (the PTQ targets)."""
+    from repro.core.qlinear import is_linear_weight
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = {}
+    for kp, w in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        if hasattr(w, "ndim") and w.ndim >= 2 and w.size >= min_size \
+                and is_linear_weight(path, w):
+            out[path] = np.asarray(w, np.float32)
+    return out
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, name + ".json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path

@@ -1,0 +1,70 @@
+"""Paper Fig. 5: which 4-bit abfloat config (E0M3/E1M2/E2M1/E3M0) quantizes
+the largest outliers with least error? The paper picks E2M1.
+
+We draw the top outliers (the values OVP stores as abfloat) from
+transformer-like tensors across the paper's Max-σ range and measure mean
+relative rounding error per config, using the nearest-representable oracle.
+E3M0 has range but no mantissa; E0M3 has precision but clips the range;
+E2M1 balances both — the paper's conclusion, reproduced numerically.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datatypes import (NORMAL_MAX, AbfloatSpec, abfloat_nearest,
+                                  default_bias)
+
+from . import common
+
+CONFIGS = [("E0M3", 0, 3), ("E1M2", 1, 2), ("E2M1", 2, 1), ("E3M0", 3, 0)]
+
+
+def main() -> int:
+    t0 = time.perf_counter()
+    key = jax.random.PRNGKey(11)
+    errs = {name: [] for name, _, _ in CONFIGS}
+
+    # Max-σ sweep per Fig. 2: transformer tensors peak anywhere from ~20σ
+    # to ~325σ. The scale maps 3σ -> int4 max (the quantizer's init), so a
+    # value at mσ lands at m/3*7 in scaled units.
+    for max_sigma in (20.0, 60.0, 150.0, 325.0):
+        x = common.transformer_like(key, (512, 2048), max_sigma=max_sigma,
+                                    outlier_frac=0.004)
+        sd = jnp.std(x)
+        scale = 3.0 * sd / NORMAL_MAX["int4"]
+        u = x / scale
+        mags = jnp.abs(u.reshape(-1))
+        k = 2048  # the largest outliers, as in Fig. 5
+        top = jax.lax.top_k(mags, k)[0]
+        for name, eb, mb in CONFIGS:
+            spec = AbfloatSpec(ebits=eb, mb=mb,
+                               bias=default_bias("int4", mb))
+            got = abfloat_nearest(top, spec)
+            rel = jnp.mean(jnp.abs(got - top) / top)
+            errs[name].append(float(rel))
+
+    print("# Fig. 5 analogue: mean relative error of the largest outliers")
+    print("# config, err@20σ, err@60σ, err@150σ, err@325σ, mean")
+    means = {}
+    for name, _, _ in CONFIGS:
+        e = errs[name]
+        means[name] = float(np.mean(e))
+        print(f"#   {name}: " + "  ".join(f"{v:7.4f}" for v in e)
+              + f"   mean={means[name]:.4f}")
+
+    best = min(means, key=means.get)
+    ok = best == "E2M1"
+    us = (time.perf_counter() - t0) * 1e6
+    common.emit("fig5_abfloat", us,
+                f"best={best} e2m1_err={means['E2M1']:.4f} "
+                f"paper_choice_confirmed={ok}")
+    common.save_json("fig5_abfloat", {"errs": errs, "best": best})
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks: the fused OVP-decode matmul vs oracles.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+emulation — correctness, not speed), so the numbers that matter are:
+  1. allclose of pallas-interpret vs the pure-jnp oracle (correctness),
+  2. wall time of the XLA decode-and-matmul path vs an fp32 matmul at the
+     same logical shape (the decode prologue's overhead on CPU), and
+  3. the HBM-traffic ratio (packed bytes vs bf16/fp32 bytes) — the term
+     that governs TPU performance (see speedup.py / §Perf).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ovp import ovp_dequantize, ovp_quantize
+from repro.kernels import ops, ref
+
+from . import common
+
+
+def main() -> int:
+    t0 = time.perf_counter()
+    key = jax.random.PRNGKey(0)
+    m, k, n = 256, 512, 256
+    ka, kw = jax.random.split(key)
+    a = common.transformer_like(ka, (m, k), max_sigma=40.0)
+    w = common.transformer_like(kw, (k, n), max_sigma=40.0)
+
+    wq = ovp_quantize(w, jnp.std(w) * 3 / 7, "int4", pair_axis=0)
+    aq = ovp_quantize(a, jnp.std(a) * 3 / 7, "int4", pair_axis=1)
+
+    # 1) correctness: pallas interpret vs oracle
+    got16 = ops.matmul_w4a16(a, wq.data, jnp.asarray(wq.scale),
+                             interpret=True)
+    want16 = ref.ovp_matmul_w4a16_ref(a, wq.data) * wq.scale
+    err16 = float(jnp.max(jnp.abs(got16 - want16))
+                  / (jnp.max(jnp.abs(want16)) + 1e-9))
+    got4 = ops.matmul_w4a4(aq.data, jnp.asarray(aq.scale), wq.data,
+                           jnp.asarray(wq.scale), interpret=True)
+    want4 = (ref.ovp_matmul_w4a4_ref(aq.data, wq.data)
+             * aq.scale * wq.scale)
+    err4 = float(jnp.max(jnp.abs(got4 - want4))
+                 / (jnp.max(jnp.abs(want4)) + 1e-9))
+    ok = err16 < 1e-5 and err4 < 1e-5
+
+    # 2) XLA decode-path timing vs plain matmul (CPU; the TPU story is the
+    #    bandwidth ratio, but the decode must not be catastrophic even here)
+    @jax.jit
+    def xla_path(a, wq):
+        return a @ ovp_dequantize(wq, dtype=jnp.float32)
+
+    @jax.jit
+    def plain(a, w):
+        return a @ w
+
+    us_q = common.timer(xla_path, a, wq)
+    us_p = common.timer(plain, a, w)
+
+    # 3) traffic ratio
+    bytes_packed = wq.nbytes()
+    bytes_bf16 = w.size * 2
+    bytes_f32 = w.size * 4
+
+    print("# kernel correctness: max rel err "
+          f"w4a16={err16:.2e} w4a4={err4:.2e}")
+    print(f"# xla decode-matmul {us_q:.0f}us vs plain fp32 {us_p:.0f}us "
+          f"({m}x{k}x{n})")
+    print(f"# weight bytes: packed={bytes_packed} bf16={bytes_bf16} "
+          f"fp32={bytes_f32} (ratios {bytes_bf16/bytes_packed:.2f}x / "
+          f"{bytes_f32/bytes_packed:.2f}x)")
+
+    us = (time.perf_counter() - t0) * 1e6
+    common.emit("kernels_bench", us,
+                f"err16={err16:.1e} err4={err4:.1e} "
+                f"xla_decode_us={us_q:.0f} plain_us={us_p:.0f} "
+                f"traffic_vs_bf16={bytes_bf16/bytes_packed:.2f}x ok={ok}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only name]``
+
+Output contract: each benchmark prints ``name,us_per_call,derived`` as its
+final line (details as '#' comments above it). Exit code is non-zero if any
+benchmark fails its paper-claim check.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHMARKS = [
+    "table2_pairs",     # Tbl. 2  pair-type statistics
+    "fig3_prune",       # Fig. 3  clip vs prune-victim vs prune-random
+    "fig5_abfloat",     # Fig. 5  abfloat config sweep (E2M1 wins)
+    "table6_accuracy",  # Tbl. 6/7/8 SQNR vs baselines
+    "table9_llm",       # Tbl. 9  model-level PTQ perplexity
+    "speedup",          # Fig. 9/10 roofline-translated speedup
+    "kernels_bench",    # kernel correctness + decode-path timing
+    "ablation_threshold",  # §3.4 scale/threshold selection ablation
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name")
+    args = ap.parse_args()
+    names = [args.only] if args.only else BENCHMARKS
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            rc = mod.main()
+            if rc:
+                failures.append(name)
+        except Exception:
+            traceback.print_exc()
+            print(f"{name},-1,EXCEPTION")
+            failures.append(name)
+        print(f"# [{name}] wall={time.time()-t0:.1f}s", file=sys.stderr)
+
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        return 1
+    print("# all benchmarks passed their paper-claim checks",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,131 @@
+"""Paper Figs. 9/10 (TPU roofline translation): serving speedup of OliVe
+vs GOBO / int8 / ANT from the bandwidth mechanism.
+
+The paper's GPU/ASIC speedups are cycle-simulator results; their first-order
+cause is HBM traffic (weights dominate decode at the paper's batch sizes:
+2 for GPT-like, 16 for BERT-like, ctx ≤ 1k). On TPU the same mechanism is
+the *memory roofline term*: per-decode-step HBM bytes per method, speedup =
+t_mem ratios. Methods' traffic models (per Table 1 / §5.3):
+
+  gobo_fp16   — weight-only quantization, decompressed at the DRAM level,
+                on-chip traffic and compute are fp16
+  int8        — W8A8: 1 B/weight, int8 activations
+  ant4_mixed  — ANT PTQ needs int8 on ~80% of layers to hold accuracy
+                (§5.3): 0.8·1B + 0.2·0.5B per weight
+  olive4      — W4A4: 0.5 B/weight (packed OVP, zero metadata)
+  olive4_kv   — beyond-paper: + OVP 4-bit KV cache
+
+Two regimes are reported:
+  paper_serving  (batch=2, ctx=1024)   — weight-dominated, validates the
+                                         Fig. 9/10 speedup ordering
+  decode_32k     (batch=128, ctx=32k)  — KV-dominated: weight-only wins
+                                         vanish, which is exactly why the
+                                         OVP KV cache extension exists
+                                         (recorded in EXPERIMENTS.md §Perf)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.roofline import hw
+
+from . import common
+
+MODELS = ["qwen1.5-0.5b", "yi-6b", "qwen2-7b", "minitron-8b",
+          "qwen3-moe-30b-a3b"]
+
+REGIMES = {
+    "paper_serving": (2, 1024),
+    "decode_32k": (128, 32768),
+}
+
+METHODS = {
+    # (weight B/el, kv B/el, act B/el)
+    "gobo_fp16": (2.0, 2.0, 2.0),
+    "int8": (1.0, 1.0, 1.0),
+    "ant4_mixed": (0.8 * 1.0 + 0.2 * 0.5, 1.0, 1.0),
+    "olive4": (0.5, 2.0, 0.5),      # paper: W+A quantized, KV bf16
+    "olive4_kv": (0.5, 0.5, 0.5),   # beyond-paper OVP KV cache
+}
+
+
+def step_bytes(cfg, batch, ctx, w_bpe, kv_bpe, a_bpe) -> float:
+    n = cfg.active_param_count()
+    kv = batch * ctx * 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
+    act = batch * cfg.n_layers * 8 * cfg.d_model
+    return n * w_bpe + kv * kv_bpe + act * a_bpe
+
+
+def measured_bf16_bytes(arch: str):
+    p = os.path.join("EXPERIMENTS", "dryrun",
+                     f"{arch}__decode_32k__single__none.json")
+    if os.path.exists(p):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            r = rec["roofline"]
+            return r["bytes_per_chip"] * r["n_chips"]
+    return None
+
+
+def main() -> int:
+    t0 = time.perf_counter()
+    rows = {}
+    print("# Fig. 9/10 TPU translation: decode-step memory-roofline time")
+    for regime, (batch, ctx) in REGIMES.items():
+        print(f"# --- regime {regime}: batch={batch}, ctx={ctx} ---")
+        print("# model, method, HBM GB/step, speedup vs gobo, vs int8")
+        rows[regime] = {}
+        for name in MODELS:
+            cfg = ARCHS[name]
+            per = {m: step_bytes(cfg, batch, ctx, *spec)
+                   for m, spec in METHODS.items()}
+            t = {m: b / hw.HBM_BW for m, b in per.items()}
+            rows[regime][name] = {"bytes": per, "t_mem_s": t}
+            for m in METHODS:
+                print(f"#   {name:18s} {m:10s} {per[m]/1e9:9.3f} "
+                      f"{t['gobo_fp16']/t[m]:6.2f}x {t['int8']/t[m]:6.2f}x")
+
+    def mean_ratio(regime, a, b):
+        return float(np.mean([rows[regime][n]["t_mem_s"][a]
+                              / rows[regime][n]["t_mem_s"][b]
+                              for n in MODELS]))
+
+    sp_gobo = mean_ratio("paper_serving", "gobo_fp16", "olive4")
+    sp_int8 = mean_ratio("paper_serving", "int8", "olive4")
+    sp_ant = mean_ratio("paper_serving", "ant4_mixed", "olive4")
+    kv_32k = mean_ratio("decode_32k", "olive4", "olive4_kv")
+    w_only_32k = mean_ratio("decode_32k", "gobo_fp16", "olive4")
+
+    print(f"# paper regime means: olive4 vs gobo {sp_gobo:.2f}x (paper "
+          f"4.5x), vs int8 {sp_int8:.2f}x (2.7x), vs ant {sp_ant:.2f}x "
+          f"(2.4x) — bandwidth-only model reproduces the ordering")
+    print(f"# decode_32k: weight-only OliVe gives just {w_only_32k:.2f}x "
+          f"(KV-dominated); OVP KV cache adds {kv_32k:.2f}x on top "
+          f"(beyond-paper, see EXPERIMENTS.md §Perf)")
+    for name in MODELS:
+        meas = measured_bf16_bytes(name)
+        if meas:
+            print(f"# [cross-check] {name} dry-run bf16 decode_32k HBO "
+                  f"bytes global={meas/1e9:.0f} GB")
+
+    # ordering claim: olive > ant > int8 > gobo in the paper's regime,
+    # with the gobo gap being the big one (4x-class)
+    ok = (sp_gobo > 3.0 and sp_int8 > 1.7 and sp_ant > 1.6
+          and kv_32k > 2.5)
+    us = (time.perf_counter() - t0) * 1e6
+    common.emit("speedup", us,
+                f"olive_vs_gobo={sp_gobo:.2f}x vs_int8={sp_int8:.2f}x "
+                f"vs_ant={sp_ant:.2f}x kv_bonus_32k={kv_32k:.2f}x ok={ok}")
+    common.save_json("speedup", {"rows": rows, "ok": bool(ok)})
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

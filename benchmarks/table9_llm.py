@@ -1,0 +1,132 @@
+"""Paper Table 9 (model-level analogue): held-out perplexity of the
+in-repo trained LM under each PTQ method — the end-to-end accuracy claim.
+
+Paper's finding (perplexity, lower better):
+  8-bit OliVe ≈ FP32;  4-bit OliVe close to FP32;
+  int4 / 4-bit ANT collapse (orders of magnitude worse);
+  GOBO (weights-only, fp16 compute) matches FP32 but gives no compute win.
+
+Here, a 4M-param LM trained on the synthetic corpus does not develop
+OPT-6.7B-scale outliers, so int4's collapse is milder — the *ordering* is
+the reproduced claim, with deltas recorded. We additionally evaluate the
+*outlier-equivalent* variant (fig3_prune.outlier_equivalent): a
+function-identical transform of the same trained model whose weights carry
+genuine functional outlier channels — on it, outlier-blind 4-bit methods
+degrade sharply while OliVe holds, exactly the paper's >6B observation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines
+from repro.core.policy import QuantPolicy
+from repro.core.qlinear import is_linear_weight, quantize_params
+from repro.models.model import build_model
+
+from . import common
+
+
+def _map_weights(params, fn):
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for kp, w in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        if hasattr(w, "ndim") and w.ndim >= 2 and w.size >= 4096 \
+                and is_linear_weight(path, w):
+            out.append(fn(jnp.asarray(w, jnp.float32)))
+        else:
+            out.append(w)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _eval(cfg, policy, params, loader) -> float:
+    model = build_model(cfg, policy, remat=False)
+    return common.eval_ppl(model, params, loader)
+
+
+def run_suite(cfg, params, loader, tag: str):
+    fp = QuantPolicy(compute_dtype="float32")
+    rows = {}
+    rows["fp32"] = _eval(cfg, fp, params, loader)
+
+    def ptq(policy):
+        return quantize_params(params, policy)
+
+    # OliVe (the paper): W4A4, W8A8, and weights-only W4
+    p44 = QuantPolicy(method="olive", wbits=4, abits=4,
+                      compute_dtype="float32")
+    rows["olive_w4a4"] = _eval(cfg, p44, ptq(p44), loader)
+    p88 = QuantPolicy(method="olive", wbits=8, abits=8,
+                      w_normal_dtype="int8", a_normal_dtype="int8",
+                      compute_dtype="float32")
+    rows["olive_w8a8"] = _eval(cfg, p88, ptq(p88), loader)
+    pw4 = QuantPolicy(method="olive", wbits=4, abits=0,
+                      compute_dtype="float32")
+    rows["olive_w4"] = _eval(cfg, pw4, ptq(pw4), loader)
+
+    # baselines
+    pi8 = QuantPolicy(method="int", wbits=8, abits=8,
+                      compute_dtype="float32")
+    rows["int8_w8a8"] = _eval(cfg, pi8, ptq(pi8), loader)
+    pi4 = QuantPolicy(method="int", wbits=4, abits=4,
+                      compute_dtype="float32")
+    rows["int4_w4a4"] = _eval(cfg, pi4, ptq(pi4), loader)
+    pa4 = QuantPolicy(method="ant", wbits=4, abits=4,
+                      compute_dtype="float32")
+    rows["ant_w4a4"] = _eval(cfg, pa4, ptq(pa4), loader)
+    # GOBO: weights-only, fp compute (its GPU deployment mode)
+    gparams = _map_weights(params,
+                           lambda w: baselines.gobo_fake_quant(w, 4)[0])
+    rows["gobo_w4"] = _eval(cfg, fp, gparams, loader)
+
+    print(f"# Table 9 analogue [{tag}]: held-out perplexity")
+    for k, v in rows.items():
+        print(f"#   {k:12s} ppl={v:9.3f}  (+{100*(v/rows['fp32']-1):7.2f}%)")
+    return rows
+
+
+def main() -> int:
+    t0 = time.perf_counter()
+    model, params, loader = common.trained_lm()
+    cfg = model.cfg
+
+    rows = run_suite(cfg, params, loader, "trained-lm")
+    # the >6B outlier regime: the function-identical outlier-equivalent
+    # transform of the SAME model (functional outlier channels)
+    from .fig3_prune import outlier_equivalent
+    oparams = outlier_equivalent(params)
+    orows = run_suite(cfg, oparams, loader, "trained-lm+outliers")
+
+    def rel(r, k):
+        return r[k] / r["fp32"] - 1.0
+
+    # claims: olive8 ≈ fp32; olive4 within a few percent; olive4 beats the
+    # 4-bit baselines; and under injected outliers the baseline gap widens
+    ok = (rel(rows, "olive_w8a8") < 0.01
+          and rel(rows, "olive_w4a4") < 0.10
+          and rows["olive_w4a4"] <= rows["int4_w4a4"]
+          and rows["olive_w4a4"] <= rows["ant_w4a4"]
+          and rel(orows, "olive_w4a4") < 0.25
+          and orows["int4_w4a4"] / orows["olive_w4a4"] > 1.5)
+
+    us = (time.perf_counter() - t0) * 1e6
+    common.emit(
+        "table9_llm", us,
+        f"olive4=+{100*rel(rows,'olive_w4a4'):.2f}% "
+        f"int4=+{100*rel(rows,'int4_w4a4'):.2f}% "
+        f"outlier_regime_int4/olive4="
+        f"{orows['int4_w4a4']/orows['olive_w4a4']:.1f}x claims_ok={ok}")
+    common.save_json("table9_llm", {"plain": rows, "outlier": orows,
+                                    "ok": bool(ok)})
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

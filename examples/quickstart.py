@@ -1,0 +1,69 @@
+"""OliVe quickstart: OVP-quantize a tensor, inspect the encoding, run the
+fused kernel, and see why outlier-blind int4 fails.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines
+from repro.core.datatypes import ABFLOAT_FOR_NORMAL
+from repro.core.ovp import (ovp_dequantize, ovp_quantize, pair_statistics,
+                            unpack4)
+from repro.core.quantizer import QuantSpec, quantization_error, quantize
+from repro.kernels import ops, ref
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    # A transformer-like tensor: Gaussian bulk + a few huge outliers.
+    x = jax.random.normal(key, (256, 512))
+    x = x.at[3, 17].set(41.0).at[100, 200].set(-57.0).at[200, 333].set(88.0)
+
+    print("== pair statistics (paper Table 2) ==")
+    st = pair_statistics(x.reshape(-1))
+    for k, v in st.items():
+        print(f"  {k}: {v:.6f}")
+
+    print("\n== OliVe PTQ (scale search + OVP encode + pack) ==")
+    qt = quantize(x, QuantSpec(normal_dtype="int4", granularity="tensor"))
+    print(f"  packed bytes: {qt.nbytes()}  (fp32 was {x.size * 4})")
+    err = quantization_error(x, QuantSpec(normal_dtype="int4"))
+    print(f"  sqnr: {err['sqnr_db']:.2f} dB")
+
+    # the outliers survive quantization:
+    xh = ovp_dequantize(qt)
+    for (i, j) in [(3, 17), (100, 200), (200, 333)]:
+        print(f"  outlier x[{i},{j}] = {float(x[i,j]):+.1f}  ->  "
+              f"{float(xh[i,j]):+.1f}")
+
+    # compare: int4 clips them into oblivion
+    xi4 = baselines.uniform_int_fake_quant(x, 4)
+    print("  int4 (outlier-blind):     "
+          + "  ".join(f"{float(xi4[i,j]):+.2f}"
+                      for (i, j) in [(3, 17), (100, 200), (200, 333)]))
+
+    print("\n== the byte IS the pair: inspect one OV pair ==")
+    codes = unpack4(qt.data, qt.pair_axis)
+    # find a victim (identifier 0x8) and show its pair
+    vi, vj = map(int, jnp.argwhere(codes == 0x8)[0])
+    pj = vj + 1 if vj % 2 == 0 else vj - 1
+    print(f"  codes[{vi},{vj}] = 0x{int(codes[vi, vj]):x} (victim id), "
+          f"codes[{vi},{pj}] = 0x{int(codes[vi, pj]):x} (abfloat outlier)")
+    spec = ABFLOAT_FOR_NORMAL["int4"]
+    print(f"  abfloat E2M1 bias={spec.bias}: magnitudes "
+          f"{spec.magnitudes().tolist()}")
+
+    print("\n== fused OVP-decode matmul (Pallas, interpret=True) ==")
+    a = jax.random.normal(jax.random.PRNGKey(1), (64, 256))
+    wq = ovp_quantize(x, jnp.std(x) * 3 / 7, "int4", pair_axis=0)
+    got = ops.matmul_w4a16(a, wq.data, jnp.asarray(wq.scale),
+                           interpret=True)
+    want = ref.ovp_matmul_w4a16_ref(a, wq.data) * wq.scale
+    print(f"  kernel vs oracle max err: "
+          f"{float(jnp.max(jnp.abs(got - want))):.2e}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

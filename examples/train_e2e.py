@@ -1,0 +1,86 @@
+"""End-to-end fault-tolerant training driver.
+
+Trains a dense GQA transformer on the synthetic corpus with the production
+trainer: microbatched gradient accumulation, bf16 moments/grads, async
+checkpointing, preemption-safe resume, straggler monitoring. A mid-run
+"crash" is simulated and training resumes bit-exactly from the checkpoint
+(the stateless loader replays the identical data stream).
+
+Default model is ~20M params so the demo finishes in minutes on CPU;
+--model-100m selects the ~100M-param config the deliverable names.
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--model-100m] [--steps N]
+"""
+import argparse
+import os
+import shutil
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import QuantPolicy
+from repro.data.loader import LoaderCfg, SyntheticLoader
+from repro.data.synthetic import CorpusCfg
+from repro.models.model import build_model
+from repro.optim.adamw import AdamW
+from repro.train.trainer import Trainer, TrainerCfg
+
+SMALL = ArchConfig(name="e2e-20m", family="dense", n_layers=6, d_model=256,
+                   n_heads=8, n_kv_heads=4, d_ff=768, vocab=8192,
+                   head_dim=32, block_pattern=("attn",))
+BIG = ArchConfig(name="e2e-100m", family="dense", n_layers=12, d_model=512,
+                 n_heads=8, n_kv_heads=4, d_ff=2048, vocab=50304,
+                 head_dim=64, block_pattern=("attn",))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model-100m", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/olive_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = BIG if args.model_100m else SMALL
+    steps = args.steps or (200 if args.model_100m else 120)
+    n_params = cfg.param_count()
+    print(f"arch {cfg.name}: ~{n_params/1e6:.1f}M params, {steps} steps")
+
+    if os.path.isdir(args.ckpt_dir):
+        shutil.rmtree(args.ckpt_dir)
+    model = build_model(cfg, QuantPolicy(compute_dtype="float32"),
+                        remat=False)
+    from repro.optim.adamw import cosine_schedule
+    opt = AdamW(lr=cosine_schedule(1e-3, 20, steps),
+                moment_dtype=jnp.bfloat16)
+    loader = SyntheticLoader(LoaderCfg(
+        global_batch=16, seq_len=256, corpus=CorpusCfg(vocab=cfg.vocab)))
+
+    half = steps // 2
+    tcfg = TrainerCfg(total_steps=half, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=max(half // 2, 10), ckpt_async=True,
+                      log_every=10, n_microbatches=2)
+    print(f"== phase 1: train to step {half}, then simulate a crash ==")
+    t1 = Trainer(model, opt, loader, tcfg).init_or_restore()
+    h1 = t1.run()
+
+    print("== phase 2: fresh process restores the checkpoint and "
+          "finishes ==")
+    tcfg2 = TrainerCfg(total_steps=steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=max(half // 2, 10), ckpt_async=True,
+                       log_every=10, n_microbatches=2, eval_every=0)
+    t2 = Trainer(model, opt, loader, tcfg2).init_or_restore()
+    assert t2.step == half, f"resume step {t2.step} != {half}"
+    h2 = t2.run()
+
+    ppl = t2.evaluate(n_batches=4)
+    first, last = h1["loss"][0], h2["loss"][-1]
+    print(f"loss {first:.3f} -> {last:.3f}; held-out ppl {ppl:.2f} "
+          f"(vocab {cfg.vocab}: random = {cfg.vocab})")
+    ok = last < 0.7 * first
+    print("OK: loss decreased through the simulated crash/restore"
+          if ok else "WARN: loss did not improve enough")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

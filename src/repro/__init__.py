@@ -1,0 +1,3 @@
+"""repro: OliVe (ISCA'23) outlier-victim pair quantization — a multi-pod
+JAX training/serving framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,121 @@
+"""Sharded checkpointing: npz-per-step + JSON manifest, async save thread,
+restore-with-resharding (elastic restarts onto a different mesh).
+
+Layout:
+  <dir>/step_<N>/arrays.npz     flat {path: ndarray} (device_get'ed)
+  <dir>/step_<N>/manifest.json  step, names, dtypes, shapes, done-marker
+
+A save is only valid once `manifest.json` exists (atomic rename), so a
+preemption mid-write can never leave a checkpoint that restores garbage.
+Restore targets a template pytree (structure + dtypes), then device_puts
+onto the *current* mesh's shardings — the elastic path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        out[key] = leaf
+    return out
+
+
+def _to_npz_safe(a: np.ndarray) -> np.ndarray:
+    """npz cannot round-trip ml_dtypes (bfloat16 etc.); store the raw bits
+    as uint16/uint8 — the manifest keeps the true dtype for restore."""
+    if a.dtype.kind == "V" or str(a.dtype) in ("bfloat16", "float8_e4m3fn",
+                                               "float8_e5m2"):
+        return a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+    return a
+
+
+def save(ckpt_dir: str, step: int, tree: Any, blocking: bool = True,
+         keep: int = 3) -> threading.Thread | None:
+    """Save `tree` (params/opt state/metadata pytree) at `step`."""
+    flat = _flatten(tree)
+    # snapshot to host memory synchronously (cheap vs I/O), write async
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: _to_npz_safe(v) for k, v in host.items()})
+        manifest = {"step": step,
+                    "names": sorted(host),
+                    "shapes": {k: list(v.shape) for k, v in host.items()},
+                    "dtypes": {k: str(v.dtype) for k, v in host.items()}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+        _gc(ckpt_dir, keep)
+
+    os.makedirs(ckpt_dir, exist_ok=True)
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, d, "manifest.json")):
+            best = max(best or -1, int(d.split("_")[1]))
+    return best
+
+
+def restore(ckpt_dir: str, step: int, template: Any,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of `template`. If `shardings` (matching
+    pytree of NamedSharding) is given, leaves are device_put with it —
+    resharding onto whatever mesh the restarted job runs on."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
+    data = np.load(path)
+    flat_t = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    flat_s = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        if shardings is not None else [None] * len(flat_t))
+    leaves = []
+    for (kp, tleaf), shd in zip(flat_t, flat_s):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        arr = data[key]
+        want = np.dtype(tleaf.dtype)
+        if arr.dtype != want:
+            if arr.dtype.itemsize == want.itemsize and \
+                    arr.dtype.kind == "u":
+                arr = arr.view(want)     # bit-stored ml_dtype (bfloat16…)
+            else:
+                arr = arr.astype(want)
+        leaves.append(jax.device_put(arr, shd) if shd is not None
+                      else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

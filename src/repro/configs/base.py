@@ -1,0 +1,170 @@
+"""Architecture + shape configuration schema.
+
+Every assigned architecture is an `ArchConfig`; the four canonical input
+shapes are `ShapeCfg`s. `reduced()` produces the smoke-test variant of the
+same family (small widths, few layers/experts, tiny vocab).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | hybrid | ssm | moe | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    mlp_kind: str = "swiglu"         # swiglu | gelu
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    norm_topk: bool = False
+    capacity_factor: float = 1.25
+    # block pattern (repeating period); tail = n_layers % len(pattern)
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 0                  # sliding window for local_attn blocks
+    d_rnn: int = 0                   # RG-LRU width (0 -> d_model)
+    # encoder-decoder
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    # modality frontend stubs
+    frontend: str = ""               # "" | vit | audio
+    frontend_dim: int = 0
+    n_frontend_tokens: int = 0
+    # misc
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # mLSTM training formulation: chunkwise-parallel chunk length
+    # (0 = per-token recurrent scan; §Perf iteration X)
+    mlstm_chunk: int = 64
+    source: str = ""                 # provenance tag
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 (= 16 data x 16 model).
+
+        Production TP practice (MaxText et al.): embedding/head tables are
+        padded so the vocab dim shards on any production mesh axis; the
+        pad columns are masked to -inf in the logits. Without this, a
+        non-divisible vocab (e.g. seamless 256206, internvl 151655) forces
+        the partitioner to shard the table's d_model dim instead, which
+        collides with the microbatch scan's dynamic-slice after SPMD
+        partitioning (a real compile failure found by the dry-run).
+        """
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode memory/compute doesn't grow O(T²)/O(T) cache in
+        full attention — i.e. every block is recurrent or windowed."""
+        return all(bt in ("rglru", "mlstm", "slstm", "local_attn")
+                   for bt in self.block_pattern)
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs decode (enc-dec has a decoder)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, hd = self.d_model, self.head_dim
+        n_attn_p = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * d
+        if self.mlp_kind == "swiglu":
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        total = 0
+        pattern = self.block_pattern
+        per = {
+            "attn": n_attn_p + mlp,
+            "local_attn": n_attn_p + mlp,
+            "moe": n_attn_p + self.n_experts * 3 * d * self.d_ff
+            + d * self.n_experts,
+            "rglru": (self.d_rnn or d) * (2 * d + d)
+            + 2 * (self.d_rnn or d) ** 2 + mlp,
+            "mlstm": 2 * d * (4 * d) + 3 * (2 * d) ** 2 + 2 * d * d,
+            "slstm": 4 * d * d + 3 * d * (d // max(self.n_heads, 1))
+            + 2 * d * int(4 * d / 3),
+            "encdec_attn": 2 * n_attn_p + mlp,
+        }
+        for i in range(self.n_layers):
+            total += per[pattern[i % len(pattern)]]
+        if self.enc_dec:
+            total += self.n_enc_layers * (n_attn_p + mlp)
+        total += 2 * self.vocab * d  # embed + head
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        moe_blocks = sum(1 for i in range(self.n_layers)
+                         if self.block_pattern[i % len(self.block_pattern)]
+                         == "moe")
+        inactive = moe_blocks * (self.n_experts - self.top_k) \
+            * 3 * d * self.d_ff
+        return full - inactive
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family/pattern, tiny dimensions."""
+        period = len(self.block_pattern)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=max(2 * period, period + self.n_layers % period),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads
+            < self.n_heads else 4,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=512,
+            n_experts=min(self.n_experts, 8) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            window=min(self.window, 8) if self.window else 0,
+            d_rnn=64 if self.d_rnn else 0,
+            n_enc_layers=2 if self.enc_dec else 0,
+            frontend_dim=32 if self.frontend else 0,
+            n_frontend_tokens=4 if self.frontend else 0,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeCfg) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped). long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention architecture: 524k-token decode is "
+                       "O(T) cache / O(T^2) prefill — skipped per "
+                       "assignment rule (see DESIGN.md §5)")
+    return True, ""

@@ -1,0 +1,17 @@
+"""OliVe core: outlier-victim pair quantization (ISCA'23) in JAX."""
+from .datatypes import (ABFLOAT_FOR_NORMAL, E2M1_INT4, E2M1_FLINT4,
+                        E4M3_INT8, FLINT4_LUT, ID4, ID8, NORMAL_MAX,
+                        AbfloatSpec, abfloat_decode, abfloat_encode,
+                        abfloat_nearest, abfloat_spec_for, default_bias,
+                        flint4_decode, flint4_encode, normal_decode,
+                        normal_encode)
+from .ovp import (QuantizedTensor, ovp_decode_codes, ovp_dequantize,
+                  ovp_encode_codes, ovp_fake_quant, ovp_quantize, pack4,
+                  pair_statistics, unpack4)
+from .policy import PRESETS, QuantPolicy, get_policy
+from .quantizer import (QuantSpec, dequantize, fake_quant_ste,
+                        ovp_search_scale, ovp_search_scale_per_channel,
+                        quantization_error, quantize, sigma_init_scale)
+from .qlinear import (linear, qmatmul, quantize_activation, quantize_params,
+                      quantize_weight)
+from .calibration import ActTape, calibrate_activation_scales, run_calibration

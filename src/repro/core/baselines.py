@@ -1,0 +1,174 @@
+"""Quantization baselines the paper compares against (§5.1–5.2).
+
+Every baseline exposes `fake_quant(x) -> x_hat` semantics (quantize +
+dequantize) plus byte accounting, so the benchmark harness can rank methods
+by round-trip error and memory footprint on identical tensors.
+
+  uniform int4/int8   — symmetric uniform quantization (max- or MSE-scaled)
+  ANT                 — per-tensor adaptive type: best of {int4, flint4}
+                        by MSE (Guo et al., MICRO'22) [32]
+  GOBO                — weight-only: outliers (>kσ) kept fp32 in a coordinate
+                        list, normal values -> centroid codebook [85]
+  AdaptivFloat        — float with tensor-wise exponent bias [76]
+  outlier-clip        — clip at kσ then uniform int4 (Fig. 3 "clipping")
+  prune-random/victim — Fig. 3 pruning controls
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .datatypes import FLINT4_LUT, flint4_decode, flint4_encode
+from .ovp import _move_pair_axis
+
+
+# --------------------------------------------------------------------------
+# Uniform symmetric int quantization
+# --------------------------------------------------------------------------
+def uniform_int_fake_quant(x: jax.Array, bits: int,
+                           scale_mode: str = "mse") -> jax.Array:
+    nmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(x))
+    if scale_mode == "max":
+        s = jnp.maximum(amax / nmax, 1e-8)
+        return jnp.clip(jnp.round(x / s), -nmax - 1, nmax) * s
+
+    # MSE grid search on the clip point (standard PTQ practice [4])
+    grid = jnp.maximum(amax, 1e-8) * jnp.geomspace(0.05, 1.0, 40)
+
+    def mse_at(c):
+        s = c / nmax
+        xh = jnp.clip(jnp.round(x / s), -nmax - 1, nmax) * s
+        return jnp.mean((xh - x) ** 2)
+
+    mses = jax.lax.map(mse_at, grid)
+    s = grid[jnp.argmin(mses)] / nmax
+    return jnp.clip(jnp.round(x / s), -nmax - 1, nmax) * s
+
+
+def uniform_int_dynamic_act(x: jax.Array, bits: int) -> jax.Array:
+    """Per-tensor dynamic (max-scaled) activation fake-quant — the standard
+    runtime path of int8/int4 baselines (no grid search in the hot loop)."""
+    nmax = (1 << (bits - 1)) - 1
+    s = jnp.maximum(jnp.max(jnp.abs(x)) / nmax, 1e-8)
+    return jnp.clip(jnp.round(x / s), -nmax - 1, nmax) * s
+
+
+# --------------------------------------------------------------------------
+# ANT: adaptive data type (int4 vs flint4), per-tensor by MSE
+# --------------------------------------------------------------------------
+def flint4_fake_quant(x: jax.Array) -> jax.Array:
+    fmax = float(FLINT4_LUT[-1])
+    amax = jnp.max(jnp.abs(x))
+    grid = jnp.maximum(amax, 1e-8) / fmax * jnp.geomspace(0.08, 1.1, 40)
+
+    def mse_at(s):
+        xh = flint4_decode(flint4_encode(x / s)) * s
+        return jnp.mean((xh - x) ** 2)
+
+    mses = jax.lax.map(mse_at, grid)
+    s = grid[jnp.argmin(mses)]
+    return flint4_decode(flint4_encode(x / s)) * s
+
+
+def ant_fake_quant(x: jax.Array) -> jax.Array:
+    """ANT 4-bit: pick the better of int4 / flint4 for this tensor."""
+    a = uniform_int_fake_quant(x, 4, "mse")
+    b = flint4_fake_quant(x)
+    mse_a = jnp.mean((a - x) ** 2)
+    mse_b = jnp.mean((b - x) ** 2)
+    return jnp.where(mse_a <= mse_b, a, b)
+
+
+# --------------------------------------------------------------------------
+# GOBO-style: outliers exact (sparse fp32), normals -> centroid codebook
+# --------------------------------------------------------------------------
+def gobo_fake_quant(x: jax.Array, bits: int = 4, k_sigma: float = 3.0,
+                    iters: int = 6) -> Tuple[jax.Array, dict]:
+    """Returns (x_hat, stats). stats carries the GOBO byte accounting:
+    normals at `bits` + outliers at 32 bits value + 32 bits coordinate —
+    the unaligned overhead OliVe's Table 1 criticises.
+    """
+    mu, sigma = jnp.mean(x), jnp.std(x)
+    is_out = jnp.abs(x - mu) > k_sigma * sigma
+    normals = jnp.where(is_out, mu, x)
+
+    k = 1 << bits
+    qs = jnp.linspace(0.5 / k, 1 - 0.5 / k, k)
+    cent = jnp.quantile(normals.reshape(-1), qs)
+    flat = normals.reshape(-1)
+
+    def lloyd(cent, _):
+        assign = jnp.argmin(jnp.abs(flat[:, None] - cent[None, :]), axis=1)
+        sums = jax.ops.segment_sum(flat, assign, num_segments=k)
+        cnts = jax.ops.segment_sum(jnp.ones_like(flat), assign,
+                                   num_segments=k)
+        new = jnp.where(cnts > 0, sums / jnp.maximum(cnts, 1), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(lloyd, cent, None, length=iters)
+    assign = jnp.argmin(jnp.abs(flat[:, None] - cent[None, :]), axis=1)
+    qn = cent[assign].reshape(x.shape)
+    xh = jnp.where(is_out, x, qn)  # outliers kept exact (fp32 side list)
+
+    n_out = jnp.sum(is_out)
+    bytes_ = (x.size - n_out) * bits / 8 + n_out * (4 + 4) + k * 4
+    return xh, {"outlier_frac": float(jnp.mean(is_out)),
+                "bytes": float(bytes_)}
+
+
+# --------------------------------------------------------------------------
+# AdaptivFloat: float with a tensor-wise exponent bias [76]
+# --------------------------------------------------------------------------
+def adaptivfloat_fake_quant(x: jax.Array, bits: int = 4,
+                            ebits: int = 2) -> jax.Array:
+    mb = bits - 1 - ebits
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    # bias aligns the max representable with the tensor max exponent
+    max_mant = 2.0 - 2.0 ** (-mb)
+    ebias = jnp.floor(jnp.log2(amax / max_mant))
+    emin = ebias - ((1 << ebits) - 1)
+
+    sign = jnp.sign(x)
+    a = jnp.abs(x)
+    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(a, 1e-30))), emin, ebias)
+    step = jnp.exp2(e - mb)
+    mant = jnp.clip(jnp.round(a / step), 0, (2 ** (mb + 1)) - 1)
+    xh = sign * mant * step
+    # flush below min subnormal-ish magnitude
+    min_mag = jnp.exp2(emin)
+    return jnp.where(a < min_mag / 2, 0.0, xh)
+
+
+# --------------------------------------------------------------------------
+# Fig. 3 controls: clip outliers / prune victims / prune random normals
+# --------------------------------------------------------------------------
+def clip_outliers(x: jax.Array, k_sigma: float = 3.0) -> jax.Array:
+    mu, sigma = jnp.mean(x), jnp.std(x)
+    return jnp.clip(x, mu - k_sigma * sigma, mu + k_sigma * sigma)
+
+
+def prune_victims(x: jax.Array, k_sigma: float = 3.0,
+                  pair_axis: int = -1) -> jax.Array:
+    """Zero the normal neighbour of each outlier (and the smaller of an
+    outlier-outlier pair) — everything else kept full precision (Fig. 3)."""
+    v = _move_pair_axis(x, pair_axis)
+    mu, sigma = jnp.mean(v), jnp.std(v)
+    t = k_sigma * sigma
+    x0, x1 = v[..., 0::2], v[..., 1::2]
+    a0, a1 = jnp.abs(x0 - mu), jnp.abs(x1 - mu)
+    o0, o1 = a0 > t, a1 > t
+    first_out = o0 & (~o1 | (a0 >= a1))
+    second_out = o1 & ~first_out
+    y0 = jnp.where(second_out, 0.0, x0)   # victim of a right outlier
+    y1 = jnp.where(first_out, 0.0, x1)    # victim of a left outlier
+    out = jnp.stack([y0, y1], axis=-1).reshape(v.shape)
+    return jnp.moveaxis(out, -1, pair_axis)
+
+
+def prune_random(x: jax.Array, frac: float, key: jax.Array) -> jax.Array:
+    mask = jax.random.uniform(key, x.shape) < frac
+    return jnp.where(mask, 0.0, x)

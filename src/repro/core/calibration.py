@@ -1,0 +1,71 @@
+"""PTQ calibration (paper §3.4): static activation scales from one batch.
+
+The paper uses one batch of *training-set* data to select scale factors.
+Models in `repro.models` support `collect_acts=True`, returning a tape of
+matmul-input activations keyed by site name. We subsample each site, run the
+OVP MSE scale search, and hand the scales back to the serving path
+(`QuantPolicy.act_scale_mode == "static"`).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantizer import ovp_search_scale
+
+
+class ActTape:
+    """Mutable activation tape threaded through un-jitted calibration runs."""
+
+    def __init__(self, max_per_site: int = 65536, seed: int = 0):
+        self.max_per_site = max_per_site
+        self.rng = np.random.default_rng(seed)
+        self.samples: Dict[str, np.ndarray] = {}
+
+    def record(self, name: str, x) -> None:
+        flat = np.asarray(jax.device_get(x), dtype=np.float32).reshape(-1)
+        if flat.size > self.max_per_site:
+            idx = self.rng.choice(flat.size, self.max_per_site, replace=False)
+            flat = flat[idx]
+        prev = self.samples.get(name)
+        if prev is not None:
+            both = np.concatenate([prev, flat])
+            if both.size > self.max_per_site:
+                idx = self.rng.choice(both.size, self.max_per_site,
+                                      replace=False)
+                both = both[idx]
+            self.samples[name] = both
+        else:
+            self.samples[name] = flat
+
+
+def calibrate_activation_scales(tape: ActTape, normal_dtype: str = "int4",
+                                n_grid: int = 24) -> Dict[str, jax.Array]:
+    """Per-site static scales via the OVP MSE search (3σ-seeded)."""
+    scales = {}
+    for name, sample in sorted(tape.samples.items()):
+        s = sample
+        if s.size % 2 != 0:  # pairing needs even length
+            s = s[:-1]
+        scales[name] = ovp_search_scale(jnp.asarray(s), normal_dtype,
+                                        n_grid=n_grid)
+    return scales
+
+
+def run_calibration(apply_collect: Callable, params, batches: Iterable,
+                    normal_dtype: str = "int4",
+                    max_per_site: int = 65536) -> Dict[str, jax.Array]:
+    """apply_collect(params, batch) -> (out, acts: dict[str, array]).
+
+    Runs the model over calibration batches, tapes matmul inputs, returns
+    static activation scales per site.
+    """
+    tape = ActTape(max_per_site=max_per_site)
+    for batch in batches:
+        _, acts = apply_collect(params, batch)
+        for name, x in acts.items():
+            tape.record(name, x)
+    return calibrate_activation_scales(tape, normal_dtype)

@@ -1,0 +1,228 @@
+"""Numeric data types for OliVe OVP quantization (paper §3.2–3.3).
+
+All encoders/decoders operate on *scaled* magnitudes (value / scale) and on
+integer nibble/byte codes, fully vectorised in jnp (branch-free: the paper's
+hardware decoders become `where`-trees that lower to VPU selects on TPU).
+
+Code conventions
+----------------
+4-bit codes live in uint8 arrays with values 0..15 (one nibble per element,
+packing into bytes happens in `repro.core.ovp`). 8-bit codes use the full byte.
+
+Normal data types (Table 3)
+  int4    values 0,±1..±7         identifier 1000b  (-8 removed)
+  flint4  values 0,±1..±4,±6,±8,±16 identifier 1000b (-0, unused by design)
+  int8    values 0,±1..±127       identifier 10000000b (-128 removed)
+
+Outlier data type: abfloat (§3.3), fixed-point float
+  value = sign × (2^mb + mantissa) << (exponent + bias)
+  4-bit: E2M1 (paper-selected, Fig. 5);  8-bit: E4M3.
+  Codes x000...0 (±0) are disabled for outliers so the victim identifier
+  cannot be forged; consequently min magnitude is (2^mb + 1) << bias.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Identifiers (victim markers)
+# --------------------------------------------------------------------------
+ID4 = 0x8          # 1000b
+ID8 = 0x80         # 10000000b
+
+# Normal-value max magnitude (defines the outlier threshold T = nmax, §3.4)
+NORMAL_MAX = {"int4": 7, "flint4": 16, "int8": 127}
+
+# flint4 magnitude LUT (ANT data type, Table 3): index = low 3 bits of code.
+FLINT4_LUT = np.array([0, 1, 2, 3, 4, 6, 8, 16], dtype=np.float32)
+
+
+# --------------------------------------------------------------------------
+# abfloat spec
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AbfloatSpec:
+    """sign × (2^mb + m) << (e + bias); total bits = 1 + ebits + mb."""
+    ebits: int
+    mb: int
+    bias: int
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.ebits + self.mb
+
+    @property
+    def min_mag(self) -> int:
+        # code bits e=0, m=1 (e=0,m=0 disabled — identifier/zero conflict)
+        return ((1 << self.mb) + 1) << self.bias
+
+    @property
+    def max_mag(self) -> int:
+        base = (1 << (self.mb + 1)) - 1
+        mag = base << ((1 << self.ebits) - 1 + self.bias)
+        # §4.5: clip outliers at 2^15 so int32 accumulators cannot overflow.
+        return min(mag, 1 << 15)
+
+    def magnitudes(self) -> np.ndarray:
+        """All representable magnitudes (sorted, for tests / nearest-mode)."""
+        out = []
+        for e in range(1 << self.ebits):
+            for m in range(1 << self.mb):
+                if e == 0 and m == 0:
+                    continue  # disabled code
+                out.append(min((((1 << self.mb) + m) << (e + self.bias)),
+                               1 << 15))
+        return np.unique(np.array(out, dtype=np.float32))
+
+
+def default_bias(normal_dtype: str, mb: int) -> int:
+    """Adaptive bias (§3.3): smallest b with min outlier mag > normal max."""
+    t = NORMAL_MAX[normal_dtype]
+    b = 0
+    while (((1 << mb) + 1) << b) <= t:
+        b += 1
+    return b
+
+
+# Paper's chosen configurations (§3.3): E2M1 for 4-bit, E4M3 for 8-bit.
+E2M1_INT4 = AbfloatSpec(ebits=2, mb=1, bias=default_bias("int4", 1))      # bias=2, {12..96}
+E2M1_FLINT4 = AbfloatSpec(ebits=2, mb=1, bias=default_bias("flint4", 1))  # bias=3, {24..192}
+E4M3_INT8 = AbfloatSpec(ebits=4, mb=3, bias=default_bias("int8", 3))      # bias=4, {144..32768}
+
+ABFLOAT_FOR_NORMAL = {
+    "int4": E2M1_INT4,
+    "flint4": E2M1_FLINT4,
+    "int8": E4M3_INT8,
+}
+
+
+def abfloat_spec_for(normal_dtype: str, ebits: int | None = None,
+                     mb: int | None = None) -> AbfloatSpec:
+    """Spec for a normal dtype; ebits/mb override for the Fig. 5 sweep."""
+    if ebits is None and mb is None:
+        return ABFLOAT_FOR_NORMAL[normal_dtype]
+    ebits = 2 if ebits is None else ebits
+    mb = 1 if mb is None else mb
+    return AbfloatSpec(ebits=ebits, mb=mb, bias=default_bias(normal_dtype, mb))
+
+
+# --------------------------------------------------------------------------
+# Normal-value encode / decode (nibble or byte codes)
+# --------------------------------------------------------------------------
+def int_normal_encode(u: jax.Array, bits: int) -> jax.Array:
+    """Scaled value -> two's-complement code, identifier excluded.
+
+    u is value/scale. Output uint8 code in [0, 2^bits) with the pattern
+    100..0b never produced (range clipped to ±(2^(bits-1)-1)).
+    """
+    nmax = (1 << (bits - 1)) - 1
+    q = jnp.clip(jnp.round(u), -nmax, nmax).astype(jnp.int32)
+    mask = (1 << bits) - 1
+    return (q & mask).astype(jnp.uint8)
+
+
+def int_normal_decode(code: jax.Array, bits: int) -> jax.Array:
+    """Code -> scaled value. The identifier decodes to 0 (victim)."""
+    c = code.astype(jnp.int32)
+    half = 1 << (bits - 1)
+    v = jnp.where(c >= half, c - (1 << bits), c)
+    return jnp.where(c == half, 0, v).astype(jnp.float32)
+
+
+def flint4_encode(u: jax.Array) -> jax.Array:
+    """Nearest flint4 value (ANT LUT); code = sign<<3 | idx, never 1000b."""
+    lut = jnp.asarray(FLINT4_LUT)
+    mags = jnp.abs(u)
+    # nearest index among the 8 magnitudes (ties -> smaller index)
+    d = jnp.abs(mags[..., None] - lut)
+    idx = jnp.argmin(d, axis=-1).astype(jnp.int32)
+    neg = (u < 0) & (idx > 0)  # -0 is the identifier; encode 0 as +0
+    return ((neg.astype(jnp.int32) << 3) | idx).astype(jnp.uint8)
+
+
+def flint4_decode(code: jax.Array) -> jax.Array:
+    lut = jnp.asarray(FLINT4_LUT)
+    c = code.astype(jnp.int32)
+    mag = lut[c & 0x7]
+    sign = jnp.where((c >> 3) & 1 == 1, -1.0, 1.0)
+    v = sign * mag
+    # 1000b (-0) is the identifier -> victim -> 0 (already ±0; keep exact +0)
+    return jnp.where(c == ID4, 0.0, v).astype(jnp.float32)
+
+
+def normal_encode(u: jax.Array, normal_dtype: str) -> jax.Array:
+    if normal_dtype == "int4":
+        return int_normal_encode(u, 4)
+    if normal_dtype == "flint4":
+        return flint4_encode(u)
+    if normal_dtype == "int8":
+        return int_normal_encode(u, 8)
+    raise ValueError(f"unknown normal dtype {normal_dtype!r}")
+
+
+def normal_decode(code: jax.Array, normal_dtype: str) -> jax.Array:
+    if normal_dtype == "int4":
+        return int_normal_decode(code, 4)
+    if normal_dtype == "flint4":
+        return flint4_decode(code)
+    if normal_dtype == "int8":
+        return int_normal_decode(code, 8)
+    raise ValueError(f"unknown normal dtype {normal_dtype!r}")
+
+
+# --------------------------------------------------------------------------
+# abfloat encode / decode (Algorithm 2 / Fig. 7)
+# --------------------------------------------------------------------------
+def abfloat_encode(u: jax.Array, spec: AbfloatSpec) -> jax.Array:
+    """Scaled value -> abfloat code (Algorithm 2, vectorised).
+
+    Magnitude is clamped to [min_mag, max_mag]; the disabled ±0 codes are
+    never produced, so the output cannot collide with the victim identifier.
+    """
+    sign = (u < 0).astype(jnp.int32)
+    mag = jnp.clip(jnp.abs(u), spec.min_mag, spec.max_mag).astype(jnp.float32)
+    # exp = floor(log2(|e|)) - mb   (Algorithm 2 line 2, mb generalised)
+    exp = jnp.floor(jnp.log2(mag)).astype(jnp.int32) - spec.mb
+    base = jnp.round(mag / jnp.exp2(exp.astype(jnp.float32))).astype(jnp.int32)
+    # overflow of the mantissa window: base == 2^(mb+1) -> bump exponent
+    ovf = base == (1 << (spec.mb + 1))
+    exp = jnp.where(ovf, exp + 1, exp)
+    base = jnp.where(ovf, 1 << spec.mb, base)
+    # encoded field = exp - bias (Algorithm 2 line 7), clamped to field width
+    efield = jnp.clip(exp - spec.bias, 0, (1 << spec.ebits) - 1)
+    mfield = base & ((1 << spec.mb) - 1)
+    code = (sign << (spec.ebits + spec.mb)) | (efield << spec.mb) | mfield
+    # guard the disabled code (e=0, m=0): round up to the minimum magnitude
+    zero_bits = (efield == 0) & (mfield == 0)
+    code = jnp.where(zero_bits, code | 1, code)
+    return code.astype(jnp.uint8)
+
+
+def abfloat_decode(code: jax.Array, spec: AbfloatSpec) -> jax.Array:
+    """abfloat code -> scaled value (Fig. 7). ±0 codes decode to 0."""
+    c = code.astype(jnp.int32)
+    sign_bit = (c >> (spec.ebits + spec.mb)) & 1
+    bits = c & ((1 << (spec.ebits + spec.mb)) - 1)
+    e = bits >> spec.mb
+    m = bits & ((1 << spec.mb) - 1)
+    integer = (1 << spec.mb) + m
+    mag = integer.astype(jnp.float32) * jnp.exp2(
+        (e + spec.bias).astype(jnp.float32))
+    mag = jnp.minimum(mag, float(1 << 15))
+    v = jnp.where(sign_bit == 1, -mag, mag)
+    return jnp.where(bits == 0, 0.0, v).astype(jnp.float32)
+
+
+def abfloat_nearest(u: jax.Array, spec: AbfloatSpec) -> jax.Array:
+    """Round-to-nearest-representable (reference mode, used in tests)."""
+    mags = jnp.asarray(spec.magnitudes())
+    a = jnp.clip(jnp.abs(u), spec.min_mag, spec.max_mag)
+    idx = jnp.argmin(jnp.abs(a[..., None] - mags), axis=-1)
+    val = mags[idx]
+    return jnp.where(u < 0, -val, val).astype(jnp.float32)

@@ -1,0 +1,210 @@
+"""Outlier-Victim Pair (OVP) encoding (paper §3, Algorithm 1).
+
+Semantics (per adjacent non-overlapping pair along `pair_axis`):
+  normal–normal   -> both quantized with the normal dtype (int4/flint4/int8)
+  outlier–normal  -> normal neighbour pruned to 0 (the *victim*), its slot
+                     holds the identifier (1000b / 10000000b); the outlier is
+                     stored as abfloat in its own slot
+  outlier–outlier -> the smaller-magnitude outlier is pruned (becomes the
+                     victim); <0.06% of pairs in practice (Table 2)
+
+Storage is dense + byte-aligned: 4-bit codes pack two-per-byte so one byte
+IS one pair — exactly the paper's memory-aligned claim. 8-bit codes stay one
+code per byte (a pair = two adjacent bytes).
+
+All functions are jit-safe; `normal_dtype` and specs are static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .datatypes import (ABFLOAT_FOR_NORMAL, ID4, ID8, NORMAL_MAX, AbfloatSpec,
+                        abfloat_decode, abfloat_encode, normal_decode,
+                        normal_encode)
+
+
+def _identifier(normal_dtype: str) -> int:
+    return ID8 if normal_dtype == "int8" else ID4
+
+
+def _move_pair_axis(x: jax.Array, axis: int) -> jax.Array:
+    return jnp.moveaxis(x, axis, -1)
+
+
+# --------------------------------------------------------------------------
+# Code-level encode / decode (values are already scaled: u = x / scale)
+# --------------------------------------------------------------------------
+def ovp_encode_codes(u: jax.Array, normal_dtype: str = "int4",
+                     spec: Optional[AbfloatSpec] = None,
+                     pair_axis: int = -1) -> jax.Array:
+    """Scaled tensor -> uint8 code tensor (same shape), Algorithm 1.
+
+    The size along `pair_axis` must be even.
+    """
+    spec = ABFLOAT_FOR_NORMAL[normal_dtype] if spec is None else spec
+    ident = _identifier(normal_dtype)
+    t = float(NORMAL_MAX[normal_dtype])
+
+    v = _move_pair_axis(u, pair_axis)
+    if v.shape[-1] % 2 != 0:
+        raise ValueError(f"pair axis length {v.shape[-1]} must be even")
+    x0, x1 = v[..., 0::2], v[..., 1::2]
+    a0, a1 = jnp.abs(x0), jnp.abs(x1)
+
+    o0, o1 = a0 > t, a1 > t
+    # outlier–outlier: keep the larger magnitude (§3.1); ties keep the left
+    first_out = o0 & (~o1 | (a0 >= a1))
+    second_out = o1 & ~first_out
+
+    n0 = normal_encode(x0, normal_dtype).astype(jnp.uint8)
+    n1 = normal_encode(x1, normal_dtype).astype(jnp.uint8)
+    f0 = abfloat_encode(x0, spec)
+    f1 = abfloat_encode(x1, spec)
+
+    c0 = jnp.where(first_out, f0, jnp.where(second_out, ident, n0))
+    c1 = jnp.where(second_out, f1, jnp.where(first_out, ident, n1))
+
+    codes = jnp.stack([c0, c1], axis=-1).reshape(v.shape).astype(jnp.uint8)
+    return jnp.moveaxis(codes, -1, pair_axis)
+
+
+def ovp_decode_codes(codes: jax.Array, normal_dtype: str = "int4",
+                     spec: Optional[AbfloatSpec] = None,
+                     pair_axis: int = -1) -> jax.Array:
+    """uint8 code tensor -> scaled values (float32). Victims decode to 0."""
+    spec = ABFLOAT_FOR_NORMAL[normal_dtype] if spec is None else spec
+    ident = _identifier(normal_dtype)
+
+    c = _move_pair_axis(codes, pair_axis)
+    n0, n1 = c[..., 0::2], c[..., 1::2]
+
+    # if my neighbour holds the identifier, I am the outlier (abfloat);
+    # if I hold it, I am the victim (0); otherwise I am a normal value.
+    v0 = jnp.where(n1 == ident, abfloat_decode(n0, spec),
+                   jnp.where(n0 == ident, 0.0,
+                             normal_decode(n0, normal_dtype)))
+    v1 = jnp.where(n0 == ident, abfloat_decode(n1, spec),
+                   jnp.where(n1 == ident, 0.0,
+                             normal_decode(n1, normal_dtype)))
+    out = jnp.stack([v0, v1], axis=-1).reshape(c.shape).astype(jnp.float32)
+    return jnp.moveaxis(out, -1, pair_axis)
+
+
+# --------------------------------------------------------------------------
+# Nibble packing: two 4-bit codes per byte (one byte == one OV pair)
+# --------------------------------------------------------------------------
+def pack4(codes: jax.Array, pair_axis: int = -1) -> jax.Array:
+    """(…, 2K, …) nibble codes -> (…, K, …) bytes; even index = high nibble."""
+    c = _move_pair_axis(codes, pair_axis).astype(jnp.uint8)
+    hi, lo = c[..., 0::2], c[..., 1::2]
+    packed = (hi << 4) | (lo & jnp.uint8(0xF))
+    return jnp.moveaxis(packed, -1, pair_axis)
+
+
+def unpack4(packed: jax.Array, pair_axis: int = -1) -> jax.Array:
+    """(…, K, …) bytes -> (…, 2K, …) nibble codes."""
+    p = _move_pair_axis(packed, pair_axis).astype(jnp.uint8)
+    hi = (p >> 4) & jnp.uint8(0xF)
+    lo = p & jnp.uint8(0xF)
+    c = jnp.stack([hi, lo], axis=-1)
+    c = c.reshape(p.shape[:-1] + (p.shape[-1] * 2,))
+    return jnp.moveaxis(c, -1, pair_axis)
+
+
+# --------------------------------------------------------------------------
+# QuantizedTensor: pytree carrying packed codes + scale + static metadata
+# --------------------------------------------------------------------------
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["data", "scale"],
+         meta_fields=["normal_dtype", "pair_axis", "orig_dim"])
+@dataclasses.dataclass
+class QuantizedTensor:
+    """OVP-quantized tensor.
+
+    data:   uint8. 4-bit dtypes: packed nibbles, `pair_axis` length = dim/2.
+            int8: one code per byte, full length.
+    scale:  float32, broadcastable against the dequantized tensor
+            (per-tensor scalar or per-channel with pair_axis collapsed to 1).
+    normal_dtype: "int4" | "flint4" | "int8" (static)
+    pair_axis: axis along which values pair/pack (static)
+    orig_dim: unpacked length of pair_axis (static)
+    """
+    data: jax.Array
+    scale: jax.Array
+    normal_dtype: str
+    pair_axis: int   # stored NEGATIVE so vmap/scan batching keeps it valid
+    orig_dim: int
+
+    @property
+    def is_packed(self) -> bool:
+        return self.normal_dtype != "int8"
+
+    @property
+    def shape(self):
+        s = list(self.data.shape)
+        ax = self.pair_axis % len(s)
+        s[ax] = self.orig_dim
+        return tuple(s)
+
+    def nbytes(self) -> int:
+        return int(np.prod(self.data.shape)) + int(np.prod(self.scale.shape)) * 4
+
+
+def ovp_quantize(x: jax.Array, scale: jax.Array, normal_dtype: str = "int4",
+                 spec: Optional[AbfloatSpec] = None,
+                 pair_axis: int = -1) -> QuantizedTensor:
+    """Quantize a real tensor with OVP at a given scale."""
+    scale = jnp.asarray(scale, dtype=jnp.float32)
+    u = x.astype(jnp.float32) / scale
+    codes = ovp_encode_codes(u, normal_dtype, spec, pair_axis)
+    # store pair_axis negative: stays correct if leading batch/stack dims
+    # are later added by vmap/scan (stacked per-layer weights)
+    neg_ax = pair_axis if pair_axis < 0 else pair_axis - x.ndim
+    data = pack4(codes, pair_axis=neg_ax) if normal_dtype != "int8" else codes
+    return QuantizedTensor(data=data, scale=scale, normal_dtype=normal_dtype,
+                           pair_axis=neg_ax, orig_dim=x.shape[neg_ax])
+
+
+def ovp_dequantize(qt: QuantizedTensor,
+                   spec: Optional[AbfloatSpec] = None,
+                   dtype=jnp.float32) -> jax.Array:
+    """Dequantize back to real values: decode(codes) * scale."""
+    codes = (unpack4(qt.data, qt.pair_axis) if qt.is_packed else qt.data)
+    vals = ovp_decode_codes(codes, qt.normal_dtype, spec, qt.pair_axis)
+    return (vals * qt.scale).astype(dtype)
+
+
+def ovp_fake_quant(x: jax.Array, scale: jax.Array, normal_dtype: str = "int4",
+                   spec: Optional[AbfloatSpec] = None,
+                   pair_axis: int = -1) -> jax.Array:
+    """quantize→dequantize without packing (used by MSE search / QAT STE)."""
+    scale = jnp.asarray(scale, dtype=jnp.float32)
+    u = x.astype(jnp.float32) / scale
+    codes = ovp_encode_codes(u, normal_dtype, spec, pair_axis)
+    vals = ovp_decode_codes(codes, normal_dtype, spec, pair_axis)
+    return vals * scale
+
+
+# --------------------------------------------------------------------------
+# Pair statistics (paper §2.3, Table 2)
+# --------------------------------------------------------------------------
+def pair_statistics(x: jax.Array, k_sigma: float = 3.0,
+                    pair_axis: int = -1) -> dict:
+    """Fractions of normal-normal / outlier-normal / outlier-outlier pairs."""
+    v = _move_pair_axis(x, pair_axis)
+    sigma = jnp.std(v)
+    mu = jnp.mean(v)
+    out = jnp.abs(v - mu) > k_sigma * sigma
+    o0, o1 = out[..., 0::2], out[..., 1::2]
+    nn = jnp.mean((~o0) & (~o1))
+    oo = jnp.mean(o0 & o1)
+    on = 1.0 - nn - oo
+    return {"normal_normal": float(nn), "outlier_normal": float(on),
+            "outlier_outlier": float(oo),
+            "outlier_ratio": float(jnp.mean(out)), "sigma": float(sigma)}

@@ -1,0 +1,81 @@
+"""Quantization policy: which tensors get quantized, how, and on what backend.
+
+This is the framework-level switch that makes OliVe a first-class feature:
+every linear in the model zoo routes through `repro.core.qlinear` and
+consults a `QuantPolicy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    # "none" -> full precision; "olive" -> OVP (the paper);
+    # "int" -> uniform int baseline; "ant" -> ANT adaptive-type baseline.
+    method: str = "none"
+
+    # weight quantization
+    wbits: int = 4                      # 4 or 8
+    w_normal_dtype: str = "int4"        # int4 | flint4 | int8
+    w_granularity: str = "channel"      # tensor | channel
+
+    # activation quantization (0 = keep activations in compute dtype)
+    abits: int = 0
+    a_normal_dtype: str = "int4"
+    act_scale_mode: str = "dynamic"     # dynamic (3σ rule) | static (calibrated)
+
+    # layer selection (paper keeps sensitive layers high precision)
+    quantize_attn: bool = True
+    quantize_ffn: bool = True
+    quantize_embed: bool = False
+    quantize_router: bool = False       # MoE router stays fp32
+
+    # beyond-paper: OVP-quantized KV cache (0 = off)
+    kv_bits: int = 0
+
+    # QAT: raw weights get STE fake-quant in the forward pass; off means
+    # raw weights under an enabled policy run full precision (PTQ serving
+    # where quantize_params already converted the eligible ones)
+    qat: bool = False
+
+    # execution backend for quantized matmuls
+    backend: str = "xla"                # xla | pallas | pallas_interpret
+
+    # compute dtype for the dequantized matmul on the MXU
+    compute_dtype: str = "bfloat16"
+
+    @property
+    def enabled(self) -> bool:
+        return self.method != "none"
+
+    def normal_dtype_for_bits(self, bits: int) -> str:
+        return "int8" if bits == 8 else self.w_normal_dtype
+
+
+# Convenience presets
+FP = QuantPolicy(method="none")
+OLIVE_W4A4 = QuantPolicy(method="olive", wbits=4, abits=4)
+OLIVE_W4 = QuantPolicy(method="olive", wbits=4, abits=0)
+OLIVE_W8A8 = QuantPolicy(method="olive", wbits=8, abits=8,
+                         w_normal_dtype="int8", a_normal_dtype="int8")
+INT8 = QuantPolicy(method="int", wbits=8, abits=8, w_normal_dtype="int8")
+INT4 = QuantPolicy(method="int", wbits=4, abits=4)
+ANT4 = QuantPolicy(method="ant", wbits=4, abits=4)
+OLIVE_SERVE = dataclasses.replace(OLIVE_W4A4, kv_bits=4)
+
+PRESETS = {
+    "fp": FP, "olive_w4a4": OLIVE_W4A4, "olive_w4": OLIVE_W4,
+    "olive_w8a8": OLIVE_W8A8, "int8": INT8, "int4": INT4, "ant4": ANT4,
+    "olive_serve": OLIVE_SERVE,
+}
+
+
+def get_policy(name: Optional[str]) -> QuantPolicy:
+    if name is None:
+        return FP
+    if name not in PRESETS:
+        raise KeyError(f"unknown quant policy {name!r}; "
+                       f"options: {sorted(PRESETS)}")
+    return PRESETS[name]

@@ -1,0 +1,185 @@
+"""Quantized linear ops — the integration point between OliVe and the models.
+
+Weights arrive either as raw arrays (training / fp serving) or as
+`QuantizedTensor` (post-PTQ serving). `linear()` dispatches:
+
+  raw + policy off        -> plain matmul
+  raw + policy on (QAT)   -> STE fake-quant matmul
+  QuantizedTensor         -> decode-and-matmul, on the XLA path (dequantize to
+                             compute dtype; XLA fuses decode into the GEMM
+                             prologue) or the Pallas path (fused VMEM decode
+                             kernel, repro.kernels)
+
+Pairing/packing is always along the reduction dim so per-channel (output)
+scales never split a pair.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import baselines
+from .datatypes import NORMAL_MAX
+from .ovp import QuantizedTensor, ovp_dequantize, ovp_quantize
+from .policy import QuantPolicy
+from .quantizer import (QuantSpec, fake_quant_ste, quantize,
+                        sigma_init_scale)
+
+Weight = Union[jax.Array, QuantizedTensor]
+
+
+# --------------------------------------------------------------------------
+# Offline weight quantization (PTQ)
+# --------------------------------------------------------------------------
+def quantize_weight(w: jax.Array, policy: QuantPolicy) -> Weight:
+    """PTQ one weight matrix (..., K, N): pair along K, scale per N.
+
+    Stacked (scan-over-layers / per-expert) weights with leading dims are
+    vmapped so scales get a matching leading dim and stay scan-sliceable.
+    """
+    if not policy.enabled:
+        return w
+    nd = policy.normal_dtype_for_bits(policy.wbits)
+    if policy.method == "olive":
+        if w.ndim > 2:
+            return jax.vmap(lambda ww: quantize_weight(ww, policy))(w)
+        spec = QuantSpec(normal_dtype=nd,
+                         granularity=policy.w_granularity,
+                         channel_axis=-1, pair_axis=-2)
+        return quantize(w, spec)
+    # baselines keep fake-quant semantics (they model accuracy, and their
+    # byte accounting is handled by the benchmark harness)
+    if policy.method == "int":
+        return baselines.uniform_int_fake_quant(w, policy.wbits)
+    if policy.method == "ant":
+        return baselines.ant_fake_quant(w)
+    raise ValueError(policy.method)
+
+
+# --------------------------------------------------------------------------
+# Activation quantization (dynamic 3σ or static calibrated scale)
+# --------------------------------------------------------------------------
+def quantize_activation(x: jax.Array, policy: QuantPolicy,
+                        static_scale: Optional[jax.Array] = None):
+    """Returns (QuantizedTensor | fake-quant array) for the A side."""
+    nd = policy.a_normal_dtype if policy.abits == 4 else "int8"
+    if policy.act_scale_mode == "static" and static_scale is not None:
+        s = static_scale
+    else:
+        s = sigma_init_scale(x, nd)  # dynamic 3σ rule, cheap (one std)
+    return ovp_quantize(x, s, nd, pair_axis=-1)
+
+
+# --------------------------------------------------------------------------
+# The quantized matmul
+# --------------------------------------------------------------------------
+def _dequant_w(w: QuantizedTensor, dtype) -> jax.Array:
+    return ovp_dequantize(w, dtype=dtype)
+
+
+def qmatmul(x: jax.Array, w: Weight, policy: QuantPolicy,
+            act_scale: Optional[jax.Array] = None,
+            precision=None) -> jax.Array:
+    """x: (..., K) @ w: (K, N) with the policy's quantization applied."""
+    cdt = jnp.dtype(policy.compute_dtype)
+    if isinstance(w, QuantizedTensor):
+        if policy.backend.startswith("pallas"):
+            from repro.kernels import ops as kops
+            interpret = policy.backend == "pallas_interpret"
+            xq = (quantize_activation(x, policy, act_scale)
+                  if policy.abits else None)
+            return kops.ovp_matmul(x if xq is None else xq, w,
+                                   out_dtype=cdt, interpret=interpret)
+        wd = _dequant_w(w, cdt)
+        if policy.abits:
+            xq = quantize_activation(x, policy, act_scale)
+            xd = ovp_dequantize(xq, dtype=cdt)
+            return jnp.matmul(xd, wd, precision=precision).astype(cdt)
+        return jnp.matmul(x.astype(cdt), wd, precision=precision)
+    # raw weights
+    if policy.enabled and policy.qat and policy.method == "olive":
+        # QAT path: STE fake-quant on W (and A if configured)
+        nd = policy.normal_dtype_for_bits(policy.wbits)
+        ws = sigma_init_scale(w, nd)
+        wq = fake_quant_ste(w, ws, nd, pair_axis=-2)
+        xx = x
+        if policy.abits:
+            nda = policy.a_normal_dtype
+            xs = sigma_init_scale(x, nda)
+            xx = fake_quant_ste(x, xs, nda, pair_axis=-1)
+        return jnp.matmul(xx.astype(cdt), wq.astype(cdt),
+                          precision=precision)
+    if (policy.enabled and not policy.qat and policy.abits
+            and policy.method in ("int", "ant")):
+        # baseline PTQ serving: weights were fake-quantized offline; the
+        # activation side runs dynamic max-scaled int fake-quant (the
+        # standard int8/int4 runtime path the paper compares against)
+        xx = baselines.uniform_int_dynamic_act(x.astype(jnp.float32),
+                                               policy.abits)
+        return jnp.matmul(xx.astype(cdt), w.astype(cdt),
+                          precision=precision)
+    return jnp.matmul(x.astype(cdt), w.astype(cdt), precision=precision)
+
+
+def linear(x: jax.Array, w: Weight, b: Optional[jax.Array],
+           policy: QuantPolicy, act_scale: Optional[jax.Array] = None,
+           precision=None) -> jax.Array:
+    y = qmatmul(x, w, policy, act_scale, precision)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# Whole-pytree PTQ: quantize every eligible weight in a param tree
+# --------------------------------------------------------------------------
+NEVER_QUANT = {"w_igate", "w_fgate", "w_gate", "conv_kernel"}
+
+
+def is_linear_weight(path: str, w) -> bool:
+    if not hasattr(w, "ndim") or w.ndim < 2:
+        return False
+    leaf = path.split("/")[-1]
+    if leaf in NEVER_QUANT:
+        return False  # tiny gate/conv tensors consumed outside qlinear
+    return leaf.startswith("w") or leaf in ("kernel", "wi", "wo", "wq", "wk",
+                                            "wv", "wu", "wg", "wd")
+
+
+def eligible(path: str, policy: QuantPolicy) -> bool:
+    p = path.lower()
+    if "embed" in p or "lm_head" in p:
+        return policy.quantize_embed
+    if "router" in p or "gate_router" in p:
+        return policy.quantize_router
+    if any(k in p for k in ("attn", "attention", "wq", "wk", "wv", "wo")):
+        return policy.quantize_attn
+    if any(k in p for k in ("mlp", "ffn", "expert", "wi", "wu", "wg", "wd")):
+        return policy.quantize_ffn
+    return policy.quantize_ffn  # default bucket
+
+
+def quantize_params(params, policy: QuantPolicy, min_size: int = 4096):
+    """Map PTQ over a parameter pytree. Norms/bias/small tensors stay fp.
+
+    Pair axis = -2 (reduction dim), per-output-channel scales. Dims must be
+    even along the pair axis — true for every assigned architecture.
+    """
+    if not policy.enabled:
+        return params
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for kp, w in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        if (hasattr(w, "ndim") and w.ndim >= 2 and w.size >= min_size
+                and w.shape[-2] % 2 == 0 and eligible(path, policy)
+                and is_linear_weight(path, w)):
+            out.append(quantize_weight(jnp.asarray(w, jnp.float32), policy))
+        else:
+            out.append(w)
+    return jax.tree_util.tree_unflatten(treedef, out)

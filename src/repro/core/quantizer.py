@@ -1,0 +1,130 @@
+"""OliVe PTQ quantization framework (paper §3.4).
+
+Scale-factor selection: MSE minimisation seeded at the 3σ point. The initial
+scale maps 3σ to the normal-value max; candidates sweep a geometric range
+around it and the OVP round-trip MSE picks the winner. Per-tensor (paper's
+setting) and per-channel granularities are supported.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .datatypes import ABFLOAT_FOR_NORMAL, NORMAL_MAX, AbfloatSpec
+from .ovp import (QuantizedTensor, ovp_dequantize, ovp_fake_quant,
+                  ovp_quantize)
+
+
+def sigma_init_scale(x: jax.Array, normal_dtype: str, k_sigma: float = 3.0,
+                     axes=None) -> jax.Array:
+    """3σ rule initial scale (§3.4): k·σ maps to the normal max."""
+    nmax = float(NORMAL_MAX[normal_dtype])
+    sigma = jnp.std(x, axis=axes, keepdims=axes is not None)
+    return jnp.maximum(k_sigma * sigma / nmax, 1e-8)
+
+
+@partial(jax.jit, static_argnames=("normal_dtype", "spec", "n_grid",
+                                   "lo", "hi", "pair_axis"))
+def ovp_search_scale(x: jax.Array, normal_dtype: str = "int4",
+                     spec: Optional[AbfloatSpec] = None, n_grid: int = 24,
+                     lo: float = 0.35, hi: float = 2.2,
+                     pair_axis: int = -1) -> jax.Array:
+    """Per-tensor MSE grid search around the 3σ init. Returns scalar scale."""
+    s0 = sigma_init_scale(x, normal_dtype)
+    # the grid always contains s0 itself, so the search can never lose to
+    # the 3σ init (hypothesis found the counterexample when it didn't)
+    grid = jnp.concatenate([s0 * jnp.geomspace(lo, hi, n_grid - 1),
+                            s0[None]])
+
+    def mse_at(s):
+        xh = ovp_fake_quant(x, s, normal_dtype, spec, pair_axis)
+        return jnp.mean((xh - x.astype(jnp.float32)) ** 2)
+
+    mses = jax.lax.map(mse_at, grid)  # sequential: keeps peak memory flat
+    return grid[jnp.argmin(mses)]
+
+
+def ovp_search_scale_per_channel(x: jax.Array, channel_axis: int,
+                                 normal_dtype: str = "int4",
+                                 spec: Optional[AbfloatSpec] = None,
+                                 n_grid: int = 16, lo: float = 0.35,
+                                 hi: float = 2.2) -> jax.Array:
+    """Per-channel MSE search. Pairing runs along the *other* (last) axis.
+
+    Returns scale shaped for broadcasting: (..., C, 1) against x moved so
+    channel_axis is -2 — callers should use `quantize(...)` below which
+    handles the bookkeeping.
+    """
+    xm = jnp.moveaxis(x, channel_axis, 0)          # (C, rest...)
+    flat = xm.reshape(xm.shape[0], -1)             # (C, K)
+
+    def one(row):
+        return ovp_search_scale(row, normal_dtype, spec, n_grid, lo, hi)
+
+    return jax.lax.map(one, flat)                  # (C,)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How to quantize one tensor."""
+    normal_dtype: str = "int4"          # int4 | flint4 | int8
+    granularity: str = "tensor"         # tensor | channel
+    channel_axis: int = -1
+    pair_axis: int = -1                 # reduction axis for matmul operands
+    n_grid: int = 24
+    abfloat: Optional[AbfloatSpec] = None
+
+    @property
+    def bits(self) -> int:
+        return 8 if self.normal_dtype == "int8" else 4
+
+
+def quantize(x: jax.Array, spec: QuantSpec = QuantSpec()) -> QuantizedTensor:
+    """Full OliVe PTQ for one tensor: scale search + OVP encode + pack."""
+    if spec.granularity == "tensor":
+        s = ovp_search_scale(x, spec.normal_dtype, spec.abfloat, spec.n_grid)
+        return ovp_quantize(x, s, spec.normal_dtype, spec.abfloat,
+                            spec.pair_axis)
+    # per-channel: scales along channel_axis, pairing along pair_axis
+    ca = spec.channel_axis % x.ndim
+    pa = spec.pair_axis % x.ndim
+    if ca == pa:
+        raise ValueError("channel_axis must differ from pair_axis")
+    s = ovp_search_scale_per_channel(x, ca, spec.normal_dtype, spec.abfloat,
+                                     max(8, spec.n_grid // 2))
+    shape = [1] * x.ndim
+    shape[ca] = x.shape[ca]
+    s = s.reshape(shape)
+    return ovp_quantize(x, s, spec.normal_dtype, spec.abfloat, spec.pair_axis)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    return ovp_dequantize(qt, dtype=dtype)
+
+
+def fake_quant_ste(x: jax.Array, scale: jax.Array,
+                   normal_dtype: str = "int4",
+                   spec: Optional[AbfloatSpec] = None,
+                   pair_axis: int = -1) -> jax.Array:
+    """QAT fake-quant with straight-through estimator (§3.4, STE [5])."""
+    xh = ovp_fake_quant(x, scale, normal_dtype, spec, pair_axis)
+    return x + jax.lax.stop_gradient(xh - x)
+
+
+def quantization_error(x: jax.Array, spec: QuantSpec = QuantSpec()) -> dict:
+    """MSE / SQNR diagnostics for one tensor under full OliVe PTQ."""
+    qt = quantize(x, spec)
+    xh = dequantize(qt)
+    err = xh - x.astype(jnp.float32)
+    mse = jnp.mean(err ** 2)
+    power = jnp.mean(x.astype(jnp.float32) ** 2)
+    sqnr = 10.0 * jnp.log10(jnp.maximum(power, 1e-30) /
+                            jnp.maximum(mse, 1e-30))
+    return {"mse": float(mse), "sqnr_db": float(sqnr),
+            "scale": jnp.asarray(qt.scale),
+            "bytes": qt.nbytes(),
+            "fp32_bytes": int(x.size * 4)}

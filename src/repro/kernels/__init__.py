@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for OliVe hot spots.
+
+ovp_matmul — fused OVP-decode + MXU matmul (W4A16 and W4A4 variants)
+ovp_encode — pairwise OVP encoder (online activation quantization)
+
+`ops` holds the jit'd wrappers; `ref` the pure-jnp oracles; kernels are
+validated on CPU with interpret=True across shape/dtype sweeps.
+"""
+from . import ops, ref
+from .ovp_matmul import ovp_matmul_w4a16, ovp_matmul_w4a4
+from .ovp_encode import ovp_encode_pallas

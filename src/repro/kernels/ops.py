@@ -1,0 +1,124 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles: shape padding to block multiples, scale application (kernels work
+in scaled units), QuantizedTensor plumbing, and the interpret switch (CPU
+validation vs TPU execution).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ovp import QuantizedTensor
+from . import ovp_matmul as _mm
+from . import ovp_encode as _enc
+
+
+def _pad_to(x: jax.Array, mults, value=0):
+    pads = []
+    for d, m in zip(x.shape, mults):
+        rem = (-d) % m
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def _block_sizes(m, n, k, bm, bn, bk):
+    """Clamp block sizes to the (padded) problem size."""
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(128, n)) if n >= 128 else n
+    bk = min(bk, k)
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("normal_dtype", "out_dtype",
+                                             "interpret", "bm", "bn", "bk"))
+def matmul_w4a16(a: jax.Array, w_data: jax.Array, w_scale: jax.Array,
+                 normal_dtype: str = "int4", out_dtype=jnp.float32,
+                 interpret: bool = False, bm: int = 128, bn: int = 128,
+                 bk: int = 256) -> jax.Array:
+    """a (M, K) fp @ packed w (K/2, N): decode fused into the kernel."""
+    m, k = a.shape
+    k2, n = w_data.shape
+    # pad to block multiples; packed pad byte 0x00 decodes to (0, 0)
+    ap = _pad_to(a, (bm, bk))
+    wp = _pad_to(w_data, (bk // 2, bn))
+    out = _mm.ovp_matmul_w4a16(ap, wp, normal_dtype,
+                               bm=bm, bn=bn, bk=bk, interpret=interpret)
+    out = out[:m, :n]
+    return (out * w_scale.reshape(1, -1) if w_scale.ndim else
+            out * w_scale).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("normal_dtype", "out_dtype",
+                                             "interpret", "bm", "bn", "bk"))
+def matmul_w4a4(a_data: jax.Array, a_scale: jax.Array, w_data: jax.Array,
+                w_scale: jax.Array, normal_dtype: str = "int4",
+                out_dtype=jnp.float32, interpret: bool = False,
+                bm: int = 128, bn: int = 128, bk: int = 256) -> jax.Array:
+    """packed a (M, K/2) @ packed w (K/2, N), both decoded in-kernel."""
+    m, k2a = a_data.shape
+    k2, n = w_data.shape
+    ap = _pad_to(a_data, (bm, bk // 2))
+    wp = _pad_to(w_data, (bk // 2, bn))
+    out = _mm.ovp_matmul_w4a4(ap, wp, normal_dtype,
+                              bm=bm, bn=bn, bk=bk, interpret=interpret)
+    out = out[:m, :n]
+    sa = a_scale if a_scale.ndim == 0 else a_scale.reshape(m, 1)
+    sw = w_scale if w_scale.ndim == 0 else w_scale.reshape(1, -1)
+    return (out * sa * sw).astype(out_dtype)
+
+
+def ovp_matmul(a: Union[jax.Array, QuantizedTensor], w: QuantizedTensor,
+               out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
+    """Public entry: dispatch W4A16 vs W4A4 from the operand types.
+
+    Leading batch dims of `a` are flattened into M. Weight pairs must run
+    along K (pair_axis == 0 of the 2-D weight).
+    """
+    if w.normal_dtype == "int8":
+        raise NotImplementedError("packed kernels are 4-bit; int8 OVP uses "
+                                  "the XLA path")
+    if isinstance(a, QuantizedTensor):
+        ad, ascale = a.data, jnp.asarray(a.scale)
+        lead = ad.shape[:-1]
+        m = 1
+        for d in lead:
+            m *= d
+        out = matmul_w4a4(ad.reshape(m, ad.shape[-1]),
+                          jnp.broadcast_to(ascale, ()).astype(jnp.float32)
+                          if ascale.ndim == 0 else ascale.reshape(-1),
+                          w.data, jnp.asarray(w.scale).reshape(-1)
+                          if jnp.asarray(w.scale).ndim else
+                          jnp.asarray(w.scale),
+                          w.normal_dtype, out_dtype, interpret)
+        return out.reshape(*lead, out.shape[-1])
+    lead = a.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    a2 = a.reshape(m, a.shape[-1])
+    ws = jnp.asarray(w.scale)
+    out = matmul_w4a16(a2, w.data,
+                       ws.reshape(-1) if ws.ndim else ws,
+                       w.normal_dtype, out_dtype, interpret)
+    return out.reshape(*lead, out.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("normal_dtype", "interpret",
+                                             "bm", "bk"))
+def ovp_encode(x: jax.Array, scale: jax.Array, normal_dtype: str = "int4",
+               interpret: bool = False, bm: int = 256,
+               bk: int = 512) -> jax.Array:
+    """x (M, K) real values -> packed OVP bytes (M, K/2) at `scale`."""
+    m, k = x.shape
+    u = x.astype(jnp.float32) / scale
+    bm_, bk_ = min(bm, m), min(bk, k)
+    up = _pad_to(u, (bm_, bk_))
+    out = _enc.ovp_encode_pallas(up, normal_dtype, bm=bm_, bk=bk_,
+                                 interpret=interpret)
+    return out[:m, :k // 2]

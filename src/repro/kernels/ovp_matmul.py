@@ -1,0 +1,184 @@
+"""Fused OVP-decode + matmul Pallas kernels (the paper's decoder, §4.2–4.4,
+re-sited for TPU).
+
+TPU adaptation of the OliVe decoder: on the GPU/systolic designs the OVP
+decoder sits per dot-product lane / at the array edge. The MXU is fixed
+function, so the decoder becomes the *VMEM prologue* of the matmul kernel:
+packed uint8 tiles stream HBM->VMEM (4x less traffic than bf16), nibbles are
+decoded branch-free on the VPU, and the MXU consumes the decoded tiles.
+
+Key structural trick: pairs are packed along K, so a packed tile holds the
+even-K values in the high nibbles and odd-K values in the low nibbles.
+Instead of interleaving (a relayout), we split the reduction:
+
+    out = a_even @ w_even + a_odd @ w_odd
+
+two half-K MXU matmuls per tile, no transposes, no gathers — this is the
+memory-alignment claim of the paper realised on TPU.
+
+Blocks default to (bm, bk, bn) = (128, 256, 128): MXU-aligned, and the
+working set (a: 128x256 f32 + w packed: 128x128 u8 + out: 128x128 f32)
+is ~200 KiB, far inside VMEM; bk can grow to 2048 before VMEM pressure.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.datatypes import ABFLOAT_FOR_NORMAL, AbfloatSpec
+
+
+# --------------------------------------------------------------------------
+# Branch-free nibble decode (VPU-friendly: selects + integer shifts only)
+# --------------------------------------------------------------------------
+def _decode_normal_int4(c: jax.Array) -> jax.Array:
+    ci = c.astype(jnp.int32)
+    return jnp.where(ci >= 8, ci - 16, ci).astype(jnp.float32)
+
+
+def _decode_normal_flint4(c: jax.Array) -> jax.Array:
+    ci = c.astype(jnp.int32)
+    idx = ci & 0x7
+    mag = jnp.where(idx <= 4, idx,
+                    jnp.where(idx == 5, 6, jnp.where(idx == 6, 8, 16)))
+    sign = jnp.where((ci >> 3) == 1, -1, 1)
+    return (sign * mag).astype(jnp.float32)
+
+
+def _decode_abfloat4(c: jax.Array, spec: AbfloatSpec) -> jax.Array:
+    """Fig. 7 decoder: exponent = bias + e-bits; integer = (1 m)b."""
+    ci = c.astype(jnp.int32)
+    bits = ci & 0x7
+    e = bits >> spec.mb
+    m = bits & ((1 << spec.mb) - 1)
+    mag = ((1 << spec.mb) + m) << (e + spec.bias)   # pure shifts, §3.3
+    v = jnp.where((ci >> 3) == 1, -mag, mag)
+    return jnp.where(bits == 0, 0, v).astype(jnp.float32)
+
+
+def decode_nibble_planes(packed: jax.Array, normal_dtype: str,
+                         spec: AbfloatSpec):
+    """packed (R, C) uint8 -> (even, odd) decoded fp32 planes, each (R, C).
+
+    Row r of `even` is K-position 2r; `odd` is 2r+1 when pairs run along the
+    first axis (weights). For activations packed along the last axis the
+    same planes correspond to columns 2c / 2c+1.
+    """
+    hi = (packed >> 4) & jnp.uint8(0xF)
+    lo = packed & jnp.uint8(0xF)
+    if normal_dtype == "int4":
+        dn = _decode_normal_int4
+    elif normal_dtype == "flint4":
+        dn = _decode_normal_flint4
+    else:
+        raise ValueError("packed kernels support 4-bit dtypes only")
+
+    def slot(c, neighbour):
+        is_victim = c == jnp.uint8(0x8)
+        neighbour_victim = neighbour == jnp.uint8(0x8)
+        return jnp.where(neighbour_victim, _decode_abfloat4(c, spec),
+                         jnp.where(is_victim, 0.0, dn(c)))
+
+    return slot(hi, lo), slot(lo, hi)
+
+
+# --------------------------------------------------------------------------
+# Kernel bodies
+# --------------------------------------------------------------------------
+def _mm_w4a16_kernel(a_ref, wp_ref, o_ref, *, normal_dtype, spec, n_k):
+    """a (bm, bk) fp; wp (bk/2, bn) packed; o (bm, bn) fp32 accumulator."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w_even, w_odd = decode_nibble_planes(wp_ref[...], normal_dtype, spec)
+    a = a_ref[...].astype(jnp.float32)
+    a_even = a[:, 0::2]
+    a_odd = a[:, 1::2]
+    o_ref[...] += (
+        jnp.dot(a_even, w_even, preferred_element_type=jnp.float32)
+        + jnp.dot(a_odd, w_odd, preferred_element_type=jnp.float32))
+
+
+def _mm_w4a4_kernel(ap_ref, wp_ref, o_ref, *, normal_dtype, spec, n_k):
+    """ap (bm, bk/2) packed; wp (bk/2, bn) packed; o (bm, bn) fp32."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # activation planes: column c of each plane is K-position 2c / 2c+1,
+    # matching weight rows exactly — the reduction splits cleanly.
+    a_even, a_odd = decode_nibble_planes(ap_ref[...], normal_dtype, spec)
+    w_even, w_odd = decode_nibble_planes(wp_ref[...], normal_dtype, spec)
+    o_ref[...] += (
+        jnp.dot(a_even, w_even, preferred_element_type=jnp.float32)
+        + jnp.dot(a_odd, w_odd, preferred_element_type=jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# pallas_call builders
+# --------------------------------------------------------------------------
+def _grid(m, n, k2, bm, bn, bk2):
+    return (m // bm, n // bn, k2 // bk2)
+
+
+def ovp_matmul_w4a16(a: jax.Array, w_packed: jax.Array,
+                     normal_dtype: str = "int4",
+                     spec: AbfloatSpec | None = None,
+                     bm: int = 128, bn: int = 128, bk: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """a: (M, K) fp; w_packed: (K/2, N) uint8 -> (M, N) fp32 (w-units)."""
+    spec = ABFLOAT_FOR_NORMAL[normal_dtype] if spec is None else spec
+    m, k = a.shape
+    k2, n = w_packed.shape
+    assert k == 2 * k2, (a.shape, w_packed.shape)
+    bm, bn = min(bm, m), min(bn, n)
+    bk = min(bk, k)
+    bk2 = bk // 2
+    grid = _grid(m, n, k2, bm, bn, bk2)
+    kernel = functools.partial(_mm_w4a16_kernel, normal_dtype=normal_dtype,
+                               spec=spec, n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk2, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, w_packed)
+
+
+def ovp_matmul_w4a4(a_packed: jax.Array, w_packed: jax.Array,
+                    normal_dtype: str = "int4",
+                    spec: AbfloatSpec | None = None,
+                    bm: int = 128, bn: int = 128, bk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """a_packed: (M, K/2) uint8; w_packed: (K/2, N) uint8 -> (M, N) fp32."""
+    spec = ABFLOAT_FOR_NORMAL[normal_dtype] if spec is None else spec
+    m, ak2 = a_packed.shape
+    k2, n = w_packed.shape
+    assert ak2 == k2, (a_packed.shape, w_packed.shape)
+    bm, bn = min(bm, m), min(bn, n)
+    bk2 = min(bk // 2, k2)
+    grid = _grid(m, n, k2, bm, bn, bk2)
+    kernel = functools.partial(_mm_w4a4_kernel, normal_dtype=normal_dtype,
+                               spec=spec, n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk2), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk2, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a_packed, w_packed)

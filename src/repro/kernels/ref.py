@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The kernels compute in *scaled units* (codes decoded, scales applied by the
+wrapper); these oracles mirror that contract exactly so allclose tests are
+meaningful bit-for-bit (fp32 accumulate on both sides).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.datatypes import ABFLOAT_FOR_NORMAL
+from repro.core.ovp import (QuantizedTensor, ovp_decode_codes,
+                            ovp_encode_codes, pack4, unpack4)
+
+
+def decode_packed(packed: jax.Array, normal_dtype: str,
+                  pair_axis: int) -> jax.Array:
+    """uint8 packed codes -> decoded values in scaled units (float32)."""
+    codes = unpack4(packed, pair_axis) if normal_dtype != "int8" else packed
+    return ovp_decode_codes(codes, normal_dtype, pair_axis=pair_axis)
+
+
+def ovp_matmul_w4a16_ref(a: jax.Array, w_packed: jax.Array,
+                         normal_dtype: str = "int4") -> jax.Array:
+    """a: (M, K) float; w_packed: (K/2, N) uint8 (paired along K).
+
+    Returns (M, N) float32 in w-scaled units (caller applies w scales).
+    """
+    wd = decode_packed(w_packed, normal_dtype, pair_axis=0)
+    return jnp.matmul(a.astype(jnp.float32), wd,
+                      preferred_element_type=jnp.float32)
+
+
+def ovp_matmul_w4a4_ref(a_packed: jax.Array, w_packed: jax.Array,
+                        normal_dtype: str = "int4") -> jax.Array:
+    """a_packed: (M, K/2) uint8 (paired along K); w_packed: (K/2, N) uint8.
+
+    Returns (M, N) float32 in (a·w)-scaled units.
+    """
+    ad = decode_packed(a_packed, normal_dtype, pair_axis=1)
+    wd = decode_packed(w_packed, normal_dtype, pair_axis=0)
+    return jnp.matmul(ad, wd, preferred_element_type=jnp.float32)
+
+
+def ovp_encode_ref(u: jax.Array, normal_dtype: str = "int4") -> jax.Array:
+    """u: (M, K) scaled values -> (M, K/2) packed uint8 codes."""
+    codes = ovp_encode_codes(u, normal_dtype, pair_axis=-1)
+    return pack4(codes, pair_axis=-1)
+
+
+def matmul_ref(a: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(a.astype(jnp.float32), w.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first
+# initialisation. DRYRUN_XLA_FLAGS lets tests use fewer fake devices.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)
+      .compile()
+then prints memory_analysis() / cost_analysis() and dumps the roofline
+terms as JSON under EXPERIMENTS/dryrun/. Incremental: already-done cells
+are skipped unless --force.
+
+Usage:
+  python -m repro.launch.dryrun                        # everything
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --quant olive          # quantized serving
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, quant: str,
+             out_dir: str, force: bool = False,
+             mesh_override=None) -> dict:
+    from repro.configs import get_config, get_shape
+    from repro.configs.base import shape_applicable
+    from repro.launch import mesh as meshmod
+    from repro.launch.specs import build_cell, lower_cell
+    from repro.roofline.analysis import analyze, count_collectives
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    tag = f"{arch}__{shape_name}__{mesh_kind}__{quant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"cell": tag, "status": "skipped", "reason": reason}
+        _dump(path, rec)
+        return rec
+    if quant != "none" and shape.kind == "train":
+        rec = {"cell": tag, "status": "skipped",
+               "reason": "quantized variants are serving-only (PTQ)"}
+        _dump(path, rec)
+        return rec
+
+    mesh = mesh_override if mesh_override is not None else \
+        meshmod.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh, quant=quant)
+        lowered = lower_cell(cell)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        hlo_text = compiled.as_text()
+        roof = analyze(compiled, cell.n_chips, cell.model_flops)
+        colls = count_collectives(hlo_text)
+        # save the optimized HLO so §Perf re-analysis (e.g. byte-model
+        # changes) never needs a recompile
+        import gzip
+        os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+        with gzip.open(os.path.join(out_dir, "hlo", tag + ".hlo.gz"),
+                       "wt") as hf:
+            hf.write(hlo_text)
+        rec = {
+            "cell": tag, "status": "ok",
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "quant": quant, "kind": cell.kind, "note": cell.note,
+            "n_chips": cell.n_chips,
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "memory_analysis": {
+                "argument_size_per_chip": mem.argument_size_in_bytes,
+                "output_size_per_chip": mem.output_size_in_bytes,
+                "temp_size_per_chip": mem.temp_size_in_bytes,
+                "alias_size_per_chip": mem.alias_size_in_bytes,
+            },
+            "collective_ops": colls,
+            "roofline": roof.as_dict(),
+        }
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec = {"cell": tag, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    _dump(path, rec)
+    return rec
+
+
+def _dump(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "olive", "olive_kv", "olive_w8"])
+    ap.add_argument("--out", default="EXPERIMENTS/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, SHAPES
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                rec = run_cell(arch, shape, mk, args.quant, args.out,
+                               force=args.force)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+                line = f"[dryrun] {rec['cell']}: {st}"
+                if st == "ok":
+                    r = rec["roofline"]
+                    line += (f"  bottleneck={r['bottleneck']}"
+                             f" t_bound={r['t_bound_s']:.4g}s"
+                             f" compile={rec['compile_s']:.0f}s")
+                    print(line)
+                    print("   memory_analysis:",
+                          json.dumps(rec["memory_analysis"]))
+                    print("   cost: flops/chip=%.4g bytes/chip=%.4g "
+                          "coll_bytes/chip=%.4g" % (
+                              r["flops_per_chip"], r["bytes_per_chip"],
+                              r["coll_bytes_per_chip"]))
+                elif st == "skipped":
+                    print(line + f"  ({rec['reason'][:70]}…)")
+                else:
+                    print(line + f"  {rec['error']}")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,223 @@
+"""Cell construction for the multi-pod dry-run: ShapeDtypeStruct inputs,
+shardings, and the step function for every (arch × shape × mesh [× quant])
+combination. Shared by dryrun.py, the roofline harness, and launch CLIs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ArchConfig, ShapeCfg, shape_applicable
+from repro.core.policy import QuantPolicy
+from repro.core.qlinear import quantize_params
+from repro.models.model import Model, build_model
+from repro.optim.adamw import AdamW
+from repro.sharding import axes as ax
+from repro.sharding.rules import (cache_pspecs, make_rules, params_pspecs,
+                                  use_dp_only)
+from repro.train.train_step import init_state, make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode
+    fn: Callable                   # jit-able step function
+    args_sds: Tuple                # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    out_shardings: Any
+    mesh: Mesh
+    rules: Dict[str, Any]
+    model_flops: float             # global useful FLOPs per step
+    n_chips: int
+    note: str = ""
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def microbatches_for(cfg: ArchConfig, shape: ShapeCfg) -> int:
+    """Grad-accumulation depth: keep per-microbatch activation memory
+    bounded (~0.5 GB/chip at d_model 4k). Static policy, CLI-overridable."""
+    if shape.kind != "train":
+        return 1
+    big = cfg.d_model >= 4096 or cfg.n_layers >= 48 or cfg.n_experts >= 64
+    return 8 if big else 4
+
+
+def serve_policy(quant: str) -> QuantPolicy:
+    if quant == "none":
+        return QuantPolicy(compute_dtype="bfloat16")
+    if quant == "olive":          # paper-faithful W4A4 serving
+        return QuantPolicy(method="olive", wbits=4, abits=4,
+                           compute_dtype="bfloat16")
+    if quant == "olive_kv":       # beyond-paper: + OVP int4 KV cache
+        return QuantPolicy(method="olive", wbits=4, abits=4, kv_bits=4,
+                           compute_dtype="bfloat16")
+    if quant == "olive_w8":
+        return QuantPolicy(method="olive", wbits=8, abits=8,
+                           w_normal_dtype="int8",
+                           compute_dtype="bfloat16")
+    raise ValueError(quant)
+
+
+def _batch_spec(mesh, rules, cfg: ArchConfig, shape: ShapeCfg,
+                kind: str) -> Dict[str, Any]:
+    b_rule = rules["batch"]
+    gb, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    sds: Dict[str, Any] = {}
+    if kind == "decode":
+        sds["tokens"] = jax.ShapeDtypeStruct((gb, 1), jnp.int32)
+        specs["tokens"] = P(b_rule, None)
+        sds["pos"] = jax.ShapeDtypeStruct((gb,), jnp.int32)
+        specs["pos"] = P(b_rule)
+        return sds, specs
+    sds["tokens"] = jax.ShapeDtypeStruct((gb, s), jnp.int32)
+    specs["tokens"] = P(b_rule, None)
+    if kind == "train":
+        sds["labels"] = jax.ShapeDtypeStruct((gb, s), jnp.int32)
+        specs["labels"] = P(b_rule, None)
+    if cfg.frontend == "vit":
+        sds["patch_embeds"] = jax.ShapeDtypeStruct(
+            (gb, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        specs["patch_embeds"] = P(b_rule, None, None)
+    if cfg.frontend == "audio":
+        sds["frames"] = jax.ShapeDtypeStruct((gb, s, cfg.frontend_dim),
+                                             jnp.bfloat16)
+        specs["frames"] = P(b_rule, None, None)
+    return sds, specs
+
+
+def build_train_cell(arch: str, shape_name: str, mesh: Mesh, *,
+                     n_microbatches: Optional[int] = None,
+                     remat: bool = True) -> Cell:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    assert shape.kind == "train"
+    dp_only = use_dp_only(cfg, mesh, shape.global_batch)
+    rules = make_rules(cfg, mesh, global_batch=shape.global_batch)
+    nm = n_microbatches or microbatches_for(cfg, shape)
+    if dp_only:
+        nm = 1  # one sequence per chip already
+    policy = QuantPolicy(compute_dtype="bfloat16")
+    model = build_model(cfg, policy, remat=remat)
+    opt = AdamW(lr=1e-4, moment_dtype=jnp.bfloat16)
+
+    state_sds = jax.eval_shape(
+        lambda: init_state(model, opt, jax.random.PRNGKey(0),
+                           dtype=jnp.float32))
+    pspecs = params_pspecs(state_sds.params, cfg, mesh, dp_only=dp_only)
+    state_specs = type(state_sds)(
+        params=pspecs,
+        opt=type(state_sds.opt)(step=P(),
+                                mu=pspecs, nu=pspecs))
+    batch_sds, batch_specs = _batch_spec(mesh, rules, cfg, shape, "train")
+
+    step = make_train_step(model, opt, n_microbatches=nm)
+
+    def train_step(state, batch):
+        with ax.axis_rules(mesh, rules):
+            return step(state, batch)
+
+    metrics_specs = {"loss": P(), "ce": P(), "aux": P(),
+                     "grad_norm": P(), "lr": P()}
+    n_tokens = shape.global_batch * shape.seq_len
+    return Cell(
+        arch=arch, shape=shape_name, kind="train", fn=train_step,
+        args_sds=(state_sds, batch_sds),
+        in_shardings=(_named(mesh, state_specs), _named(mesh, batch_specs)),
+        out_shardings=(_named(mesh, state_specs),
+                       _named(mesh, metrics_specs)),
+        mesh=mesh, rules=rules,
+        model_flops=6.0 * cfg.active_param_count() * n_tokens,
+        n_chips=mesh.devices.size,
+        note=f"microbatches={nm}, remat={remat}, moments=bf16, grads=bf16"
+             + (", dp_only(FSDP)" if dp_only else ""),
+    )
+
+
+def build_serve_cell(arch: str, shape_name: str, mesh: Mesh, *,
+                     quant: str = "none") -> Cell:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    assert shape.kind in ("prefill", "decode")
+    long_ctx = shape.name == "long_500k"
+    rules = make_rules(cfg, mesh, long_context=long_ctx)
+    policy = serve_policy(quant)
+    model = build_model(cfg, policy, remat=False)
+
+    params_sds = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), dtype=jnp.bfloat16))
+    if policy.enabled:
+        params_sds = jax.eval_shape(
+            lambda p: quantize_params(p, policy), params_sds)
+    pspecs = params_pspecs(params_sds, cfg, mesh)
+
+    gb, s = shape.global_batch, shape.seq_len
+    enc_len = s if cfg.enc_dec else 0
+    caches_sds = jax.eval_shape(
+        lambda: model.init_caches(gb, s, enc_len=enc_len,
+                                  dtype=jnp.bfloat16))
+    cspecs = cache_pspecs(caches_sds, cfg, mesh, long_context=long_ctx)
+    batch_sds, batch_specs = _batch_spec(mesh, rules, cfg, shape,
+                                         shape.kind)
+    b_rule = rules["batch"]
+    logit_spec = P(b_rule, None, rules["vocab"])
+
+    if shape.kind == "prefill":
+        def fn(params, caches, batch):
+            with ax.axis_rules(mesh, rules):
+                logits, new_caches, _ = model.forward(
+                    params, batch, mode="prefill", caches=caches,
+                    last_only=True)
+            return logits, new_caches
+        # prefill of an audio enc-dec feeds frames, not tokens
+        if cfg.enc_dec:
+            batch_sds = dict(batch_sds)
+            batch_sds["tokens"] = jax.ShapeDtypeStruct((gb, s), jnp.int32)
+        model_flops = 2.0 * cfg.active_param_count() * gb * s
+    else:
+        def fn(params, caches, batch):
+            with ax.axis_rules(mesh, rules):
+                logits, new_caches, _ = model.forward(
+                    params, batch, mode="decode", caches=caches)
+            return logits, new_caches
+        model_flops = 2.0 * cfg.active_param_count() * gb
+
+    return Cell(
+        arch=arch, shape=shape_name, kind=shape.kind, fn=fn,
+        args_sds=(params_sds, caches_sds, batch_sds),
+        in_shardings=(_named(mesh, pspecs), _named(mesh, cspecs),
+                      _named(mesh, batch_specs)),
+        out_shardings=(_named(mesh, logit_spec), _named(mesh, cspecs)),
+        mesh=mesh, rules=rules,
+        model_flops=model_flops,
+        n_chips=mesh.devices.size,
+        note=f"quant={quant}, kv_bits={policy.kv_bits}",
+    )
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               quant: str = "none",
+               n_microbatches: Optional[int] = None) -> Cell:
+    shape = get_shape(shape_name)
+    if shape.kind == "train":
+        return build_train_cell(arch, shape_name, mesh,
+                                n_microbatches=n_microbatches)
+    return build_serve_cell(arch, shape_name, mesh, quant=quant)
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings)
+    return jitted.lower(*cell.args_sds)

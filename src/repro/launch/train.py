@@ -1,0 +1,103 @@
+"""Production training launcher.
+
+Single-host (CPU/dev) and multi-host (TPU pod) entry point: builds the
+mesh, shards the train state with the same rules the dry-run verified,
+and runs the fault-tolerant trainer loop.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b-smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+On a real pod, set --mesh to the production shape and launch one process
+per host (jax.distributed.initialize is called when JAX_COORDINATOR is
+set); on this CPU container the default mesh is 1x1.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.policy import PRESETS, QuantPolicy, get_policy
+from repro.data.loader import LoaderCfg, SyntheticLoader
+from repro.data.synthetic import CorpusCfg
+from repro.models.model import build_model
+from repro.optim.adamw import AdamW
+from repro.train.trainer import Trainer, TrainerCfg
+from repro.launch import mesh as meshmod
+
+
+def parse_mesh(s: str):
+    """'16x16' -> (data, model); '2x16x16' -> (pod, data, model)."""
+    dims = tuple(int(d) for d in s.lower().split("x"))
+    axes = ("pod", "data", "model")[-len(dims):]
+    return meshmod.make_mesh(dims, axes)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="",
+                    help="e.g. 16x16 or 2x16x16; default single-device")
+    ap.add_argument("--quant", default=None, choices=sorted(PRESETS),
+                    help="QAT policy (STE fake-quant in the fwd pass)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()  # multi-host pod entry
+
+    cfg = get_config(args.arch)
+    policy = get_policy(args.quant)
+    if policy.enabled:
+        import dataclasses
+        policy = dataclasses.replace(policy, qat=True)
+    model = build_model(cfg, policy, remat=True)
+    from repro.optim.adamw import cosine_schedule
+    opt = AdamW(lr=cosine_schedule(args.lr, min(20, args.steps // 5),
+                                   args.steps),
+                moment_dtype=jnp.bfloat16)
+    loader = SyntheticLoader(LoaderCfg(
+        global_batch=args.batch, seq_len=args.seq,
+        corpus=CorpusCfg(vocab=cfg.vocab)))
+    tcfg = TrainerCfg(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every,
+                      eval_every=args.eval_every,
+                      n_microbatches=args.microbatches, seed=args.seed)
+
+    if args.mesh:
+        mesh = parse_mesh(args.mesh)
+        from repro.launch.specs import build_train_cell
+        from repro.train.train_step import init_state
+        cell = build_train_cell(args.arch, "train_4k", mesh,
+                                n_microbatches=args.microbatches)
+        print(f"[train] mesh {mesh.devices.shape} {mesh.axis_names}; "
+              f"sharded step verified by dry-run rules")
+        trainer = Trainer(model, opt, loader, tcfg)
+        trainer.step_fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                                  out_shardings=cell.out_shardings)
+    else:
+        trainer = Trainer(model, opt, loader, tcfg)
+
+    trainer.init_or_restore()
+    hist = trainer.run()
+    if hist["loss"]:
+        print(f"[train] done: step {trainer.step}, "
+              f"loss {hist['loss'][0]:.4f} -> {hist['loss'][-1]:.4f}")
+    if args.eval_every or args.steps >= 20:
+        print(f"[train] held-out ppl: {trainer.evaluate():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .model import Model, build_model, block_params, block_forward
+from . import layers

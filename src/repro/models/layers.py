@@ -1,0 +1,1012 @@
+"""Model-zoo building blocks: norms, RoPE, blockwise (flash-style)
+attention with GQA / sliding-window / cross variants, KV caches (fp and
+OVP-quantized), MoE with capacity-based dispatch, RG-LRU, mLSTM, sLSTM.
+
+Everything is functional: params are plain dicts, layers are pure
+functions, quantization routes through `repro.core.qlinear` and sharding
+hints through `repro.sharding.axes.logical`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.core.ovp import ovp_quantize, ovp_dequantize
+from repro.core.policy import QuantPolicy
+from repro.sharding.axes import logical
+
+Params = dict
+NEG_INF = -1e30
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(shape[0]) if scale is None else scale
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ==========================================================================
+# Norms
+# ==========================================================================
+def rms_norm_params(d):
+    return {"gamma_scale": jnp.ones((d,))}
+
+
+def rms_norm(x, p, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["gamma_scale"].astype(jnp.float32)).astype(dt)
+
+
+def layer_norm_params(d):
+    return {"gamma_scale": jnp.ones((d,)), "beta_shift": jnp.zeros((d,))}
+
+
+def layer_norm(x, p, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["gamma_scale"] + p["beta_shift"]).astype(dt)
+
+
+# ==========================================================================
+# RoPE
+# ==========================================================================
+def rope(x, positions, theta=1e4):
+    """x: (B, T, H, D), positions: (B, T) absolute positions."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,T,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ==========================================================================
+# Blockwise (flash-style) attention — bounded-memory softmax for long seq
+# ==========================================================================
+def _attend_block(qb, kb, vb, mask, m, l, acc, scale):
+    """One (q-chunk, kv-chunk) online-softmax update.
+
+    qb: (B, qc, Hkv, G, D); kb/vb: (B, kc, Hkv, D);
+    mask: (B, 1, 1, qc, kc) or broadcastable; m,l: (B, Hkv, G, qc);
+    acc: (B, qc, Hkv, G, D).
+    """
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
+                   kb.astype(jnp.float32)) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bhgqk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+    # corr: (B,Hkv,G,qc) -> (B,qc,Hkv,G,1) to rescale the accumulator
+    acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None]
+    return m_new, l_new, acc_new + pv
+
+
+def _flash_fwd_impl(q, k, v, causal, q_offset, q_chunk, kv_chunk):
+    """Online-softmax chunked attention forward.
+
+    Returns (out (B,T,H,D) in q.dtype, lse (B, nq, qc, Hkv, G) fp32) where
+    lse = m + log l is the per-position log-sum-exp (+inf for rows with no
+    valid key — their output is 0 and their backward p is exp(-inf) = 0).
+    """
+    b, t, h, d = q.shape
+    s_len = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qc = min(q_chunk, t)
+    kc = min(kv_chunk, s_len)
+    tp, sp = -(-t // qc) * qc, -(-s_len // kc) * kc
+    qg = jnp.pad(q, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    kg = jnp.pad(k, ((0, 0), (0, sp - s_len), (0, 0), (0, 0)))
+    vg = jnp.pad(v, ((0, 0), (0, sp - s_len), (0, 0), (0, 0)))
+    qg = qg.reshape(b, tp // qc, qc, hkv, g, d)
+    kg = kg.reshape(b, sp // kc, kc, hkv, d)
+    vg = vg.reshape(b, sp // kc, kc, hkv, d)
+
+    def q_block(_, iq_qb):
+        iq, qb = iq_qb
+        qpos = q_offset + iq * qc + jnp.arange(qc)
+
+        def kv_block(carry, ik_kb):
+            m, l, acc = carry
+            ik, kb, vb = ik_kb
+            kp = ik * kc + jnp.arange(kc)
+            mask = jnp.broadcast_to(kp[None, :] < s_len, (qc, kc))
+            if causal:
+                mask = mask & (qpos[:, None] >= kp[None, :])
+            mask = mask[None, None, None]                    # (1,1,1,qc,kc)
+            return _attend_block(qb, kb, vb, mask, m, l, acc, scale), None
+
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, qc, hkv, g, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (jnp.arange(sp // kc), jnp.moveaxis(kg, 1, 0),
+             jnp.moveaxis(vg, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)),
+                        jnp.inf)                             # (B,Hkv,G,qc)
+        return None, (out, lse.transpose(0, 3, 1, 2))        # lse (B,qc,...)
+
+    _, (outs, lses) = jax.lax.scan(
+        q_block, None, (jnp.arange(tp // qc), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, tp, hkv, g, d)[:, :t]
+    lse = jnp.moveaxis(lses, 0, 1)                           # (B,nq,qc,..)
+    return out.reshape(b, t, h, d).astype(q.dtype), \
+        lse.reshape(b, 1, tp // qc, qc, hkv, g)[:, 0]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention(q, k, v, causal, q_offset, q_chunk, kv_chunk):
+    return _flash_fwd_impl(q, k, v, causal, q_offset, q_chunk, kv_chunk)[0]
+
+
+def _flash_fwd(q, k, v, causal, q_offset, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_offset, q_chunk,
+                               kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, q_chunk, kv_chunk, res, do):
+    """FlashAttention-2 style backward (§Perf iteration F): recompute the
+    chunk scores from (q, k, lse) instead of letting autodiff stack the
+    inner kv-scan's score residuals (the dominant HBM term of every dense
+    train cell at baseline). Saves only O(T·D) tensors: q, k, v, out, lse.
+    """
+    q, k, v, out, lse = res
+    b, t, h, d = q.shape
+    s_len = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qc = min(q_chunk, t)
+    kc = min(kv_chunk, s_len)
+    tp, sp = -(-t // qc) * qc, -(-s_len // kc) * kc
+    nq, nk = tp // qc, sp // kc
+
+    def pad_q(x):
+        return jnp.pad(x, ((0, 0), (0, tp - t)) + ((0, 0),) * (x.ndim - 2))
+
+    def pad_k(x):
+        return jnp.pad(x, ((0, 0), (0, sp - s_len))
+                       + ((0, 0),) * (x.ndim - 2))
+
+    f32 = jnp.float32
+    qg = pad_q(q).reshape(b, nq, qc, hkv, g, d).astype(f32)
+    dog = pad_q(do).reshape(b, nq, qc, hkv, g, d).astype(f32)
+    og = pad_q(out).reshape(b, nq, qc, hkv, g, d).astype(f32)
+    kg = pad_k(k).reshape(b, nk, kc, hkv, d).astype(f32)
+    vg = pad_k(v).reshape(b, nk, kc, hkv, d).astype(f32)
+    # delta_i = rowsum(dO ∘ O)  (B, nq, qc, Hkv, G)
+    delta = jnp.sum(dog * og, axis=-1)
+
+    def block_ds(iq, qb, lse_i, delta_i, ik, kb, vb, dob):
+        """Recomputed p and ds for one (q-chunk, kv-chunk) pair."""
+        qpos = q_offset + iq * qc + jnp.arange(qc)
+        kp = ik * kc + jnp.arange(kc)
+        mask = jnp.broadcast_to(kp[None, :] < s_len, (qc, kc))
+        if causal:
+            mask = mask & (qpos[:, None] >= kp[None, :])
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale
+        # lse_i: (B,qc,Hkv,G) -> (B,Hkv,G,qc,1)
+        p = jnp.exp(s - lse_i.transpose(0, 2, 3, 1)[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", dob, vb)
+        ds = p * (dp - delta_i.transpose(0, 2, 3, 1)[..., None]) * scale
+        return p, ds
+
+    # ---- dq: per q chunk, sum over kv chunks ---------------------------
+    def dq_block(_, xs):
+        iq, qb, lse_i, delta_i, dob = xs
+
+        def kv_acc(dq_i, ys):
+            ik, kb, vb = ys
+            _, ds = block_ds(iq, qb, lse_i, delta_i, ik, kb, vb, dob)
+            return dq_i + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kb), None
+
+        dq0 = jnp.zeros((b, qc, hkv, g, d), f32)
+        dq_i, _ = jax.lax.scan(kv_acc, dq0,
+                               (jnp.arange(nk), jnp.moveaxis(kg, 1, 0),
+                                jnp.moveaxis(vg, 1, 0)))
+        return None, dq_i
+
+    _, dqs = jax.lax.scan(
+        dq_block, None,
+        (jnp.arange(nq), jnp.moveaxis(qg, 1, 0),
+         jnp.moveaxis(lse, 1, 0), jnp.moveaxis(delta, 1, 0),
+         jnp.moveaxis(dog, 1, 0)))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(b, tp, h, d)[:, :t]
+
+    # ---- dk, dv: per kv chunk, sum over q chunks -----------------------
+    def dkv_block(_, xs):
+        ik, kb, vb = xs
+
+        def q_acc(carry, ys):
+            dk_j, dv_j = carry
+            iq, qb, lse_i, delta_i, dob = ys
+            p, ds = block_ds(iq, qb, lse_i, delta_i, ik, kb, vb, dob)
+            dk_j = dk_j + jnp.einsum("bhgqk,bqhgd->bkhd", ds, qb)
+            dv_j = dv_j + jnp.einsum("bhgqk,bqhgd->bkhd", p, dob)
+            return (dk_j, dv_j), None
+
+        z = jnp.zeros((b, kc, hkv, d), f32)
+        (dk_j, dv_j), _ = jax.lax.scan(
+            q_acc, (z, z),
+            (jnp.arange(nq), jnp.moveaxis(qg, 1, 0),
+             jnp.moveaxis(lse, 1, 0), jnp.moveaxis(delta, 1, 0),
+             jnp.moveaxis(dog, 1, 0)))
+        return None, (dk_j, dv_j)
+
+    _, (dks, dvs) = jax.lax.scan(
+        dkv_block, None,
+        (jnp.arange(nk), jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0)))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, sp, hkv, d)[:, :s_len]
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, sp, hkv, d)[:, :s_len]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blockwise_attention(q, k, v, *, causal=True, q_offset=0,
+                        q_chunk=512, kv_chunk=512):
+    """q: (B,T,H,D); k,v: (B,S,Hkv,D). Returns (B,T,H,D).
+
+    Online-softmax double scan with a FlashAttention-2 custom VJP: HBM
+    footprint is O(T·D + qc·kc) in BOTH directions. `q_offset` is the
+    absolute position of q[0] relative to k[0] (cross-attention passes
+    causal=False).
+    """
+    return _flash_attention(q, k, v, causal, int(q_offset), q_chunk,
+                            kv_chunk)
+
+
+def local_blockwise_attention(q, k, v, *, window, q_offset=0, chunk=512):
+    """Sliding-window causal attention, O(T·window).
+
+    For q chunk i, only kv positions in (q_pos - window, q_pos] matter;
+    we left-pad K/V by `w_pad` and dynamic-slice a (w_pad + chunk) span.
+    """
+    b, t, h, d = q.shape
+    s_len = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    c = min(chunk, t)
+    w_pad = -(-window // c) * c
+    tp = -(-t // c) * c
+    qg = jnp.pad(q, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    kg = jnp.pad(k, ((0, 0), (w_pad, tp - s_len), (0, 0), (0, 0)))
+    vg = jnp.pad(v, ((0, 0), (w_pad, tp - s_len), (0, 0), (0, 0)))
+    qg = qg.reshape(b, tp // c, c, hkv, g, d)
+    span = w_pad + c
+
+    def q_block(_, iq_qb):
+        iq, qb = iq_qb
+        qpos = q_offset + iq * c + jnp.arange(c)
+        start = iq * c  # padded coords; covers original [iq*c - w_pad, ...)
+        kb = jax.lax.dynamic_slice_in_dim(kg, start, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vg, start, span, axis=1)
+        kpos = q_offset + start - w_pad + jnp.arange(span)
+        mask = ((kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+                & (kpos[None, :] > qpos[:, None] - window)
+                & (kpos[None, :] < q_offset + s_len))
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+        return None, out
+
+    _, outs = jax.lax.scan(q_block, None,
+                           (jnp.arange(tp // c), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, tp, hkv, g, d)[:, :t]
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+# ==========================================================================
+# KV caches (fp16/bf16 and OVP-quantized beyond-paper variant)
+# ==========================================================================
+def make_kv_cache(batch, length, n_kv, head_dim, dtype=jnp.bfloat16,
+                  kv_bits: int = 0):
+    if kv_bits == 4:
+        return {"k_data": jnp.zeros((batch, length, n_kv, head_dim // 2),
+                                    jnp.uint8),
+                "v_data": jnp.zeros((batch, length, n_kv, head_dim // 2),
+                                    jnp.uint8),
+                "k_scl": jnp.ones((batch, length, n_kv), jnp.float32),
+                "v_scl": jnp.ones((batch, length, n_kv), jnp.float32)}
+    return {"k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, length, n_kv, head_dim), dtype)}
+
+
+def _quant_kv_token(x):
+    """x: (B, T, Hkv, D) -> packed nibbles + per-(token, head) 3σ scales."""
+    from repro.core.ovp import ovp_encode_codes, pack4
+    s = jnp.maximum(3.0 * jnp.std(x.astype(jnp.float32), axis=-1) / 7.0,
+                    1e-6)                                  # (B,T,Hkv)
+    u = x.astype(jnp.float32) / s[..., None]
+    codes = ovp_encode_codes(u, "int4", pair_axis=-1)
+    return pack4(codes, pair_axis=-1), s
+
+
+def _dequant_kv(data, scl):
+    from repro.core.ovp import ovp_decode_codes, unpack4
+    vals = ovp_decode_codes(unpack4(data, -1), "int4", pair_axis=-1)
+    return vals * scl[..., None]
+
+
+def cache_write(cache, k_new, v_new, pos, ring: int = 0):
+    """Write one step (T may be >1 for prefill). pos: (B,) write position of
+    k_new[:, 0]. ring>0 wraps indices modulo the ring size (local attn)."""
+    b, t = k_new.shape[:2]
+    idx = pos[:, None] + jnp.arange(t)[None, :]            # (B, T)
+    if ring:
+        idx = idx % ring
+    bidx = jnp.arange(b)[:, None] + jnp.zeros_like(idx)
+    if "k" in cache:
+        k = cache["k"].at[bidx, idx].set(k_new.astype(cache["k"].dtype),
+                                         mode="drop")
+        v = cache["v"].at[bidx, idx].set(v_new.astype(cache["v"].dtype),
+                                         mode="drop")
+        return {"k": k, "v": v}
+    kd, ks = _quant_kv_token(k_new)
+    vd, vs = _quant_kv_token(v_new)
+    return {"k_data": cache["k_data"].at[bidx, idx].set(kd, mode="drop"),
+            "v_data": cache["v_data"].at[bidx, idx].set(vd, mode="drop"),
+            "k_scl": cache["k_scl"].at[bidx, idx].set(ks, mode="drop"),
+            "v_scl": cache["v_scl"].at[bidx, idx].set(vs, mode="drop")}
+
+
+def cache_read(cache, dtype=jnp.float32):
+    """dtype=None: return the cache's native dtype (no full-cache convert
+    — materializing an f32 copy of a multi-GB cache per layer was the
+    dominant decode HBM term, §Perf iteration D2)."""
+    if "k" in cache:
+        if dtype is None:
+            return cache["k"], cache["v"]
+        return cache["k"].astype(dtype), cache["v"].astype(dtype)
+    kd = _dequant_kv(cache["k_data"], cache["k_scl"])
+    vd = _dequant_kv(cache["v_data"], cache["v_scl"])
+    if dtype is None:
+        dtype = jnp.bfloat16
+    return kd.astype(dtype), vd.astype(dtype)
+
+
+def decode_attention(q, cache, pos, *, window: int = 0, ring: int = 0):
+    """Single-token attention over a cache.
+
+    q: (B, 1, H, D); pos: (B,) current absolute position (token at `pos` is
+    already written). `ring` = physical cache length for ring buffers; slot
+    absolute positions are reconstructed arithmetically.
+    """
+    k, v = cache_read(cache, dtype=None)   # native dtype; f32 accumulate
+    b, s_len, hkv, d = k.shape
+    h = q.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, 1, hkv, g, d)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg.astype(k.dtype), k,
+                   preferred_element_type=jnp.float32) * scale
+    slots = jnp.arange(s_len)
+    if ring:
+        # slot i holds absolute position p = largest p' <= pos with
+        # p' % ring == i (invalid if negative / outside window)
+        p = pos[:, None]
+        abs_pos = p - ((p - slots[None, :]) % ring)
+        valid = abs_pos >= 0
+    else:
+        abs_pos = jnp.broadcast_to(slots[None, :], (b, s_len))
+        valid = abs_pos <= pos[:, None]
+    if window:
+        valid = valid & (abs_pos > pos[:, None] - window) \
+            & (abs_pos <= pos[:, None])
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p_att = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p_att.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ==========================================================================
+# Attention layer (projections + cache plumbing)
+# ==========================================================================
+def attention_params(key, d_model, n_heads, n_kv, head_dim, qkv_bias=False,
+                     dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {"wq": _init(ks[0], (d_model, n_heads * head_dim), dtype=dtype),
+         "wk": _init(ks[1], (d_model, n_kv * head_dim), dtype=dtype),
+         "wv": _init(ks[2], (d_model, n_kv * head_dim), dtype=dtype),
+         "wo": _init(ks[3], (n_heads * head_dim, d_model), dtype=dtype)}
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def attention_forward(p, x, positions, cfg, policy: QuantPolicy, *,
+                      window=0, causal=True, cache=None, mode="train",
+                      kv_x=None, use_rope=True):
+    """mode: train|prefill|decode. Returns (out, new_cache).
+
+    kv_x: source for K/V (cross-attention); defaults to x.
+    """
+    b, t, d_model = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+
+    q = qlinear.linear(x, p["wq"], p.get("bq"), policy)
+    q = q.reshape(b, t, nh, hd)
+    if mode == "decode" and kv_x is None:
+        k_new = qlinear.linear(x, p["wk"], p.get("bk"), policy)
+        v_new = qlinear.linear(x, p["wv"], p.get("bv"), policy)
+        k_new = k_new.reshape(b, t, nkv, hd)
+        v_new = v_new.reshape(b, t, nkv, hd)
+        if use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+            k_new = rope(k_new, positions, cfg.rope_theta)
+        ring = window if (window and cache_len(cache) == window) else 0
+        cache = cache_write(cache, k_new, v_new, positions[:, 0], ring=ring)
+        out = decode_attention(q, cache, positions[:, 0], window=window,
+                               ring=ring)
+    elif mode == "decode":  # cross-attention decode: cache holds enc K/V
+        if use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+        out = decode_attention(q, cache, positions[:, 0] * 0
+                               + cache_len(cache) - 1)
+    else:
+        k = qlinear.linear(src, p["wk"], p.get("bk"), policy)
+        v = qlinear.linear(src, p["wv"], p.get("bv"), policy)
+        s_len = src.shape[1]
+        k = k.reshape(b, s_len, nkv, hd)
+        v = v.reshape(b, s_len, nkv, hd)
+        if use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+            kpos = positions if kv_x is None else \
+                jnp.broadcast_to(jnp.arange(s_len)[None], (b, s_len))
+            k = rope(k, kpos, cfg.rope_theta)
+        q = logical(q, "batch", "seq", "heads", None)
+        k = logical(k, "batch", "seq", "kv_heads", None)
+        if window and causal:
+            out = local_blockwise_attention(q, k, v, window=window)
+        else:
+            out = blockwise_attention(q, k, v, causal=causal)
+        if mode == "prefill" and cache is not None:
+            if kv_x is None:
+                ring = window if (window and cache_len(cache) == window) \
+                    else 0
+                if ring:
+                    keep = min(window, s_len)
+                    cache = cache_write(cache, k[:, -keep:], v[:, -keep:],
+                                        positions[:, -keep], ring=ring)
+                else:
+                    cache = cache_write(cache, k, v, positions[:, 0])
+            else:  # store encoder K/V once
+                cache = cache_write(cache, k, v,
+                                    jnp.zeros((b,), jnp.int32))
+    out = out.reshape(b, t, nh * hd)
+    out = qlinear.linear(out, p["wo"], None, policy)
+    return logical(out, "batch", "seq", "embed"), cache
+
+
+def cache_len(cache) -> int:
+    if cache is None:
+        return 0
+    leaf = cache.get("k", cache.get("k_data"))
+    return leaf.shape[1]
+
+
+# ==========================================================================
+# MLPs
+# ==========================================================================
+def swiglu_params(key, d_model, d_ff, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {"wg": _init(ks[0], (d_model, d_ff), dtype=dtype),
+            "wu": _init(ks[1], (d_model, d_ff), dtype=dtype),
+            "wd": _init(ks[2], (d_ff, d_model), dtype=dtype)}
+
+
+def swiglu(p, x, policy: QuantPolicy):
+    g = qlinear.linear(x, p["wg"], None, policy)
+    u = qlinear.linear(x, p["wu"], None, policy)
+    h = jax.nn.silu(g) * u
+    h = logical(h, "batch", "seq", "ffn")
+    return logical(qlinear.linear(h, p["wd"], None, policy),
+                   "batch", "seq", "embed")
+
+
+def gelu_mlp_params(key, d_model, d_ff, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {"wi": _init(ks[0], (d_model, d_ff), dtype=dtype),
+            "wd": _init(ks[1], (d_ff, d_model), dtype=dtype),
+            "bi": jnp.zeros((d_ff,), dtype),
+            "bd": jnp.zeros((d_model,), dtype)}
+
+
+def gelu_mlp(p, x, policy: QuantPolicy):
+    h = jax.nn.gelu(qlinear.linear(x, p["wi"], p["bi"], policy))
+    h = logical(h, "batch", "seq", "ffn")
+    return qlinear.linear(h, p["wd"], p["bd"], policy)
+
+
+# ==========================================================================
+# Mixture of Experts (capacity-based sort dispatch, EP-shardable)
+# ==========================================================================
+def moe_params(key, d_model, d_ff, n_experts, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "router": {"w_gate": _init(ks[0], (d_model, n_experts),
+                                   dtype=jnp.float32)},
+        "experts": {
+            "wg": (jax.random.normal(ks[1], (n_experts, d_model, d_ff))
+                   * s).astype(dtype),
+            "wu": (jax.random.normal(ks[2], (n_experts, d_model, d_ff))
+                   * s).astype(dtype),
+            "wd": (jax.random.normal(ks[3], (n_experts, d_ff, d_model))
+                   / math.sqrt(d_ff)).astype(dtype),
+        },
+    }
+
+
+def moe_layer(p, x, cfg, policy: QuantPolicy, capacity_factor=None):
+    """Top-k token-choice MoE. Returns (y, aux_loss).
+
+    Dispatch is PER BATCH ROW (§Perf iteration M): routing, capacity,
+    gather and combine are vmapped over the batch dim, which is sharded
+    over the data axes — so the argsort/gather/scatter machinery never
+    crosses a data shard. (The earlier global-token dispatch forced the
+    SPMD partitioner to all-reduce full-token tensors — f32[B·T, d] per
+    MoE layer per microbatch, the dominant collective in the MoE train
+    cells.) Cross-shard traffic is now only the expert einsum resharding
+    along the EP ("model") axis, sized by the dispatched slots.
+
+    Per-row capacity keeps the same global capacity budget:
+    cap_row = ceil(cf · t · k / e). Dropped tokens fall back to the
+    residual stream (standard capacity semantics).
+    """
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    if capacity_factor is None:
+        capacity_factor = getattr(cfg, "capacity_factor", 1.25)
+
+    router_w = p["router"]["w_gate"]
+    if policy.enabled and not policy.quantize_router \
+            and hasattr(router_w, "astype"):
+        router_w = router_w.astype(jnp.float32)
+    logits = x.astype(jnp.float32) @ router_w            # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                 # (B, T, k)
+    if cfg.norm_topk:
+        topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # load-balance aux (Switch-style), over all tokens
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(topi, e, dtype=jnp.float32),
+                          axis=2), axis=(0, 1))
+    aux = e * jnp.sum(me * ce) / k
+
+    cap = max(int(capacity_factor * t * k / e), 4)
+
+    def dispatch_row(xr, topi_r, topw_r):
+        """xr (T, d); topi/topw (T, k) -> slots (E, cap, d) + combine meta."""
+        flat_e = topi_r.reshape(-1)                      # (T*k,)
+        flat_t = jnp.repeat(jnp.arange(t), k)
+        flat_w = topw_r.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        counts = jnp.bincount(se, length=e)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(t * k) - starts[se]
+        keep = rank < cap
+        dest = jnp.where(keep, se * cap + rank, e * cap)  # drop -> scratch
+        slot_token = jnp.zeros((e * cap + 1,), jnp.int32).at[dest].set(st)
+        slot_valid = jnp.zeros((e * cap + 1,), jnp.bool_).at[dest].set(keep)
+        xg = xr[slot_token[:-1]] * slot_valid[:-1, None]
+        return xg.reshape(e, cap, d), (dest, st, sw, keep)
+
+    xg, (dest, st, sw, keep) = jax.vmap(dispatch_row)(x, topi, topw)
+    # (B, E, cap, d): batch stays on the data axes, experts go to EP
+    xg = logical(xg, "batch", "expert", "expert_cap", "embed")
+
+    ew = p["experts"]
+    h = _expert_ein(xg, ew["wg"], policy)
+    u = _expert_ein(xg, ew["wu"], policy)
+    hh = jax.nn.silu(h) * u
+    hh = logical(hh, "batch", "expert", "expert_cap", "ffn")
+    yg = _expert_ein(hh, ew["wd"], policy)               # (B, E, cap, d)
+    yg = logical(yg, "batch", "expert", "expert_cap", "embed")
+
+    def combine_row(yg_r, dest_r, st_r, sw_r, keep_r):
+        """Slot-side combine (§Perf iteration M2): weight each expert slot
+        and scatter-add it into the (t, d) output directly. With yg
+        EP-sharded, every chip scatter-adds its LOCAL expert slots and the
+        partitioner inserts ONE (t, d) partial-sum all-reduce — vs the
+        assignment-side gather, whose forward select/AR and backward
+        scatter/AR move (T·k, d) tensors across the EP axis (16x more).
+        Runs in the compute dtype so f32 router weights don't promote it.
+        """
+        w = (sw_r * keep_r).astype(yg_r.dtype)
+        slot_w = jnp.zeros((e * cap + 1,), yg_r.dtype).at[dest_r].set(w)
+        slot_tok = jnp.zeros((e * cap + 1,), jnp.int32).at[dest_r].set(st_r)
+        yflat = yg_r.reshape(e * cap, d) * slot_w[:-1, None]
+        return jnp.zeros((t, d), yg_r.dtype).at[slot_tok[:-1]].add(yflat)
+
+    y = jax.vmap(combine_row)(yg, dest, st, sw, keep)
+    return y.astype(x.dtype), aux
+
+
+def _expert_ein(xg, w, policy: QuantPolicy):
+    """([B,] E, C, K) x (E, K, F) -> ([B,] E, C, F) quantized matmul."""
+    from repro.core.ovp import QuantizedTensor
+    cdt = jnp.dtype(policy.compute_dtype)
+    eq = "eck,ekf->ecf" if xg.ndim == 3 else "beck,ekf->becf"
+    if isinstance(w, QuantizedTensor):
+        wd = ovp_dequantize(w, dtype=cdt)
+        return jnp.einsum(eq, xg.astype(cdt), wd)
+    return jnp.einsum(eq, xg.astype(cdt), w.astype(cdt))
+
+
+# ==========================================================================
+# Causal depthwise conv (RG-LRU & mLSTM front-ends), width-4
+# ==========================================================================
+def conv1d_params(key, d, width=4, dtype=jnp.float32):
+    return {"conv_kernel": (jax.random.normal(key, (width, d)) /
+                            math.sqrt(width)).astype(dtype),
+            "conv_bias": jnp.zeros((d,), dtype)}
+
+
+def conv1d_causal(p, x, state=None):
+    """x: (B,T,D). state: (B,W-1,D) trailing inputs for decode. Returns
+    (y, new_state)."""
+    w = p["conv_kernel"].shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # y_t = sum_i k_i * x_{t-w+1+i}
+    y = sum(xp[:, i:i + x.shape[1]] * p["conv_kernel"][i]
+            for i in range(w))
+    new_state = xp[:, -(w - 1):] if w > 1 else None
+    return y + p["conv_bias"], new_state
+
+
+# ==========================================================================
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+# ==========================================================================
+def rglru_params(key, d_model, d_rnn, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": _init(ks[0], (d_model, d_rnn), dtype=dtype),
+        "wgate": _init(ks[1], (d_model, d_rnn), dtype=dtype),
+        "wo": _init(ks[2], (d_rnn, d_model), dtype=dtype),
+        "conv": conv1d_params(ks[3], d_rnn, dtype=dtype),
+        # recurrence gates
+        "w_inp_gate": _init(ks[4], (d_rnn, d_rnn), dtype=dtype),
+        "w_rec_gate": _init(ks[5], (d_rnn, d_rnn), dtype=dtype),
+        "a_param": jnp.full((d_rnn,), 2.0),   # sigmoid(2)^8 ≈ 0.31 decay
+    }
+
+
+def _rglru_core(p, u, h0, policy: QuantPolicy):
+    """u: (B,T,Dr) inputs; h0: (B,Dr). Linear diag recurrence via
+    associative scan: h_t = a_t ⊙ h_{t-1} + b_t."""
+    rt = jax.nn.sigmoid(
+        qlinear.linear(u, p["w_rec_gate"], None, policy)
+        .astype(jnp.float32))
+    it = jax.nn.sigmoid(
+        qlinear.linear(u, p["w_inp_gate"], None, policy)
+        .astype(jnp.float32))
+    log_a = -8.0 * jax.nn.softplus(p["a_param"]) * rt  # log a_t ≤ 0
+    a = jnp.exp(log_a)
+    gated = it * u.astype(jnp.float32)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_scan, b_scan = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+    # fold in h0: h_t = a_scan_t * h0 + b_scan_t
+    return a_scan * h0[:, None, :] + b_scan
+
+
+def rglru_forward(p, x, cfg, policy, *, state=None, mode="train"):
+    """Griffin recurrent block. state = {"h": (B,Dr), "conv": (B,3,Dr)}."""
+    b, t, _ = x.shape
+    gate = jax.nn.gelu(qlinear.linear(x, p["wgate"], None, policy))
+    u = qlinear.linear(x, p["wx"], None, policy)
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = conv1d_causal(p["conv"], u, conv_state)
+    h0 = state["h"] if state is not None else jnp.zeros(
+        (b, u.shape[-1]), jnp.float32)
+    h = _rglru_core(p, u, h0, policy)
+    y = qlinear.linear((h.astype(x.dtype) * gate), p["wo"], None, policy)
+    new_state = None
+    if state is not None:
+        new_state = {"h": h[:, -1].astype(jnp.float32), "conv": new_conv}
+    return logical(y, "batch", "seq", "embed"), new_state
+
+
+def rglru_init_state(batch, d_rnn, conv_width=4):
+    return {"h": jnp.zeros((batch, d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, d_rnn), jnp.float32)}
+
+
+# ==========================================================================
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory), per the paper
+# ==========================================================================
+def mlstm_params(key, d_model, n_heads, dtype=jnp.float32):
+    d_inner = 2 * d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": _init(ks[0], (d_model, 2 * d_inner), dtype=dtype),
+        "conv": conv1d_params(ks[1], d_inner, dtype=dtype),
+        "wq": _init(ks[2], (d_inner, d_inner), dtype=dtype),
+        "wk": _init(ks[3], (d_inner, d_inner), dtype=dtype),
+        "wv": _init(ks[4], (d_inner, d_inner), dtype=dtype),
+        "w_igate": _init(ks[5], (d_inner, n_heads), 0.01, dtype=dtype),
+        "w_fgate": _init(ks[6], (d_inner, n_heads), 0.01, dtype=dtype),
+        "fgate_bias": jnp.full((n_heads,), 3.0),
+        "igate_bias": jnp.zeros((n_heads,)),
+        "w_down": _init(ks[7], (d_inner, d_model), dtype=dtype),
+        "outnorm": {"gamma_scale": jnp.ones((d_inner,))},
+    }
+
+
+def _mlstm_core(q, k, v, i_pre, f_pre, state):
+    """Recurrent mLSTM scan. q,k,v: (B,T,H,Dh); gates (B,T,H).
+    state: dict(c: (B,H,Dh,Dh), n: (B,H,Dh), m: (B,H)). Returns (h, state).
+    """
+    b, t, h, dh = q.shape
+    kscale = 1.0 / math.sqrt(dh)
+
+    def step(carry, xs):
+        c, n, m = carry
+        qt, kt, vt, it, ft = xs           # (B,H,Dh), gates (B,H)
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        kt = kt * kscale
+        c = f_[..., None, None] * c \
+            + i_[..., None, None] * jnp.einsum("bhd,bhe->bhde", vt, kt)
+        n = f_[..., None] * n + i_[..., None] * kt
+        num = jnp.einsum("bhde,bhe->bhd", c, qt)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt))
+        hout = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (c, n, m_new), hout
+
+    xs = (jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(i_pre, 1, 0), jnp.moveaxis(f_pre, 1, 0))
+    (c, n, m), hs = jax.lax.scan(step, (state["c"], state["n"],
+                                        state["m"]), xs)
+    return jnp.moveaxis(hs, 0, 1), {"c": c, "n": n, "m": m}
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, state, chunk: int = 64):
+    """Chunkwise-parallel mLSTM (the xLSTM paper's training formulation).
+
+    Mathematically identical to `_mlstm_core` but scans over T/chunk
+    chunks instead of T steps: intra-chunk terms are (L x L) matmuls, the
+    (Dh x Dh) matrix state updates once per chunk. This is §Perf
+    iteration X — the per-token scan materializes C (B,H,Dh,Dh) residuals
+    T times per layer in the backward; chunkwise cuts that by `chunk`x.
+
+    Stabilization: with a_t = cumsum(log f), w_s = i_s - a_s,
+    u_t = cummax(w), M_t = max(m_prev, u_t), every exponent used is
+    ≤ 0: intra coeff = exp(w_s - M_t), inter coeff = exp(m_prev - M_t),
+    and the per-position stabilizer is m_t = a_t + M_t.
+    """
+    b, t, h, dh = q.shape
+    kscale = 1.0 / math.sqrt(dh)
+    L = min(chunk, t)
+    nc = -(-t // L)
+    pad = nc * L - t
+
+    def pad_t(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+    # (B, nc, L, H, ...) -> scan over nc
+    qg = pad_t(q).reshape(b, nc, L, h, dh)
+    kg = pad_t(k).reshape(b, nc, L, h, dh)
+    vg = pad_t(v).reshape(b, nc, L, h, dh)
+    # padded gate steps: f=0 (decay 1), i=-inf (no contribution)
+    ig = pad_t(i_pre + 0.0)
+    if pad:
+        ig = ig.at[:, t:].set(NEG_INF)
+    ig = ig.reshape(b, nc, L, h)
+    fg = pad_t(f_pre).reshape(b, nc, L, h)
+
+    causal = jnp.tril(jnp.ones((L, L), jnp.bool_))
+
+    def chunk_step(carry, xs):
+        c_prev, n_prev, m_prev = carry          # (B,H,Dh,Dh) (B,H,Dh) (B,H)
+        qc, kc, vc, ic, fc = xs                 # (B,L,H,*) / (B,L,H)
+        qc = qc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32) * kscale
+        vc = vc.astype(jnp.float32)
+        a = jnp.cumsum(fc, axis=1)              # (B,L,H)
+        w = ic - a
+        u = jax.lax.cummax(w, axis=1)
+        M = jnp.maximum(m_prev[:, None], u)     # (B,L,H)
+        inter = jnp.exp(m_prev[:, None] - M)    # (B,L,H)
+        # D[t,s] = exp(w_s - M_t), s<=t
+        D = jnp.exp(w[:, None, :, :] - M[:, :, None, :])  # (B,Lt,Ls,H)
+        D = jnp.where(causal[None, :, :, None], D, 0.0)
+        qk = jnp.einsum("bthd,bshd->btsh", qc, kc)
+        S = qk * D
+        num = jnp.einsum("btsh,bshd->bthd", S, vc) \
+            + inter[..., None] * jnp.einsum("bhde,bthe->bthd", c_prev, qc)
+        den = jnp.sum(S, axis=2) \
+            + inter * jnp.einsum("bthd,bhd->bth", qc, n_prev)
+        m_t = a + M                             # (B,L,H)
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # end-of-chunk state
+        a_L, M_L = a[:, -1], M[:, -1]           # (B,H)
+        coef = jnp.exp(w - M_L[:, None])        # (B,L,H)
+        decay = jnp.exp(m_prev - M_L)           # (B,H)
+        c_new = decay[..., None, None] * c_prev \
+            + jnp.einsum("blh,blhd,blhe->bhde", coef, vc, kc)
+        n_new = decay[..., None] * n_prev \
+            + jnp.einsum("blh,blhd->bhd", coef, kc)
+        m_new = a_L + M_L
+        return (c_new, n_new, m_new), hout
+
+    xs = tuple(jnp.moveaxis(z, 1, 0)
+               for z in (qg, kg, vg, ig, fg))
+    (c, n, m), hs = jax.lax.scan(
+        chunk_step, (state["c"], state["n"], state["m"]), xs)
+    hout = jnp.moveaxis(hs, 0, 1).reshape(b, nc * L, h, dh)[:, :t]
+    return hout, {"c": c, "n": n, "m": m}
+
+
+def mlstm_forward(p, x, cfg, policy, *, state=None, mode="train"):
+    b, t, d = x.shape
+    nh = cfg.n_heads
+    up = qlinear.linear(x, p["w_up"], None, policy)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = conv1d_causal(p["conv"], jax.nn.silu(xm), conv_state)
+    d_inner = xm.shape[-1]
+    dh = d_inner // nh
+    q = qlinear.linear(xc, p["wq"], None, policy).reshape(b, t, nh, dh)
+    k = qlinear.linear(xc, p["wk"], None, policy).reshape(b, t, nh, dh)
+    v = qlinear.linear(xm, p["wv"], None, policy).reshape(b, t, nh, dh)
+    i_pre = (xc.astype(jnp.float32) @ p["w_igate"].astype(jnp.float32)
+             + p["igate_bias"])
+    f_pre = jax.nn.log_sigmoid(
+        xc.astype(jnp.float32) @ p["w_fgate"].astype(jnp.float32)
+        + p["fgate_bias"])
+    st = state["mem"] if state is not None else {
+        "c": jnp.zeros((b, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((b, nh, dh), jnp.float32),
+        "m": jnp.zeros((b, nh), jnp.float32)}
+    chunk = getattr(cfg, "mlstm_chunk", 64)
+    if t > 1 and chunk > 1:
+        # chunkwise-parallel form for train/prefill (§Perf iteration X)
+        hout, new_mem = _mlstm_chunkwise(q, k, v, i_pre, f_pre, st,
+                                         chunk=chunk)
+    else:
+        hout, new_mem = _mlstm_core(q, k, v, i_pre, f_pre, st)
+    hout = hout.reshape(b, t, d_inner).astype(x.dtype)
+    hout = rms_norm(hout, p["outnorm"])
+    y = qlinear.linear(hout * jax.nn.silu(z), p["w_down"], None, policy)
+    new_state = None
+    if state is not None:
+        new_state = {"mem": new_mem, "conv": new_conv}
+    return logical(y, "batch", "seq", "embed"), new_state
+
+
+def mlstm_init_state(batch, d_model, n_heads, conv_width=4):
+    d_inner = 2 * d_model
+    dh = d_inner // n_heads
+    return {"mem": {"c": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+                    "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+                    "m": jnp.zeros((batch, n_heads), jnp.float32)},
+            "conv": jnp.zeros((batch, conv_width - 1, d_inner),
+                              jnp.float32)}
+
+
+def slstm_params(key, d_model, n_heads, dtype=jnp.float32):
+    ks = jax.random.split(key, 9)
+    dh = d_model // n_heads
+    ff = int(4 * d_model / 3) // 2 * 2  # post up-proj (pf=4/3), even
+    return {
+        "wz": _init(ks[0], (d_model, d_model), dtype=dtype),
+        "wi_gate": _init(ks[1], (d_model, d_model), 0.01, dtype=dtype),
+        "wf_gate": _init(ks[2], (d_model, d_model), 0.01, dtype=dtype),
+        "wo_gate": _init(ks[3], (d_model, d_model), 0.01, dtype=dtype),
+        # block-diagonal recurrent weights, per head: (H, Dh, Dh)
+        "r_z": (jax.random.normal(ks[4], (n_heads, dh, dh)) /
+                math.sqrt(dh)).astype(dtype),
+        "r_i": (jax.random.normal(ks[5], (n_heads, dh, dh)) * 0.01
+                ).astype(dtype),
+        "r_f": (jax.random.normal(ks[6], (n_heads, dh, dh)) * 0.01
+                ).astype(dtype),
+        "fgate_bias": jnp.full((d_model,), 3.0),
+        "mlp": {"wu2": _init(ks[7], (d_model, ff), dtype=dtype),
+                "wd2": _init(ks[8], (ff, d_model), dtype=dtype)},
+    }
+
+
+def _slstm_core(p, zi, ii, fi, oi, n_heads, state):
+    """True recurrence (h feeds back through R) — scan over time.
+    zi/ii/fi/oi: (B,T,D) pre-activations from the input side."""
+    b, t, d = zi.shape
+    dh = d // n_heads
+
+    def blockdiag(h, r):  # h: (B,D) x r: (H,Dh,Dh)
+        hh = h.reshape(b, n_heads, dh)
+        return jnp.einsum("bhd,hde->bhe", hh,
+                          r.astype(jnp.float32)).reshape(b, d)
+
+    def step(carry, xs):
+        c, n, m, h = carry
+        zt, it, ft, ot = xs
+        z = jnp.tanh(zt + blockdiag(h, p["r_z"]))
+        ipre = it + blockdiag(h, p["r_i"])
+        fpre = ft + blockdiag(h, p["r_f"])
+        opre = ot
+        m_new = jnp.maximum(jax.nn.log_sigmoid(fpre) + m, ipre)
+        i_ = jnp.exp(ipre - m_new)
+        f_ = jnp.exp(jax.nn.log_sigmoid(fpre) + m - m_new)
+        c = f_ * c + i_ * z
+        n = f_ * n + i_
+        h_new = jax.nn.sigmoid(opre) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h_new), h_new
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (zi, ii, fi, oi))
+    (c, n, m, h), hs = jax.lax.scan(
+        step, (state["c"], state["n"], state["m"], state["h"]), xs)
+    return jnp.moveaxis(hs, 0, 1), {"c": c, "n": n, "m": m, "h": h}
+
+
+def slstm_forward(p, x, cfg, policy, *, state=None, mode="train"):
+    b, t, d = x.shape
+    zi = qlinear.linear(x, p["wz"], None, policy)
+    ii = qlinear.linear(x, p["wi_gate"], None, policy)
+    fi = qlinear.linear(x, p["wf_gate"], None, policy) + p["fgate_bias"]
+    oi = qlinear.linear(x, p["wo_gate"], None, policy)
+    st = state["mem"] if state is not None else {
+        "c": jnp.zeros((b, d), jnp.float32),
+        "n": jnp.ones((b, d), jnp.float32),
+        "m": jnp.zeros((b, d), jnp.float32),
+        "h": jnp.zeros((b, d), jnp.float32)}
+    hs, new_mem = _slstm_core(p, zi, ii, fi, oi, cfg.n_heads, st)
+    hs = hs.astype(x.dtype)
+    # post up-projection MLP (xLSTM sLSTM block, pf = 4/3)
+    u = jax.nn.gelu(qlinear.linear(hs, p["mlp"]["wu2"], None, policy))
+    y = qlinear.linear(u, p["mlp"]["wd2"], None, policy)
+    new_state = {"mem": new_mem} if state is not None else None
+    return logical(y, "batch", "seq", "embed"), new_state
+
+
+def slstm_init_state(batch, d_model):
+    return {"mem": {"c": jnp.zeros((batch, d_model), jnp.float32),
+                    "n": jnp.ones((batch, d_model), jnp.float32),
+                    "m": jnp.zeros((batch, d_model), jnp.float32),
+                    "h": jnp.zeros((batch, d_model), jnp.float32)}}

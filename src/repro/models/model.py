@@ -1,0 +1,376 @@
+"""Model assembly: block builders, scanned layer stacks, caches, and the
+unified forward for train / prefill / decode across all assigned families.
+
+Layer stacks scan over "groups" — one group = one period of
+`cfg.block_pattern` — with per-period-position params stacked on a leading
+group axis (MaxText-style). Remainder layers live in `tail`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.core.policy import QuantPolicy
+from repro.configs.base import ArchConfig
+from repro.sharding.axes import logical
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+# ==========================================================================
+# Per-block param builders / forwards
+# ==========================================================================
+def block_params(key, cfg: ArchConfig, btype: str, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    if btype in ("attn", "local_attn"):
+        return {"ln1": L.rms_norm_params(d),
+                "attn": L.attention_params(ks[0], d, cfg.n_heads,
+                                           cfg.n_kv_heads, cfg.head_dim,
+                                           cfg.qkv_bias, dtype),
+                "ln2": L.rms_norm_params(d),
+                "mlp": (L.swiglu_params(ks[1], d, cfg.d_ff, dtype)
+                        if cfg.mlp_kind == "swiglu" else
+                        L.gelu_mlp_params(ks[1], d, cfg.d_ff, dtype))}
+    if btype == "moe":
+        return {"ln1": L.rms_norm_params(d),
+                "attn": L.attention_params(ks[0], d, cfg.n_heads,
+                                           cfg.n_kv_heads, cfg.head_dim,
+                                           cfg.qkv_bias, dtype),
+                "ln2": L.rms_norm_params(d),
+                "moe": L.moe_params(ks[1], d, cfg.d_ff, cfg.n_experts,
+                                    dtype)}
+    if btype == "rglru":
+        return {"ln1": L.rms_norm_params(d),
+                "rec": L.rglru_params(ks[0], d, cfg.d_rnn or d, dtype),
+                "ln2": L.rms_norm_params(d),
+                "mlp": L.swiglu_params(ks[1], d, cfg.d_ff, dtype)}
+    if btype == "mlstm":
+        return {"ln1": L.rms_norm_params(d),
+                "mlstm": L.mlstm_params(ks[0], d, cfg.n_heads, dtype)}
+    if btype == "slstm":
+        return {"ln1": L.rms_norm_params(d),
+                "slstm": L.slstm_params(ks[0], d, cfg.n_heads, dtype)}
+    if btype == "encdec_attn":  # decoder block with cross-attention
+        return {"ln1": L.rms_norm_params(d),
+                "attn": L.attention_params(ks[0], d, cfg.n_heads,
+                                           cfg.n_kv_heads, cfg.head_dim,
+                                           cfg.qkv_bias, dtype),
+                "lnx": L.rms_norm_params(d),
+                "xattn": L.attention_params(ks[1], d, cfg.n_heads,
+                                            cfg.n_kv_heads, cfg.head_dim,
+                                            cfg.qkv_bias, dtype),
+                "ln2": L.rms_norm_params(d),
+                "mlp": (L.swiglu_params(ks[2], d, cfg.d_ff, dtype)
+                        if cfg.mlp_kind == "swiglu" else
+                        L.gelu_mlp_params(ks[2], d, cfg.d_ff, dtype))}
+    raise ValueError(btype)
+
+
+def block_cache(cfg: ArchConfig, btype: str, batch: int, max_len: int,
+                enc_len: int = 0, dtype=jnp.bfloat16, kv_bits: int = 0):
+    d = cfg.d_model
+    if btype in ("attn", "moe"):
+        return {"kv": L.make_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                      cfg.head_dim, dtype, kv_bits)}
+    if btype == "local_attn":
+        ring = min(cfg.window, max_len)
+        return {"kv": L.make_kv_cache(batch, ring, cfg.n_kv_heads,
+                                      cfg.head_dim, dtype, kv_bits)}
+    if btype == "rglru":
+        return {"rec": L.rglru_init_state(batch, cfg.d_rnn or d)}
+    if btype == "mlstm":
+        return {"mlstm": L.mlstm_init_state(batch, d, cfg.n_heads)}
+    if btype == "slstm":
+        return {"slstm": L.slstm_init_state(batch, d)}
+    if btype == "encdec_attn":
+        return {"kv": L.make_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                      cfg.head_dim, dtype, kv_bits),
+                "xkv": L.make_kv_cache(batch, enc_len, cfg.n_kv_heads,
+                                       cfg.head_dim, dtype, 0)}
+    raise ValueError(btype)
+
+
+def block_forward(p, x, positions, cfg: ArchConfig, policy: QuantPolicy,
+                  btype: str, cache=None, mode="train", enc_out=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if btype in ("attn", "local_attn", "moe"):
+        window = cfg.window if btype == "local_attn" else 0
+        h, kv = L.attention_forward(
+            p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+            cfg, policy, window=window, cache=None if cache is None
+            else cache["kv"], mode=mode)
+        x = x + h
+        xm = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if btype == "moe":
+            h2, aux = L.moe_layer(p["moe"], xm, cfg, policy)
+        elif cfg.mlp_kind == "swiglu":
+            h2 = L.swiglu(p["mlp"], xm, policy)
+        else:
+            h2 = L.gelu_mlp(p["mlp"], xm, policy)
+        x = x + h2
+        return x, (None if cache is None else {"kv": kv}), aux
+    if btype == "rglru":
+        h, st = L.rglru_forward(p["rec"],
+                                L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                                cfg, policy,
+                                state=None if cache is None
+                                else cache["rec"], mode=mode)
+        x = x + h
+        h2 = L.swiglu(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps),
+                      policy)
+        x = x + h2
+        return x, (None if cache is None else {"rec": st}), aux
+    if btype == "mlstm":
+        h, st = L.mlstm_forward(p["mlstm"],
+                                L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                                cfg, policy,
+                                state=None if cache is None
+                                else cache["mlstm"], mode=mode)
+        return x + h, (None if cache is None else {"mlstm": st}), aux
+    if btype == "slstm":
+        h, st = L.slstm_forward(p["slstm"],
+                                L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                                cfg, policy,
+                                state=None if cache is None
+                                else cache["slstm"], mode=mode)
+        return x + h, (None if cache is None else {"slstm": st}), aux
+    if btype == "encdec_attn":
+        h, kv = L.attention_forward(
+            p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+            cfg, policy, cache=None if cache is None else cache["kv"],
+            mode=mode)
+        x = x + h
+        xkv = None if cache is None else cache["xkv"]
+        if mode == "decode":
+            hx, _ = L.attention_forward(
+                p["xattn"], L.rms_norm(x, p["lnx"], cfg.norm_eps),
+                positions, cfg, policy, cache=xkv, mode="decode",
+                kv_x=jnp.zeros_like(x), use_rope=False)
+            new_xkv = xkv
+        else:
+            hx, new_xkv = L.attention_forward(
+                p["xattn"], L.rms_norm(x, p["lnx"], cfg.norm_eps),
+                positions, cfg, policy, causal=False, cache=xkv,
+                mode=mode, kv_x=enc_out, use_rope=False)
+        x = x + hx
+        xm = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        h2 = (L.swiglu(p["mlp"], xm, policy) if cfg.mlp_kind == "swiglu"
+              else L.gelu_mlp(p["mlp"], xm, policy))
+        x = x + h2
+        new_cache = None if cache is None else {"kv": kv, "xkv": new_xkv}
+        return x, new_cache, aux
+    raise ValueError(btype)
+
+
+# ==========================================================================
+# The Model
+# ==========================================================================
+class Model:
+    """Functional LM bundle for one ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig, policy: QuantPolicy = QuantPolicy(),
+                 remat: bool = True):
+        self.cfg = cfg
+        self.policy = policy
+        self.remat = remat
+        period = len(cfg.block_pattern)
+        self.n_groups = cfg.n_layers // period
+        self.n_tail = cfg.n_layers % period
+
+    # ------------------------------------------------------------- init
+    def init(self, key, dtype=jnp.float32) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        vp = cfg.padded_vocab  # TP-divisible table (pad cols masked)
+        params: Params = {
+            "embed": {"table": (jax.random.normal(
+                keys[0], (vp, cfg.d_model)) * 0.02).astype(dtype)},
+            "final_norm": L.rms_norm_params(cfg.d_model),
+            "lm_head": {"w_out": (jax.random.normal(
+                keys[1], (cfg.d_model, vp))
+                / math.sqrt(cfg.d_model)).astype(dtype)},
+        }
+        # stacked per-period-position block params
+        period = len(cfg.block_pattern)
+
+        def one_group(k):
+            gks = jax.random.split(k, period)
+            return {str(j): block_params(gks[j], cfg, cfg.block_pattern[j],
+                                         dtype)
+                    for j in range(period)}
+
+        gkeys = jax.random.split(keys[2], max(self.n_groups, 1))
+        params["blocks"] = jax.vmap(one_group)(gkeys) if self.n_groups \
+            else {}
+        tks = jax.random.split(keys[3], max(self.n_tail, 1))
+        params["tail"] = [block_params(tks[j], cfg, cfg.block_pattern[j],
+                                       dtype)
+                          for j in range(self.n_tail)]
+        if cfg.enc_dec:
+            eks = jax.random.split(keys[4], max(cfg.n_enc_layers, 1))
+
+            def one_enc(k):
+                return block_params(k, cfg, "attn", dtype)
+
+            params["enc_blocks"] = jax.vmap(one_enc)(eks)
+            params["enc_norm"] = L.rms_norm_params(cfg.d_model)
+        if cfg.frontend:
+            params["frontend_proj"] = {
+                "w_in": (jax.random.normal(
+                    keys[5], (cfg.frontend_dim, cfg.d_model))
+                    / math.sqrt(cfg.frontend_dim)).astype(dtype),
+                "b_in": jnp.zeros((cfg.d_model,), dtype)}
+        return params
+
+    # ------------------------------------------------------------ caches
+    def init_caches(self, batch: int, max_len: int, enc_len: int = 0,
+                    dtype=jnp.bfloat16):
+        cfg = self.cfg
+        kvb = self.policy.kv_bits
+        period = len(cfg.block_pattern)
+
+        def one_group(_):
+            return {str(j): block_cache(cfg, cfg.block_pattern[j], batch,
+                                        max_len, enc_len, dtype, kvb)
+                    for j in range(period)}
+
+        caches = {
+            "blocks": (jax.vmap(one_group)(jnp.arange(self.n_groups))
+                       if self.n_groups else {}),
+            "tail": [block_cache(cfg, cfg.block_pattern[j], batch, max_len,
+                                 enc_len, dtype, kvb)
+                     for j in range(self.n_tail)],
+        }
+        return caches
+
+    # ----------------------------------------------------------- forward
+    def _embed_inputs(self, params, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        pol = self.policy
+        cdt = jnp.dtype(pol.compute_dtype)
+        tok = batch["tokens"]
+        x = params["embed"]["table"][tok].astype(cdt) \
+            * math.sqrt(cfg.d_model)
+        if cfg.frontend == "vit" and "patch_embeds" in batch:
+            pe = qlinear.linear(batch["patch_embeds"].astype(cdt),
+                                params["frontend_proj"]["w_in"],
+                                params["frontend_proj"]["b_in"], pol)
+            x = jnp.concatenate([pe, x], axis=1)
+        return logical(x, "batch", "seq", "embed")
+
+    def _encode(self, params, frames: jax.Array):
+        """Audio/enc-dec encoder over stub frame embeddings."""
+        cfg = self.cfg
+        pol = self.policy
+        cdt = jnp.dtype(pol.compute_dtype)
+        x = qlinear.linear(frames.astype(cdt),
+                           params["frontend_proj"]["w_in"],
+                           params["frontend_proj"]["b_in"], pol)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def body(carry, p):
+            h, _, _ = block_forward(p, carry, positions, cfg, pol, "attn",
+                                    mode="encode")
+            return h, None
+
+        fn = jax.checkpoint(body) if self.remat else body
+        x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+        return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def forward(self, params, batch: Dict[str, jax.Array], *,
+                mode: str = "train", caches=None, positions=None,
+                enc_out=None, last_only: bool = False):
+        """Returns (logits, new_caches, aux).
+
+        train/prefill: batch["tokens"] (B, T) [+ patch_embeds / frames]
+        decode:        batch["tokens"] (B, 1), batch["pos"] (B,)
+        last_only: project only the final position through the LM head
+        (prefill serving path: avoids the (B, T, V) logits tensor).
+        """
+        cfg = self.cfg
+        pol = self.policy
+        if cfg.enc_dec and mode != "decode" and enc_out is None:
+            enc_out = self._encode(params, batch["frames"])
+
+        x = self._embed_inputs(params, batch)
+        b, t = x.shape[:2]
+        if positions is None:
+            if mode == "decode":
+                positions = batch["pos"][:, None]
+            else:
+                positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+        aux0 = jnp.zeros((), jnp.float32)
+        period = len(cfg.block_pattern)
+
+        def body(carry, xs):
+            h, aux = carry
+            if caches is None:
+                pg, cg = xs, None
+            else:
+                pg, cg = xs
+            new_cg = {}
+            for j in range(period):
+                bt = cfg.block_pattern[j]
+                c_j = None if cg is None else cg[str(j)]
+                h, nc, a = block_forward(pg[str(j)], h, positions, cfg,
+                                         pol, bt, cache=c_j, mode=mode,
+                                         enc_out=enc_out)
+                if nc is not None:
+                    new_cg[str(j)] = nc
+                aux = aux + a
+            return (h, aux), (new_cg if caches is not None else None)
+
+        fn = jax.checkpoint(body) if (self.remat and mode == "train") \
+            else body
+        if self.n_groups:
+            xs = (params["blocks"] if caches is None
+                  else (params["blocks"], caches["blocks"]))
+            (x, aux), new_block_caches = jax.lax.scan(fn, (x, aux0), xs)
+        else:
+            aux, new_block_caches = aux0, None
+
+        new_tail = []
+        for j in range(self.n_tail):
+            bt = cfg.block_pattern[j]
+            c_j = None if caches is None else caches["tail"][j]
+            x, nc, a = block_forward(params["tail"][j], x, positions, cfg,
+                                     pol, bt, cache=c_j, mode=mode,
+                                     enc_out=enc_out)
+            new_tail.append(nc)
+            aux = aux + a
+
+        if last_only:
+            x = x[:, -1:]
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["lm_head"]["w_out"]
+        if cfg.tie_embeddings:
+            head = params["embed"]["table"].T
+        head_pol = pol if pol.quantize_embed else \
+            dataclasses.replace(pol, method="none")
+        logits = qlinear.qmatmul(x, head, head_pol).astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab:
+            # mask pad columns (elementwise along the sharded vocab dim)
+            col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                           logits.ndim - 1)
+            logits = jnp.where(col >= cfg.vocab, jnp.float32(-1e9), logits)
+        logits = logical(logits, "batch", "seq", "vocab")
+        new_caches = None
+        if caches is not None:
+            new_caches = {"blocks": new_block_caches, "tail": new_tail}
+        return logits, new_caches, aux
+
+
+def build_model(cfg: ArchConfig, policy: QuantPolicy = QuantPolicy(),
+                remat: bool = True) -> Model:
+    return Model(cfg, policy, remat)

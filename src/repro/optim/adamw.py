@@ -1,0 +1,93 @@
+"""AdamW, hand-rolled (no optax offline), with distributed-memory options:
+moments in bf16 (halves optimizer HBM — the ZeRO-style sharding of the
+moment tensors comes free from the param PartitionSpecs) and global-norm
+clipping computed in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment (pytree like params)
+    nu: Any          # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32   # bf16 at scale: halves optimizer HBM
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(z, params),
+                          nu=jax.tree_util.tree_map(z, params))
+
+    def _lr_at(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        # global-norm clip in fp32
+        if self.clip_norm:
+            gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree_util.tree_leaves(grads))
+            gnorm = jnp.sqrt(gsq)
+            scale = jnp.minimum(1.0, self.clip_norm /
+                                jnp.maximum(gnorm, 1e-12))
+        else:
+            gnorm = jnp.zeros(())
+            scale = jnp.ones(())
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr_at(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+            mh = m32 / c1
+            vh = v32 / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return (newp.astype(p.dtype), m32.astype(self.moment_dtype),
+                    v32.astype(self.moment_dtype))
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        newp = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        newm = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        newv = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        return newp, AdamWState(step=step, mu=newm, nu=newv), \
+            {"grad_norm": gnorm, "lr": lr * jnp.ones(())}
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

@@ -1,0 +1,2 @@
+from . import hw
+from .analysis import Roofline, analyze, collective_bytes, count_collectives

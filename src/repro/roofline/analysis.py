@@ -1,0 +1,174 @@
+"""Roofline-term extraction from a compiled (dry-run) executable.
+
+compute term    = per-chip HLO FLOPs / 197 TFLOP/s        (cost_analysis is
+memory term     = per-chip HLO bytes / 819 GB/s            post-SPMD, i.e.
+collective term = per-chip collective bytes / 50 GB/s      already per-chip)
+
+Collective bytes come from parsing the optimized HLO text: operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+with ring-traffic multipliers (all-reduce moves ~2x its operand bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from . import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+# result-side shapes of collective ops in optimized HLO, e.g.:
+#   %all-reduce.5 = f32[1024,512]{1,0} all-reduce(...)
+#   ... = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-reduce(...)
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+# bytes moved per chip relative to the (per-chip) result bytes
+_TRAFFIC_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather ring
+    "all-gather": 1.0,          # result ≈ gathered bytes received
+    "reduce-scatter": 1.0,      # sends ≈ input ≈ result × n ≈ … (lower bd)
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind traffic bytes (per chip) from optimized HLO text."""
+    out: Dict[str, float] = {}
+    for shape_str, kind in _COLL_RE.findall(hlo_text):
+        b = _shape_bytes(shape_str) * _TRAFFIC_FACTOR[kind]
+        out[kind] = out.get(kind, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for _, kind in _COLL_RE.findall(hlo_text):
+        counts[kind] = counts.get(kind, 0) + 1
+    return counts
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    n_chips: int
+    model_flops_global: float = 0.0   # 6·N·D (train) / 2·N·tokens (decode)
+    arg_bytes_per_chip: float = 0.0   # resident state (params+caches+opt)
+    raw_cost_analysis: Optional[dict] = None   # XLA's own (while-once)
+    collective_counts: Optional[dict] = None
+    flags: Optional[dict] = None
+
+    @property
+    def t_compute(self) -> float:
+        return hw.compute_time_s(self.flops_per_chip)
+
+    @property
+    def t_memory(self) -> float:
+        return hw.memory_time_s(self.bytes_per_chip)
+
+    @property
+    def t_collective(self) -> float:
+        return hw.collective_time_s(self.coll_bytes_per_chip)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time: the dominant term (perfect overlap model)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global): remat/waste diagnostic."""
+        hlo_global = self.flops_per_chip * self.n_chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilisation at the roofline bound."""
+        if not self.t_bound:
+            return 0.0
+        return (self.model_flops_global /
+                (self.n_chips * hw.PEAK_FLOPS_BF16 * self.t_bound))
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "arg_bytes_per_chip": self.arg_bytes_per_chip,
+            "n_chips": self.n_chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_bound_s": self.t_bound,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "raw_cost_analysis": self.raw_cost_analysis,
+            "collective_counts": self.collective_counts,
+            "flags": self.flags,
+        }
+
+
+def analyze(compiled, n_chips: int,
+            model_flops_global: float = 0.0) -> Roofline:
+    """Roofline terms from a compiled executable.
+
+    Uses the trip-count-aware HLO walker (hlo_stats) as the source of
+    truth: XLA's cost_analysis() counts while bodies once, understating
+    scanned-layer models by ~n_layers×. cost_analysis values are kept as
+    cross-check fields in `raw_cost_analysis`.
+    """
+    from . import hlo_stats
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    st = hlo_stats.analyze_hlo(hlo)
+    mem = compiled.memory_analysis()
+    arg_bytes = float(getattr(mem, "argument_size_in_bytes", 0) or 0)
+    r = Roofline(
+        flops_per_chip=float(st.flops),
+        bytes_per_chip=float(st.bytes),
+        # HLO text is the per-device SPMD module -> already per-chip
+        coll_bytes_per_chip=float(st.collective_bytes),
+        n_chips=n_chips,
+        model_flops_global=model_flops_global,
+        arg_bytes_per_chip=arg_bytes,
+    )
+    r.raw_cost_analysis = {"flops": float(ca.get("flops", 0.0)),
+                           "bytes_accessed":
+                           float(ca.get("bytes accessed", 0.0))}
+    r.collective_counts = dict(st.collective_counts)
+    r.flags = {"unknown_trip_counts": st.unknown_trip_counts,
+               "custom_call_matmuls": st.custom_call_matmuls}
+    return r

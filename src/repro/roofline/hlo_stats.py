@@ -1,0 +1,483 @@
+"""Trip-count-aware statistics over optimized HLO text.
+
+XLA's `Executable.cost_analysis()` counts each computation ONCE — a
+lax.scan body's FLOPs are not multiplied by the trip count, which would
+understate scanned-layer models by ~n_layers×. This walker parses the
+optimized HLO text instead:
+
+  · builds the computation table (instruction -> result shape),
+  · counts dot FLOPs per computation (folding fusion-called computations
+    into their caller),
+  · estimates HBM bytes per *loop-level* computation (operands + results
+    of top-level instructions; fusion internals excluded — matching
+    fusion semantics),
+  · sums collective traffic (result bytes × ring factor),
+  · propagates multiplicity through the call graph using the
+    `known_trip_count` backend_config on `while` ops.
+
+Validated against unrolled-loop cost_analysis in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s+\(.*\)\s*->")
+_SIMPLE_SHAPE = re.compile(r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?")
+_OPCODE = re.compile(r"([\w\-]+)\(")
+_WHILE_META = re.compile(
+    r"condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_TRIP = re.compile(r"known_trip_count\W+n\W+(\d+)")
+_CALLS = re.compile(r"calls=%([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_TRAFFIC_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
+                   "reduce-scatter": 1.0, "all-to-all": 1.0,
+                   "collective-permute": 1.0}
+# ops whose "result" is a view / no HBM traffic of its own
+_VIEW_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+# ops that read only a slice of their (possibly huge) operand
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+# ---- virtual fusion (TPU model) -------------------------------------------
+# The CPU backend fuses far less aggressively than TPU, so top-level HLO is
+# full of bare elementwise chains that a TPU compiler would fuse into their
+# consumers. We model XLA's core instruction-fusion heuristic: a producer
+# with EXACTLY ONE consumer, where producer is fusable and the consumer can
+# absorb it, keeps its result in registers/VMEM — its HBM write (and the
+# consumer's corresponding read) is elided.
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "logistic", "select", "compare", "and", "or", "xor", "not",
+    "negate", "abs", "sign", "sqrt", "rsqrt", "cbrt", "power", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "clamp", "convert",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "is-finite", "cosine", "sine", "atan2", "remainder", "rem",
+    "bitcast-convert", "reduce-precision", "stochastic-convert",
+}
+# producers whose single-consumer write can stay on-chip (incl. dot/reduce
+# epilogue fusion, broadcast-into-consumer)
+_FUSABLE_PRODUCER = _ELEMENTWISE | {"broadcast", "dot", "convolution",
+                                    "reduce", "transpose", "reshape",
+                                    "copy", "pad", "reverse"}
+# consumers that absorb a fused producer (loop/input fusion targets)
+_FUSABLE_CONSUMER = _ELEMENTWISE | {"reduce", "dynamic-update-slice",
+                                    "broadcast", "transpose", "reshape",
+                                    "copy", "pad", "reverse", "fusion",
+                                    "concatenate", "scatter", "select"}
+
+
+def _virtual_fusion(comp: "Computation"):
+    """(fused_writes, fused_reads): results that never hit HBM and the
+    corresponding (consumer, operand) read edges to skip."""
+    consumers: Dict[str, List["Instr"]] = {}
+    for ins in comp.instrs:
+        for o in set(_operand_names(ins.line, ins.opcode)):
+            if o in comp.symbols:
+                consumers.setdefault(o, []).append(ins)
+    fused_writes = set()
+    fused_reads = set()
+    for ins in comp.instrs:
+        if ins.opcode not in _FUSABLE_PRODUCER:
+            continue
+        cons = consumers.get(ins.name, [])
+        if len(cons) == 1 and cons[0].opcode in _FUSABLE_CONSUMER:
+            fused_writes.add(ins.name)
+            fused_reads.add((cons[0].name, ins.name))
+    return fused_writes, fused_reads
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symbols: Dict[str, str]          # instr name -> result shape string
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):          # tuple shape: balanced-paren scan
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        shape = rest[:end + 1]
+        rem = rest[end + 1:].lstrip()
+    else:
+        m = _SIMPLE_SHAPE.match(rest)
+        if not m:
+            return None
+        shape = m.group(0)
+        rem = rest[m.end():].lstrip()
+    m2 = _OPCODE.match(rem)
+    if not m2:
+        return None
+    return Instr(name, shape, m2.group(1), line)
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        hdr = _COMP_HDR.match(stripped)
+        if hdr and line.rstrip().endswith("{"):
+            cur = Computation(hdr.group(1), [], {})
+            comps[cur.name] = cur
+            # computation parameters appear as instruction lines too
+            continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins:
+            cur.instrs.append(ins)
+            cur.symbols[ins.name] = ins.shape
+    return comps
+
+
+def _operand_names(line: str, opcode: str) -> List[str]:
+    """%refs inside the operand parens of the instruction."""
+    i = line.find(opcode + "(")
+    if i < 0:
+        return []
+    j = i + len(opcode) + 1
+    depth = 1
+    k = j
+    while k < len(line) and depth:
+        if line[k] == "(":
+            depth += 1
+        elif line[k] == ")":
+            depth -= 1
+        k += 1
+    return re.findall(r"%([\w.\-]+)", line[j:k - 1])
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res_elems = 0
+    for _, dims in _shape_dims(ins.shape):
+        n = 1
+        for d in dims:
+            n *= d
+        res_elems += n
+    ops = _operand_names(ins.line, ins.opcode)
+    if not ops:
+        return 0.0
+    lhs_shape = comp.symbols.get(ops[0], "")
+    lhs_dims_all = _shape_dims(lhs_shape)
+    if not lhs_dims_all:
+        return 0.0
+    lhs_dims = lhs_dims_all[0][1]
+    m = _DOT_LHS_CONTRACT.search(ins.line)
+    contract = 1
+    if m:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * res_elems * contract
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    unknown_trip_counts: int = 0
+    custom_call_matmuls: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    comps = parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry = m.group(1)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    # fusion-closure flops per computation (dots inside called fusions
+    # attribute to the caller)
+    flops_cache: Dict[str, float] = {}
+
+    def comp_flops(cname: str, seen=()) -> float:
+        if cname in flops_cache:
+            return flops_cache[cname]
+        comp = comps.get(cname)
+        if comp is None or cname in seen:
+            return 0.0
+        total = 0.0
+        for ins in comp.instrs:
+            if ins.opcode in ("dot", "convolution"):
+                total += _dot_flops(ins, comp)
+            elif ins.opcode == "fusion":
+                m = _CALLS.search(ins.line)
+                if m:
+                    total += comp_flops(m.group(1), seen + (cname,))
+        flops_cache[cname] = total
+        return total
+
+    stats = HloStats()
+    fusion_cache: Dict[str, Tuple[set, set]] = {}
+    # BFS over loop-level computations with multiplicity
+    pending: List[Tuple[str, float]] = [(entry, 1.0)]
+    visited_mult: Dict[str, float] = {}
+    while pending:
+        cname, mult = pending.pop()
+        visited_mult[cname] = visited_mult.get(cname, 0.0) + mult
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        if cname not in fusion_cache:
+            fusion_cache[cname] = _virtual_fusion(comp)
+        fused_writes, fused_reads = fusion_cache[cname]
+        stats.flops += comp_flops(cname) * mult
+        for ins in comp.instrs:
+            opb = ins.opcode
+            if opb == "while":
+                m = _WHILE_META.search(ins.line)
+                t = _TRIP.search(ins.line)
+                trip = float(t.group(1)) if t else 1.0
+                if not t:
+                    stats.unknown_trip_counts += 1
+                if m:
+                    pending.append((m.group(2), mult * trip))  # body
+                continue
+            if opb == "conditional":
+                mb = _BRANCHES.search(ins.line)
+                if mb:
+                    for b in re.findall(r"%([\w.\-]+)", mb.group(1)):
+                        pending.append((b, mult))
+                continue
+            if opb == "call":
+                m = _CALLS.search(ins.line) or re.search(
+                    r"to_apply=%([\w.\-]+)", ins.line)
+                if m:
+                    pending.append((m.group(1), mult))
+            if opb == "custom-call" and re.search(
+                    r"matmul|gemm|dot", ins.line, re.I):
+                stats.custom_call_matmuls += 1
+            # ---- bytes: top-level instruction operands + result
+            base = opb.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES:
+                rb = _shape_bytes(ins.shape) * _TRAFFIC_FACTOR[base]
+                # -done ops re-reference the -start result: count once
+                if not opb.endswith("-done"):
+                    stats.collective_bytes += rb * mult
+                    stats.collective_counts[base] = \
+                        stats.collective_counts.get(base, 0.0) + mult
+            stats.bytes += _instr_bytes(ins, comp, comps, fused_writes,
+                                        fused_reads) * mult
+    return stats
+
+
+def _instr_bytes(ins: Instr, comp: Computation,
+                 comps: Dict[str, Computation],
+                 fused_writes=frozenset(),
+                 fused_reads=frozenset()) -> float:
+    """HBM traffic estimate for one top-level instruction.
+
+    Mirrors XLA's utilization model where it matters: slicing ops read
+    only their result-sized window; dynamic-update-slice writes only the
+    update region; fusion operands consumed solely through slices count
+    at slice size (the lax.scan xs pattern). Virtual fusion (TPU model):
+    writes in `fused_writes` and read edges in `fused_reads` stay on-chip.
+    """
+    op = ins.opcode
+    if op in _VIEW_OPS or op in ("while", "conditional", "call"):
+        return 0.0
+    if op.endswith("-done"):
+        return 0.0                       # aliases the -start buffer
+    rb = _shape_bytes(ins.shape)
+    write = 0.0 if ins.name in fused_writes else rb
+    if op in _SLICE_OPS:
+        return rb + write                # read window + write result
+    if op in ("dynamic-update-slice", "scatter"):
+        ops = _operand_names(ins.line, ins.opcode)
+        ui = 1 if op == "dynamic-update-slice" else 2
+        upd = ops[ui] if len(ops) > ui else None
+        ub = _shape_bytes(comp.symbols.get(upd, "")) if upd else rb
+        rd = 0.0 if (upd and (ins.name, upd) in fused_reads) else ub
+        return rd + 2.0 * ub             # read update + r/w region
+    if op == "broadcast":
+        return write                     # operand is small; write dominates
+    if op == "fusion":
+        return _fusion_bytes(ins, comp, comps)
+    b = write
+    for o in _operand_names(ins.line, ins.opcode):
+        if (ins.name, o) in fused_reads:
+            continue
+        b += _shape_bytes(comp.symbols.get(o, ""))
+    return b
+
+
+def _fusion_root(called: Computation) -> Optional[Instr]:
+    """The fusion's semantic root: look through layout-only wrapper ops
+    (bitcast/reshape/transpose/copy) AND dtype converts to the producing
+    instruction, so `convert(dynamic-update-slice(convert(...)))` is
+    accounted as a DUS. The convert sandwich is a CPU-backend
+    legalization (no native bf16 scatter/DUS kernels) that a TPU build
+    would not emit — the cache round-trip it implies is not real HBM
+    traffic on the target."""
+    root = called.instrs[-1] if called.instrs else None
+    hops = 0
+    while root is not None and hops < 4 and \
+            root.opcode in ("bitcast", "reshape", "transpose", "copy",
+                            "convert"):
+        ops = _operand_names(root.line, root.opcode)
+        if not ops:
+            break
+        nxt = next((i for i in called.instrs if i.name == ops[0]), None)
+        if nxt is None:
+            break
+        root = nxt
+        hops += 1
+    return root
+
+
+def _fusion_bytes(ins: Instr, comp: Computation,
+                  comps: Dict[str, Computation]) -> float:
+    m = _CALLS.search(ins.line)
+    called = comps.get(m.group(1)) if m else None
+    if called is None:
+        return 2.0 * _shape_bytes(ins.shape)
+    # write side: DUS/scatter roots update in place; the buffer operand
+    # is aliased (never read in full) so its parameter is skipped below
+    root = _fusion_root(called)
+    skip_params: set = set()
+    if root is not None and root.opcode in ("dynamic-update-slice",
+                                            "scatter"):
+        ops = _operand_names(root.line, root.opcode)
+        upd_idx = 1 if root.opcode == "dynamic-update-slice" else 2
+        upd = ops[upd_idx] if len(ops) > upd_idx else None
+        wb = 2.0 * _shape_bytes(called.symbols.get(upd, "")) if upd \
+            else _shape_bytes(ins.shape)
+        if ops:
+            tgt = ops[0]                       # the aliased buffer chain
+            for _ in range(4):
+                producer = next((i for i in called.instrs
+                                 if i.name == tgt), None)
+                if producer is None:
+                    break
+                if producer.opcode == "parameter":
+                    mnum = re.search(r"parameter\((\d+)\)", producer.line)
+                    if mnum:
+                        skip_params.add(int(mnum.group(1)))
+                    break
+                pops = _operand_names(producer.line, producer.opcode)
+                if producer.opcode in ("bitcast", "reshape", "transpose",
+                                       "copy", "convert") and pops:
+                    tgt = pops[0]
+                else:
+                    break
+    else:
+        wb = _shape_bytes(ins.shape)
+    # read side: per fused operand, slice-only consumers count at slice size
+    params = {}
+    for inner in called.instrs:
+        if inner.opcode == "parameter":
+            mnum = re.search(r"parameter\((\d+)\)", inner.line)
+            if mnum:
+                params[int(mnum.group(1))] = inner
+    outer_ops = _operand_names(ins.line, ins.opcode)
+    rb = 0.0
+    for i, _ in enumerate(outer_ops):
+        if i in skip_params:
+            continue                            # aliased DUS buffer
+        p = params.get(i)
+        if p is None:
+            continue
+        consumed = _consumer_bytes(p.name, called)
+        rb += consumed if consumed is not None \
+            else _shape_bytes(p.shape)
+    return wb + rb
+
+
+def _consumer_bytes(pname: str, comp: Computation,
+                    depth: int = 0) -> Optional[float]:
+    """If `pname` is consumed only through slicing ops (via views), the
+    bytes actually read; None -> consumed broadly (count full size)."""
+    if depth > 3:
+        return None
+    total = 0.0
+    found = False
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            continue
+        ops = _operand_names(ins.line, ins.opcode)
+        if pname not in ops:
+            continue
+        found = True
+        if ins.opcode in _SLICE_OPS:
+            total += _shape_bytes(ins.shape)
+        elif ins.opcode == "bitcast":
+            sub = _consumer_bytes(ins.name, comp, depth + 1)
+            if sub is None:
+                return None
+            total += sub
+        else:
+            return None
+    return total if found else 0.0

@@ -1,0 +1,19 @@
+"""TPU v5e-class hardware constants for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW_PER_LINK = 50e9        # B/s per link (per assignment)
+
+CHIP_HBM_BYTES = 16 * 1024 ** 3   # 16 GiB
+
+
+def compute_time_s(flops_per_chip: float) -> float:
+    return flops_per_chip / PEAK_FLOPS_BF16
+
+
+def memory_time_s(bytes_per_chip: float) -> float:
+    return bytes_per_chip / HBM_BW
+
+
+def collective_time_s(coll_bytes_per_chip: float) -> float:
+    return coll_bytes_per_chip / ICI_BW_PER_LINK

@@ -1,0 +1,68 @@
+"""Re-derive roofline terms from the dry-run's saved optimized HLO —
+no recompilation. Used when the byte/FLOP cost model changes (§Perf
+accounting iterations) and for quick what-if analysis.
+
+  PYTHONPATH=src python -m repro.roofline.reanalyze [--out EXPERIMENTS/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from . import hlo_stats
+from .analysis import Roofline
+
+
+def reanalyze_cell(json_path: str, hlo_dir: str) -> bool:
+    with open(json_path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        return False
+    tag = rec["cell"]
+    hlo_path = os.path.join(hlo_dir, tag + ".hlo.gz")
+    if not os.path.exists(hlo_path):
+        return False
+    with gzip.open(hlo_path, "rt") as f:
+        hlo = f.read()
+    st = hlo_stats.analyze_hlo(hlo)
+    old = rec["roofline"]
+    r = Roofline(
+        flops_per_chip=float(st.flops),
+        bytes_per_chip=float(st.bytes),
+        coll_bytes_per_chip=float(st.collective_bytes),
+        n_chips=old["n_chips"],
+        model_flops_global=old["model_flops_global"],
+        arg_bytes_per_chip=old.get("arg_bytes_per_chip", 0.0),
+    )
+    r.raw_cost_analysis = old.get("raw_cost_analysis")
+    r.collective_counts = dict(st.collective_counts)
+    r.flags = {"unknown_trip_counts": st.unknown_trip_counts,
+               "custom_call_matmuls": st.custom_call_matmuls}
+    rec["roofline"] = r.as_dict()
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="EXPERIMENTS/dryrun")
+    args = ap.parse_args()
+    hlo_dir = os.path.join(args.out, "hlo")
+    n = 0
+    for p in sorted(glob.glob(os.path.join(args.out, "*.json"))):
+        if reanalyze_cell(p, hlo_dir):
+            n += 1
+            with open(p) as f:
+                r = json.load(f)["roofline"]
+            print(f"{os.path.basename(p)[:-5]}: "
+                  f"mem={r['t_memory_s']:.3g}s coll={r['t_collective_s']:.3g}s "
+                  f"comp={r['t_compute_s']:.3g}s -> {r['bottleneck']}")
+    print(f"reanalyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

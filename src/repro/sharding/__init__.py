@@ -1,0 +1,1 @@
+from .axes import axis_rules, logical, logical_sharding, resolve

@@ -1,0 +1,79 @@
+"""Logical-axis sharding annotations (MaxText-style, hand-rolled).
+
+Models annotate activations with *logical* axis names; a rules table maps
+logical names to physical mesh axes. Outside a mesh context the annotations
+are no-ops, so the same model code runs on 1 CPU device and on the 512-chip
+production mesh.
+
+    with axis_rules(mesh, RULES):
+        x = logical(x, "batch", "seq", "embed")
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+_ctx = threading.local()
+
+
+def _current():
+    return getattr(_ctx, "stack", [None])[-1]
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Dict[str, AxisVal]):
+    if not hasattr(_ctx, "stack"):
+        _ctx.stack = [None]
+    _ctx.stack.append((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _ctx.stack.pop()
+
+
+def resolve(names: Tuple[Optional[str], ...],
+            rules: Dict[str, AxisVal]) -> P:
+    """Logical names -> PartitionSpec under `rules` (unknown -> replicated).
+
+    Guards against reusing one mesh axis twice in a single spec (illegal in
+    GSPMD): later duplicates degrade to replicated.
+    """
+    used = set()
+    parts = []
+    for n in names:
+        v = rules.get(n) if n is not None else None
+        if v is None:
+            parts.append(None)
+            continue
+        vt = (v,) if isinstance(v, str) else tuple(v)
+        vt = tuple(a for a in vt if a not in used)
+        if not vt:
+            parts.append(None)
+            continue
+        used.update(vt)
+        parts.append(vt if len(vt) > 1 else vt[0])
+    return P(*parts)
+
+
+def logical(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without a mesh)."""
+    cur = _current()
+    if cur is None:
+        return x
+    mesh, rules = cur
+    if len(names) != x.ndim:
+        raise ValueError(f"{len(names)} names for rank-{x.ndim} array")
+    spec = resolve(tuple(names), rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def logical_sharding(mesh: Mesh, rules: Dict[str, AxisVal],
+                     *names: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, resolve(tuple(names), rules))

@@ -1,0 +1,310 @@
+"""Per-architecture sharding rules and parameter PartitionSpec derivation.
+
+Physical mesh axes: ("pod", "data", "model") multi-pod / ("data", "model")
+single-pod. Mapping (DESIGN.md §4):
+
+  DP    batch            -> ("pod", "data")
+  TP    heads / ffn / vocab dims -> "model" (divisibility-aware fallback)
+  EP    MoE expert dim   -> "model" (fallback: TP inside the expert)
+  SP    long-context KV seq dim -> "data" (batch=1 cells)
+  FSDP  weight reduction dims + optimizer state -> "data"
+
+All decisions are static functions of (ArchConfig, mesh shape, shape kind),
+so the dry-run and the launcher derive identical layouts.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# weight-name classes: first-of-pair (column-parallel: out dim -> TP) vs
+# second-of-pair (row-parallel: in dim -> TP)
+COL_PARALLEL = {"wq", "wk", "wv", "wg", "wu", "wi", "wz", "wi_gate",
+                "wf_gate", "wo_gate", "wu2", "wx", "wgate", "w_up"}
+ROW_PARALLEL = {"wo", "wd", "w_down", "wd2"}
+REPLICATED_NAMES = {"gamma_scale", "beta_shift", "a_param", "fgate_bias",
+                    "igate_bias", "conv_bias", "conv_kernel", "b_in", "bq",
+                    "bk", "bv", "bi", "bd", "r_z", "r_i", "r_f", "w_gate",
+                    "w_inp_gate", "w_rec_gate"}
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """Axis-name -> size for Mesh and AbstractMesh alike."""
+    try:
+        return dict(mesh.shape)
+    except Exception:
+        return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+SMALL_MODEL_PARAMS = int(2e9)   # below this, TP hurts: go pure DP/FSDP
+
+
+def use_dp_only(cfg: ArchConfig, mesh, global_batch: Optional[int]) -> bool:
+    """Small models on big meshes: per-layer TP all-reduces dominate the
+    step (§Perf iteration S). When the global batch divides the WHOLE
+    mesh, run pure data-parallel with FSDP-sharded weights instead."""
+    if global_batch is None:
+        return False
+    if "slstm" in cfg.block_pattern:
+        # sLSTM's per-token recurrence closes replicated weights over a
+        # 4096-step scan; GSPMD psums their gradient EVERY step under any
+        # layout, and dp_only makes it worse (measured: 6.3 -> 12.5 s
+        # collective, §Perf S2 refuted). Until the hand-written sLSTM VJP
+        # lands (accumulate dW locally, reduce once), keep TP.
+        return False
+    sizes = mesh_axis_sizes(mesh)
+    total = 1
+    for v in sizes.values():
+        total *= v
+    return (cfg.active_param_count() <= SMALL_MODEL_PARAMS
+            and global_batch % total == 0)
+
+
+def make_rules(cfg: ArchConfig, mesh: Mesh,
+               long_context: bool = False,
+               global_batch: Optional[int] = None) -> Dict[str, Any]:
+    """Logical-axis -> mesh-axis rules for activations and caches."""
+    sizes = mesh_axis_sizes(mesh)
+    tp = sizes.get("model", 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    if use_dp_only(cfg, mesh, global_batch):
+        all_axes = tuple(sizes)
+        return {"batch": all_axes, "seq": None, "embed": None,
+                "heads": None, "kv_heads": None, "ffn": None,
+                "expert": None, "expert_cap": None, "vocab": None}
+    div = lambda n: (n and n % tp == 0)
+    rules = {
+        # long-context cells run batch=1: batch is replicated and the
+        # sequence/KV dim takes ALL data-parallel axes (sequence parallel)
+        "batch": None if long_context else (batch_axes or None),
+        "seq": (batch_axes or None) if long_context else None,
+        "embed": None,
+        "heads": "model" if div(cfg.n_heads) else None,
+        "kv_heads": "model" if div(cfg.n_kv_heads) else None,
+        "ffn": "model" if div(cfg.d_ff) else None,
+        "expert": "model" if (cfg.n_experts and div(cfg.n_experts))
+        else None,
+        # MoE slot/capacity dim: shard over "data" so few-expert MoEs
+        # (grok: E=8 < tp) still keep dispatched tokens distributed
+        "expert_cap": "data" if "data" in sizes else None,
+        "vocab": "model" if div(cfg.padded_vocab) else None,
+    }
+    for k in ("batch", "seq"):
+        if isinstance(rules[k], tuple) and len(rules[k]) == 1:
+            rules[k] = rules[k][0]
+    return rules
+
+
+def _leaf_name(path) -> str:
+    parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+    # QuantizedTensor leaves end in .data / .scale — classify by parent
+    if parts and parts[-1] in ("data", "scale"):
+        return parts[-2] if len(parts) > 1 else parts[-1]
+    return parts[-1] if parts else ""
+
+
+def _is_scale(path) -> bool:
+    parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+    return bool(parts) and parts[-1] == "scale"
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def param_spec(path, shape: Tuple[int, ...], cfg: ArchConfig,
+               sizes: Dict[str, int], dp_only: bool = False) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    2-D core weights: TP on the hidden dim, FSDP ("data") on the other.
+    Stacked leading dims (scan groups / experts) handled positionally.
+    dp_only (§Perf iteration S): FSDP-shard the largest weight dim over
+    every mesh axis; no tensor parallelism.
+    """
+    tp = sizes.get("model", 1)
+    dp = sizes.get("data", 1)
+    name = _leaf_name(path)
+    pstr = _path_str(path)
+    rank = len(shape)
+
+    if dp_only:
+        # NOTE: recurrent weights (r_z/r_i/r_f, gate mats) are NOT
+        # replicated here — a replicated weight closed over a lax.scan
+        # gets its gradient psum'd on EVERY step (measured: 3x
+        # f32[4,256,256] all-reduce x 49k steps on xlstm). Sharding them
+        # makes the forward all-gather loop-invariant (hoisted) and the
+        # backward reduce once.
+        if rank <= 1 or _is_scale(path):
+            return P(*([None] * rank))
+        axes = tuple(sizes)
+        full = 1
+        for v in sizes.values():
+            full *= v
+        parts = [None] * rank
+        if shape[-1] % full == 0:
+            parts[-1] = axes if len(axes) > 1 else axes[0]
+        elif shape[-2] % full == 0:
+            parts[-2] = axes if len(axes) > 1 else axes[0]
+        elif shape[-1] % dp == 0:
+            parts[-1] = "data"
+        elif shape[-2] % dp == 0:
+            parts[-2] = "data"
+        return P(*parts)
+
+    def tp_ok(n):
+        return n % tp == 0
+
+    def dp_ok(n):
+        return n % dp == 0
+
+    if rank <= 1 or name in REPLICATED_NAMES:
+        return P(*([None] * rank))
+
+    if _is_scale(path):
+        # (..., 1, N) per-channel scales: shard N like the weight out-dim
+        parts = [None] * rank
+        owner = _leaf_name(path[:-1])
+        if owner in COL_PARALLEL and tp_ok(shape[-1]):
+            parts[-1] = "model"
+        return P(*parts)
+
+    # embeddings
+    if name == "table":
+        v, d = shape[-2], shape[-1]
+        if tp_ok(v):
+            return P(*([None] * (rank - 2)), "model",
+                     "data" if dp_ok(d) else None)
+        return P(*([None] * (rank - 2)), "data" if dp_ok(v) else None,
+                 "model" if tp_ok(d) else None)
+    if name == "w_out":
+        d, v = shape[-2], shape[-1]
+        return P(*([None] * (rank - 2)), "data" if dp_ok(d) else None,
+                 "model" if tp_ok(v) else None)
+    if name == "w_in":  # frontend projector (small)
+        return P(*([None] * rank))
+
+    # MoE experts: (..., E, K, N) — EP on E when divisible, else TP inside
+    if "experts" in pstr:
+        e_idx = rank - 3
+        parts = [None] * rank
+        e = shape[e_idx]
+        if tp_ok(e):
+            parts[e_idx] = "model"
+            # FSDP the larger matrix dim
+            if dp_ok(shape[-2]):
+                parts[-2] = "data"
+            elif dp_ok(shape[-1]):
+                parts[-1] = "data"
+        else:
+            # TP inside the expert: out-dim for wg/wu, in-dim for wd
+            if name in ROW_PARALLEL:
+                if tp_ok(shape[-2]):
+                    parts[-2] = "model"
+                if dp_ok(shape[-1]):
+                    parts[-1] = "data"
+            else:
+                if tp_ok(shape[-1]):
+                    parts[-1] = "model"
+                if dp_ok(shape[-2]):
+                    parts[-2] = "data"
+        return P(*parts)
+
+    if name in ROW_PARALLEL:
+        parts = [None] * rank
+        if tp_ok(shape[-2]):
+            parts[-2] = "model"
+        if dp_ok(shape[-1]):
+            parts[-1] = "data"
+        return P(*parts)
+    if name in COL_PARALLEL or name.startswith("w"):
+        parts = [None] * rank
+        if tp_ok(shape[-1]):
+            parts[-1] = "model"
+        if dp_ok(shape[-2]):
+            parts[-2] = "data"
+        return P(*parts)
+    return P(*([None] * rank))
+
+
+def params_pspecs(params, cfg: ArchConfig, mesh: Mesh,
+                  dp_only: bool = False):
+    """PartitionSpec pytree matching `params` (works on ShapeDtypeStructs)."""
+    sizes = mesh_axis_sizes(mesh)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = [param_spec(kp, tuple(leaf.shape), cfg, sizes, dp_only)
+             for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def params_shardings(params, cfg: ArchConfig, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        params_pspecs(params, cfg, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_pspecs(caches, cfg: ArchConfig, mesh: Mesh,
+                 long_context: bool = False):
+    """KV-cache / recurrent-state specs.
+
+    k/v: (G?, B, S, H, D) — batch over DP axes (or seq over "data" for
+    long-context SP), heads over "model" when divisible.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    tp = sizes.get("model", 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    if long_context:
+        b_rule = None                     # batch=1: replicated
+        s_rule = batch_axes or None       # SP over every DP axis
+        if isinstance(s_rule, tuple) and len(s_rule) == 1:
+            s_rule = s_rule[0]
+    else:
+        b_rule = batch_axes or None
+        s_rule = None
+    if isinstance(b_rule, tuple) and len(b_rule) == 1:
+        b_rule = b_rule[0]
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        rank = len(leaf.shape)
+        lead = [None] * (rank - 4) if rank >= 4 else []
+        if name in ("k", "v", "k_data", "v_data"):
+            h = leaf.shape[-2]
+            s = leaf.shape[-3]
+            h_rule = "model" if (h % tp == 0) else None
+            kv_s_rule = s_rule
+            if h_rule is None and s_rule is None and s % tp == 0:
+                # flash-decoding style: kv_heads not TP-divisible -> shard
+                # the KV sequence dim over "model"; the softmax combine
+                # across seq shards is a tiny (B,H[,D]) all-reduce instead
+                # of an all-gather of the whole cache (§Perf iteration D)
+                kv_s_rule = "model"
+            return P(*lead, b_rule, kv_s_rule, h_rule, None)
+        if name in ("k_scl", "v_scl"):
+            lead = [None] * (rank - 3)
+            h = leaf.shape[-1]
+            s = leaf.shape[-2]
+            kv_s_rule = s_rule
+            if (h % tp) and s_rule is None and s % tp == 0:
+                kv_s_rule = "model"
+            return P(*lead, b_rule, kv_s_rule, None)
+        # recurrent states: (G?, B, ...) — batch-shard dim after lead
+        parts = [None] * rank
+        # find batch dim: first non-group dim
+        bdim = rank - len(leaf.shape[-(rank):])  # 0
+        # heuristics: states are (G, B, ...) inside scan stacks or (B, ...)
+        parts_idx = 1 if rank >= 2 and "blocks" in _path_str(path) else 0
+        parts[parts_idx] = b_rule if not long_context else None
+        return P(*parts)
+
+    flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+    treedef = jax.tree_util.tree_structure(caches)
+    specs = [spec_for(kp, leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

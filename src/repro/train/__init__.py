@@ -1,0 +1,2 @@
+from .train_step import TrainState, init_state, lm_loss, make_train_step
+from .trainer import Trainer, TrainerCfg

@@ -1,0 +1,134 @@
+"""Trainer: the fault-tolerant training loop.
+
+Wires together the stateless loader, jit'd train step, async checkpointing,
+preemption handling, and the straggler monitor. Restart-safe: resuming from
+step N replays the exact data stream from N (stateless loader) on top of
+the restored state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.data.loader import LoaderCfg, SyntheticLoader
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+from repro.runtime.fault import PreemptionHandler, StepTimer, \
+    StragglerMonitor
+from .train_step import TrainState, init_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerCfg:
+    total_steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    ckpt_async: bool = True
+    eval_every: int = 0
+    eval_batches: int = 2
+    log_every: int = 10
+    n_microbatches: int = 1
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model: Model, optimizer: AdamW,
+                 loader: SyntheticLoader, tcfg: TrainerCfg,
+                 log_fn: Callable[[str], None] = print):
+        self.model = model
+        self.optimizer = optimizer
+        self.loader = loader
+        self.tcfg = tcfg
+        self.log = log_fn
+        self.preempt = PreemptionHandler()
+        self.monitor = StragglerMonitor(n_hosts=1)
+        self.step_fn = jax.jit(make_train_step(
+            model, optimizer, n_microbatches=tcfg.n_microbatches))
+        self.state: Optional[TrainState] = None
+        self.step = 0
+        self._pending_save = None
+
+    # ------------------------------------------------------------ state
+    def init_or_restore(self):
+        template = init_state(self.model, self.optimizer,
+                              jax.random.PRNGKey(self.tcfg.seed))
+        start = None
+        if self.tcfg.ckpt_dir:
+            start = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if start is not None:
+            self.state = ckpt.restore(self.tcfg.ckpt_dir, start,
+                                      {"state": template})["state"]
+            self.step = start
+            self.log(f"[trainer] restored step {start} from "
+                     f"{self.tcfg.ckpt_dir}")
+        else:
+            self.state = template
+            self.step = 0
+        return self
+
+    def save(self, blocking=False, tag=""):
+        if not self.tcfg.ckpt_dir:
+            return
+        if self._pending_save is not None:
+            self._pending_save.join()
+        self._pending_save = ckpt.save(
+            self.tcfg.ckpt_dir, self.step, {"state": self.state},
+            blocking=blocking or not self.tcfg.ckpt_async)
+        if tag:
+            self.log(f"[trainer] checkpoint @ step {self.step} ({tag})")
+
+    # ------------------------------------------------------------- loop
+    def run(self) -> Dict[str, list]:
+        assert self.state is not None, "call init_or_restore() first"
+        history = {"step": [], "loss": [], "step_time": []}
+        while self.step < self.tcfg.total_steps:
+            if self.preempt.should_stop:
+                self.save(blocking=True, tag="preemption")
+                self.log(f"[trainer] preempted at step {self.step}; "
+                         "state saved")
+                break
+            batch = self.loader.global_batch_at(self.step)
+            with StepTimer(self.monitor, host=0) as t:
+                self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or \
+                    self.step == self.tcfg.total_steps:
+                self.log(f"[trainer] step {self.step} "
+                         f"loss {float(metrics['loss']):.4f} "
+                         f"gnorm {float(metrics['grad_norm']):.3f} "
+                         f"({t.last * 1e3:.0f} ms)")
+            history["step"].append(self.step)
+            history["loss"].append(float(metrics["loss"]))
+            history["step_time"].append(t.last)
+            if self.tcfg.ckpt_every and \
+                    self.step % self.tcfg.ckpt_every == 0:
+                self.save(tag="periodic")
+            if self.tcfg.eval_every and \
+                    self.step % self.tcfg.eval_every == 0:
+                ppl = self.evaluate()
+                self.log(f"[trainer] step {self.step} eval ppl {ppl:.3f}")
+            if not self.monitor.healthy():
+                self.log(f"[trainer] stragglers: "
+                         f"{self.monitor.stragglers()}")
+        self.save(blocking=True, tag="final")
+        return history
+
+    # ------------------------------------------------------------- eval
+    def evaluate(self, n_batches: Optional[int] = None) -> float:
+        from .train_step import lm_loss
+        n = n_batches or self.tcfg.eval_batches
+        tot, cnt = 0.0, 0
+        loss_j = jax.jit(lambda p, b: lm_loss(self.model, p, b)[1]["ce"])
+        for i in range(n):
+            batch = self.loader.global_batch_at(i, eval_split=True)
+            tot += float(loss_j(self.state.params, batch))
+            cnt += 1
+        return float(np.exp(tot / max(cnt, 1)))

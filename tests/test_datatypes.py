@@ -1,0 +1,129 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import datatypes as dt
+
+
+class TestNormalInt:
+    def test_int4_never_emits_identifier(self):
+        u = jnp.linspace(-40, 40, 1001)
+        codes = dt.int_normal_encode(u, 4)
+        assert not np.any(np.asarray(codes) == dt.ID4)
+
+    def test_int8_never_emits_identifier(self):
+        u = jnp.linspace(-300, 300, 2001)
+        codes = dt.int_normal_encode(u, 8)
+        assert not np.any(np.asarray(codes) == dt.ID8)
+
+    def test_int4_roundtrip_exact_on_grid(self):
+        vals = jnp.arange(-7, 8).astype(jnp.float32)
+        out = dt.int_normal_decode(dt.int_normal_encode(vals, 4), 4)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(vals))
+
+    def test_int8_roundtrip_exact_on_grid(self):
+        vals = jnp.arange(-127, 128).astype(jnp.float32)
+        out = dt.int_normal_decode(dt.int_normal_encode(vals, 8), 8)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(vals))
+
+    def test_int4_clips_to_pm7(self):
+        out = dt.int_normal_decode(dt.int_normal_encode(
+            jnp.array([-100.0, 100.0]), 4), 4)
+        np.testing.assert_array_equal(np.asarray(out), [-7.0, 7.0])
+
+
+class TestFlint4:
+    def test_value_set_matches_table3(self):
+        # Table 3: 0, ±1, ±2, ±3, ±4, ±6, ±8, ±16
+        grid = jnp.linspace(-20, 20, 4001)
+        out = np.unique(np.asarray(dt.flint4_decode(dt.flint4_encode(grid))))
+        expect = sorted({s * v for v in [0, 1, 2, 3, 4, 6, 8, 16]
+                         for s in (-1, 1)})
+        assert set(out.tolist()) <= set(expect)
+        assert {0., 1., -1., 16., -16., 6., -6.} <= set(out.tolist())
+
+    def test_never_emits_identifier(self):
+        grid = jnp.linspace(-100, 100, 4001)
+        codes = np.asarray(dt.flint4_encode(grid))
+        assert not np.any(codes == dt.ID4)
+
+    def test_identifier_decodes_to_zero(self):
+        out = dt.flint4_decode(jnp.array([dt.ID4], dtype=jnp.uint8))
+        assert float(out[0]) == 0.0
+
+    def test_nearest(self):
+        out = dt.flint4_decode(dt.flint4_encode(jnp.array([5.1, 6.9, 11.0])))
+        np.testing.assert_array_equal(np.asarray(out), [6.0, 6.0, 8.0])
+
+
+class TestAbfloat:
+    def test_paper_biases(self):
+        # §3.3: bias=2 for int4 ({12..96}), bias=3 for flint4 ({24..192})
+        assert dt.E2M1_INT4.bias == 2
+        assert dt.E2M1_INT4.min_mag == 12 and dt.E2M1_INT4.max_mag == 96
+        assert dt.E2M1_FLINT4.bias == 3
+        assert dt.E2M1_FLINT4.min_mag == 24 and dt.E2M1_FLINT4.max_mag == 192
+        # 8-bit: E4M3, min just past 127, clipped at 2^15 (§4.5)
+        assert dt.E4M3_INT8.min_mag == 144
+        assert dt.E4M3_INT8.max_mag == 1 << 15
+
+    def test_table4_values(self):
+        # Table 4 with bias=0: magnitudes {3,4,6,8,12,16,24}
+        spec = dt.AbfloatSpec(ebits=2, mb=1, bias=0)
+        np.testing.assert_array_equal(spec.magnitudes(),
+                                      [3, 4, 6, 8, 12, 16, 24])
+
+    def test_fig7_example(self):
+        # Fig. 7: bias=2, code 0101b -> 48
+        spec = dt.AbfloatSpec(ebits=2, mb=1, bias=2)
+        out = dt.abfloat_decode(jnp.array([0b0101], dtype=jnp.uint8), spec)
+        assert float(out[0]) == 48.0
+
+    @pytest.mark.parametrize("spec", [dt.E2M1_INT4, dt.E2M1_FLINT4,
+                                      dt.E4M3_INT8])
+    def test_roundtrip_exact_on_representables(self, spec):
+        mags = spec.magnitudes()
+        vals = jnp.concatenate([jnp.asarray(mags), -jnp.asarray(mags)])
+        out = dt.abfloat_decode(dt.abfloat_encode(vals, spec), spec)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(vals))
+
+    @pytest.mark.parametrize("spec", [dt.E2M1_INT4, dt.E4M3_INT8])
+    def test_never_emits_disabled_codes(self, spec):
+        vals = jnp.linspace(-4e4, 4e4, 20001)
+        codes = np.asarray(dt.abfloat_encode(vals, spec))
+        bits_mask = (1 << (spec.ebits + spec.mb)) - 1
+        assert not np.any((codes & bits_mask) == 0), \
+            "abfloat must never produce ±0 (identifier conflict, §3.3)"
+
+    @pytest.mark.parametrize("spec", [dt.E2M1_INT4, dt.E2M1_FLINT4,
+                                      dt.E4M3_INT8])
+    def test_algorithm2_close_to_nearest(self, spec):
+        vals = jnp.linspace(spec.min_mag, spec.max_mag, 3001)
+        alg = dt.abfloat_decode(dt.abfloat_encode(vals, spec), spec)
+        near = dt.abfloat_nearest(vals, spec)
+        # Algorithm 2 rounds in base-integer space; it must be within one
+        # representable step of true nearest everywhere.
+        mags = spec.magnitudes()
+        steps = np.diff(mags).max()
+        assert np.max(np.abs(np.asarray(alg) - np.asarray(near))) <= steps
+
+    def test_monotone(self):
+        vals = jnp.linspace(12, 96, 500)
+        out = np.asarray(dt.abfloat_decode(
+            dt.abfloat_encode(vals, dt.E2M1_INT4), dt.E2M1_INT4))
+        assert np.all(np.diff(out) >= 0)
+
+    def test_sign_symmetry(self):
+        vals = jnp.linspace(12, 96, 100)
+        spec = dt.E2M1_INT4
+        pos = dt.abfloat_decode(dt.abfloat_encode(vals, spec), spec)
+        neg = dt.abfloat_decode(dt.abfloat_encode(-vals, spec), spec)
+        np.testing.assert_allclose(np.asarray(pos), -np.asarray(neg))
+
+
+def test_default_bias_rule():
+    # bias = smallest b with (2^mb + 1) << b > normal max
+    assert dt.default_bias("int4", 1) == 2
+    assert dt.default_bias("flint4", 1) == 3
+    assert dt.default_bias("int8", 3) == 4

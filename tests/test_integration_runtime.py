@@ -1,0 +1,227 @@
+"""Integration tests: fault tolerance, elastic restore, trainer resume,
+loader determinism, serving engine quantized-vs-fp agreement.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ArchConfig
+from repro.core.policy import QuantPolicy
+from repro.core.qlinear import quantize_params
+from repro.data.loader import LoaderCfg, SyntheticLoader
+from repro.data.synthetic import CorpusCfg
+from repro.models.model import build_model
+from repro.optim.adamw import AdamW
+from repro.runtime.elastic import plan_mesh, resize_plan
+from repro.runtime.fault import (PreemptionHandler, StepTimer,
+                                 StragglerMonitor)
+from repro.train.trainer import Trainer, TrainerCfg
+
+TINY = ArchConfig(name="it-tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                  head_dim=16, block_pattern=("attn",))
+
+
+def _loader(batch=4, seq=32, vocab=256):
+    return SyntheticLoader(LoaderCfg(global_batch=batch, seq_len=seq,
+                                     corpus=CorpusCfg(vocab=vocab)))
+
+
+# --------------------------------------------------------------------------
+# checkpoint: atomic publish, latest_step, restore exactness
+# --------------------------------------------------------------------------
+class TestCheckpoint:
+    def test_save_restore_bit_exact(self, tmp_path):
+        tree = {"a": jnp.arange(12.0).reshape(3, 4),
+                "n": {"b": jnp.ones((2,), jnp.bfloat16)}}
+        ckpt.save(str(tmp_path), 7, tree, blocking=True)
+        assert ckpt.latest_step(str(tmp_path)) == 7
+        out = ckpt.restore(str(tmp_path), 7, tree)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+        assert out["n"]["b"].dtype == jnp.bfloat16
+
+    def test_incomplete_checkpoint_ignored(self, tmp_path):
+        tree = {"a": jnp.zeros((2,))}
+        ckpt.save(str(tmp_path), 3, tree, blocking=True)
+        # simulate a crash mid-write: dir without manifest
+        broken = tmp_path / "step_00000009"
+        broken.mkdir()
+        (broken / "arrays.npz").write_bytes(b"junk")
+        assert ckpt.latest_step(str(tmp_path)) == 3
+
+    def test_async_save_joins(self, tmp_path):
+        tree = {"a": jnp.ones((128, 128))}
+        th = ckpt.save(str(tmp_path), 1, tree, blocking=False)
+        th.join()
+        assert ckpt.latest_step(str(tmp_path)) == 1
+
+    def test_gc_keeps_last_k(self, tmp_path):
+        tree = {"a": jnp.zeros((2,))}
+        for s in range(6):
+            ckpt.save(str(tmp_path), s, tree, blocking=True, keep=3)
+        steps = sorted(int(d.split("_")[1])
+                       for d in os.listdir(tmp_path)
+                       if d.startswith("step_"))
+        assert steps == [3, 4, 5]
+
+
+# --------------------------------------------------------------------------
+# trainer: resume produces the identical trajectory
+# --------------------------------------------------------------------------
+class TestTrainerResume:
+    def test_resume_matches_uninterrupted(self, tmp_path):
+        model = build_model(TINY, QuantPolicy(compute_dtype="float32"),
+                            remat=False)
+        loader = _loader()
+
+        def make(steps, ckpt_dir, every):
+            opt = AdamW(lr=1e-3)
+            t = Trainer(model, opt, loader,
+                        TrainerCfg(total_steps=steps, ckpt_dir=ckpt_dir,
+                                   ckpt_every=every, ckpt_async=False,
+                                   log_every=1000))
+            return t.init_or_restore()
+
+        # uninterrupted 6 steps
+        t_full = make(6, "", 0)
+        h_full = t_full.run()
+
+        # interrupted at 3 (checkpoint), then resumed to 6
+        d = str(tmp_path / "ck")
+        t_a = make(3, d, 3)
+        t_a.run()
+        t_b = make(6, d, 3)
+        assert t_b.step == 3
+        h_b = t_b.run()
+        np.testing.assert_allclose(h_full["loss"][3:], h_b["loss"],
+                                   rtol=2e-4)
+
+    def test_preemption_saves_state(self, tmp_path):
+        model = build_model(TINY, QuantPolicy(compute_dtype="float32"),
+                            remat=False)
+        t = Trainer(model, AdamW(lr=1e-3), _loader(),
+                    TrainerCfg(total_steps=50,
+                               ckpt_dir=str(tmp_path / "p"),
+                               ckpt_every=0, ckpt_async=False,
+                               log_every=1000))
+        t.init_or_restore()
+        t.preempt.trigger()          # simulated SIGTERM
+        t.run()
+        assert t.step < 50           # stopped early
+        assert ckpt.latest_step(str(tmp_path / "p")) == t.step
+
+
+# --------------------------------------------------------------------------
+# elastic: restore onto a different device count
+# --------------------------------------------------------------------------
+class TestElastic:
+    def test_plan_mesh_shapes(self):
+        p = plan_mesh(512, prefer_model=16)
+        assert p.n_devices == 512
+        r = resize_plan(p, 256)
+        assert r["new_plan"].n_devices == 256
+        assert r["needs_reshard"]
+
+    def test_restore_after_mesh_change(self, tmp_path):
+        # params saved flat restore cleanly regardless of mesh: on CPU we
+        # emulate by restoring into a template with identical structure
+        model = build_model(TINY, QuantPolicy(compute_dtype="float32"),
+                            remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+        ckpt.save(str(tmp_path), 1, {"params": params}, blocking=True)
+        out = ckpt.restore(str(tmp_path), 1, {"params": params})["params"]
+        a = jax.tree_util.tree_leaves(params)
+        b = jax.tree_util.tree_leaves(out)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------------------
+# fault primitives
+# --------------------------------------------------------------------------
+class TestFault:
+    def test_straggler_detection(self):
+        mon = StragglerMonitor(n_hosts=4, threshold=2.0)
+        for _ in range(8):
+            for h in range(4):
+                mon.record(h, 0.1 if h != 2 else 0.5)
+        assert mon.stragglers() == [2]
+        assert not mon.healthy()
+
+    def test_step_timer_records(self):
+        mon = StragglerMonitor(n_hosts=1)
+        with StepTimer(mon, host=0) as t:
+            pass
+        assert t.last >= 0.0
+
+    def test_preemption_handler_restore(self):
+        h = PreemptionHandler(signals=())
+        assert not h.should_stop
+        h.trigger()
+        assert h.should_stop
+        h.restore()
+
+
+# --------------------------------------------------------------------------
+# loader determinism (restart safety)
+# --------------------------------------------------------------------------
+class TestLoader:
+    def test_same_step_same_batch(self):
+        l1, l2 = _loader(), _loader()
+        b1 = l1.global_batch_at(17)
+        b2 = l2.global_batch_at(17)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+
+    def test_rank_shards_disjoint(self):
+        lr = SyntheticLoader(LoaderCfg(global_batch=8, seq_len=16,
+                                       n_ranks=2))
+        a = lr.batch_at(0, rank=0)["tokens"]
+        b = lr.batch_at(0, rank=1)["tokens"]
+        assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_eval_split_disjoint_from_train(self):
+        lo = _loader()
+        tr = lo.global_batch_at(0)["tokens"]
+        ev = lo.global_batch_at(0, eval_split=True)["tokens"]
+        assert not np.array_equal(np.asarray(tr), np.asarray(ev))
+
+
+# --------------------------------------------------------------------------
+# serving: engine agreement between fp and OliVe-quantized weights
+# --------------------------------------------------------------------------
+class TestServingQuant:
+    def test_engine_outputs_agree(self):
+        from repro.serve.engine import EngineCfg, ServingEngine
+        model_fp = build_model(TINY, QuantPolicy(compute_dtype="float32"),
+                               remat=False)
+        params = model_fp.init(jax.random.PRNGKey(1))
+        pol = QuantPolicy(method="olive", wbits=8, abits=0,
+                          w_normal_dtype="int8", compute_dtype="float32")
+        qparams = quantize_params(params, pol)
+        model_q = build_model(TINY, pol, remat=False)
+
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, 256, size=6).astype(np.int32)
+                   for _ in range(3)]
+
+        def run(model, p):
+            eng = ServingEngine(model, p, EngineCfg(batch_slots=2,
+                                                    max_len=32))
+            for pr in prompts:
+                eng.submit(pr, max_new_tokens=4)
+            return {r.uid: r.out_tokens for r in eng.run_until_drained()}
+
+        a = run(model_fp, params)
+        b = run(model_q, qparams)
+        # 8-bit OliVe is near-lossless -> greedy tokens should agree
+        agree = [np.mean([x == y for x, y in zip(a[k], b[k])])
+                 for k in a]
+        assert np.mean(agree) > 0.7

@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracle (interpret mode).
+
+Covers non-block-multiple shapes (padding path), both packed dtypes, both
+kernels, and a block-size sweep for the encoder kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ovp import ovp_quantize
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (8, 16, 8),        # tiny
+    (32, 64, 16),
+    (128, 256, 128),   # one full block
+    (96, 130, 40),     # K not a block multiple (but even)
+    (200, 512, 300),   # M/N not block multiples
+    (16, 1024, 8),     # deep K
+]
+DTYPES = ["int4", "flint4"]
+
+
+def _mk(key, m, k, n):
+    ka, kw = jax.random.split(key)
+    a = jax.random.normal(ka, (m, k)) * 2.0
+    w = jax.random.normal(kw, (k, n)) * 2.0
+    # sprinkle outliers so abfloat paths are exercised
+    a = a.at[0, :: max(k // 7, 1)].set(37.0)
+    w = w.at[:: max(k // 5, 1), 0].set(-29.0)
+    return a, w
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_w4a16_sweep(m, k, n, dt):
+    a, w = _mk(jax.random.PRNGKey(m * 7 + n), m, k, n)
+    wq = ovp_quantize(w, 0.9, dt, pair_axis=0)
+    got = ops.matmul_w4a16(a, wq.data, jnp.asarray(wq.scale),
+                           normal_dtype=dt, interpret=True)
+    want = ref.ovp_matmul_w4a16_ref(a, wq.data, dt) * wq.scale
+    # kernel splits K into even/odd half-reductions + tiles: float
+    # reassociation differs from the single-dot oracle
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_w4a4_sweep(m, k, n, dt):
+    a, w = _mk(jax.random.PRNGKey(m + n * 3), m, k, n)
+    aq = ovp_quantize(a, 1.1, dt, pair_axis=1)
+    wq = ovp_quantize(w, 0.9, dt, pair_axis=0)
+    got = ops.matmul_w4a4(aq.data, jnp.asarray(aq.scale), wq.data,
+                          jnp.asarray(wq.scale), normal_dtype=dt,
+                          interpret=True)
+    want = (ref.ovp_matmul_w4a4_ref(aq.data, wq.data, dt)
+            * aq.scale * wq.scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bk", [(64, 128), (128, 256), (256, 512)])
+def test_encode_kernel_block_sweep(bm, bk):
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 512)) * 3.0
+    x = x.at[5, 7].set(99.0)
+    got = ops.ovp_encode(x, 1.0, "int4", interpret=True, bm=bm, bk=bk)
+    want = ref.ovp_encode_ref(x, "int4")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_batched_dispatch_matches_2d(dt):
+    """ops.ovp_matmul flattens leading dims; result must match per-slice."""
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (2, 3, 32))
+    w = jax.random.normal(jax.random.PRNGKey(4), (32, 24))
+    wq = ovp_quantize(w, 0.8, dt, pair_axis=0)
+    got = ops.ovp_matmul(a, wq, interpret=True)
+    assert got.shape == (2, 3, 24)
+    for i in range(2):
+        for j in range(3):
+            want = ops.matmul_w4a16(a[i, j][None], wq.data,
+                                    jnp.asarray(wq.scale),
+                                    normal_dtype=dt, interpret=True)[0]
+            np.testing.assert_allclose(np.asarray(got[i, j]),
+                                       np.asarray(want), rtol=1e-5,
+                                       atol=1e-4)
+
+
+def test_dot_general_precision_fp32_accumulate():
+    """Accumulation happens in fp32 even for bf16-ish magnitudes."""
+    k = 2048
+    a = jnp.ones((8, k)) * 0.1
+    w = jnp.ones((k, 8)) * 0.07
+    wq = ovp_quantize(w, 0.01, "int4", pair_axis=0)
+    got = ops.matmul_w4a16(a, wq.data, jnp.asarray(wq.scale),
+                           interpret=True)
+    want = ref.ovp_matmul_w4a16_ref(a, wq.data) * wq.scale
+    # bf16 accumulation would be off by ~1e-2 here; fp32 reassociation
+    # stays under 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5)

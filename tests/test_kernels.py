@@ -1,0 +1,147 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ovp import ovp_quantize
+from repro.core.quantizer import sigma_init_scale
+from repro.kernels import ops, ref
+from repro.kernels.ovp_matmul import ovp_matmul_w4a16, ovp_matmul_w4a4
+from repro.kernels.ovp_encode import ovp_encode_pallas
+
+from test_ovp import heavy_tailed
+
+SHAPES = [  # (M, K, N) — aligned, unaligned, tall, wide
+    (128, 256, 128),
+    (64, 128, 256),
+    (256, 512, 64),
+    (8, 256, 128),
+    (130, 260, 136),   # forces padding in every dim
+    (1, 512, 128),     # decode-style single row
+]
+
+
+def make_packed(key, k, n, normal_dtype="int4"):
+    w = heavy_tailed(key, (k, n), outlier_frac=0.01, outlier_scale=12.0)
+    s = sigma_init_scale(w, normal_dtype)
+    qt = ovp_quantize(w, s, normal_dtype, pair_axis=0)
+    return qt
+
+
+class TestMatmulW4A16:
+    @pytest.mark.parametrize("m,k,n", SHAPES)
+    @pytest.mark.parametrize("adtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, m, k, n, adtype):
+        ka, kw = jax.random.split(jax.random.PRNGKey(m + k + n))
+        a = jax.random.normal(ka, (m, k), dtype=jnp.float32).astype(adtype)
+        qt = make_packed(kw, k, n)
+        got = ops.matmul_w4a16(a, qt.data, jnp.asarray(qt.scale).reshape(-1),
+                               "int4", interpret=True)
+        want = ref.ovp_matmul_w4a16_ref(a, qt.data) * jnp.asarray(
+            qt.scale).reshape(1, -1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-2 if adtype == jnp.bfloat16
+                                   else 1e-5,
+                                   atol=1e-2 if adtype == jnp.bfloat16
+                                   else 1e-4)
+
+    @pytest.mark.parametrize("nd", ["int4", "flint4"])
+    def test_normal_dtypes(self, nd):
+        m, k, n = 64, 256, 128
+        ka, kw = jax.random.split(jax.random.PRNGKey(0))
+        a = jax.random.normal(ka, (m, k))
+        qt = make_packed(kw, k, n, nd)
+        got = ovp_matmul_w4a16(a, qt.data, nd, interpret=True)
+        want = ref.ovp_matmul_w4a16_ref(a, qt.data, nd)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("bk", [128, 256, 512])
+    def test_block_size_sweep(self, bk):
+        m, k, n = 128, 512, 128
+        ka, kw = jax.random.split(jax.random.PRNGKey(1))
+        a = jax.random.normal(ka, (m, k))
+        qt = make_packed(kw, k, n)
+        got = ovp_matmul_w4a16(a, qt.data, bk=bk, interpret=True)
+        want = ref.ovp_matmul_w4a16_ref(a, qt.data)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+class TestMatmulW4A4:
+    @pytest.mark.parametrize("m,k,n", SHAPES)
+    def test_matches_ref(self, m, k, n):
+        ka, kw = jax.random.split(jax.random.PRNGKey(m * 7 + n))
+        x = heavy_tailed(ka, (m, k), outlier_frac=0.01, outlier_scale=10.0)
+        sa = sigma_init_scale(x, "int4")
+        aq = ovp_quantize(x, sa, "int4", pair_axis=-1)
+        wq = make_packed(kw, k, n)
+        got = ops.matmul_w4a4(aq.data, jnp.asarray(aq.scale),
+                              wq.data, jnp.asarray(wq.scale).reshape(-1),
+                              interpret=True)
+        want = (ref.ovp_matmul_w4a4_ref(aq.data, wq.data)
+                * jnp.asarray(aq.scale)
+                * jnp.asarray(wq.scale).reshape(1, -1))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_dispatch_from_quantized_tensors(self):
+        m, k, n = 32, 128, 64
+        ka, kw = jax.random.split(jax.random.PRNGKey(3))
+        x = heavy_tailed(ka, (2, m, k)) * 0.3       # batched activations
+        sa = sigma_init_scale(x, "int4")
+        aq = ovp_quantize(x, sa, "int4", pair_axis=-1)
+        wq = make_packed(kw, k, n)
+        got = ops.ovp_matmul(aq, wq, interpret=True)
+        assert got.shape == (2, m, n)
+        from repro.core.ovp import ovp_dequantize
+        want = jnp.matmul(ovp_dequantize(aq), ovp_dequantize(wq))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_end_to_end_error_small_vs_fp(self):
+        """Full W4A4 pipeline ≈ fp matmul within quantization error."""
+        m, k, n = 64, 512, 64
+        ka, kw = jax.random.split(jax.random.PRNGKey(4))
+        x = jax.random.normal(ka, (m, k)) * 0.5
+        w = heavy_tailed(kw, (k, n), outlier_frac=0.005,
+                         outlier_scale=8.0) * 0.05
+        sa = sigma_init_scale(x, "int4")
+        aq = ovp_quantize(x, sa, "int4", pair_axis=-1)
+        wq = ovp_quantize(w, sigma_init_scale(w, "int4"), "int4",
+                          pair_axis=0)
+        got = ops.ovp_matmul(aq, wq, interpret=True)
+        want = x @ w
+        rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+        # 3σ-init scales without the MSE search (wiring test, not accuracy;
+        # accuracy with searched scales is covered in test_quantizer)
+        assert rel < 0.3
+
+
+class TestEncodeKernel:
+    @pytest.mark.parametrize("m,k", [(64, 128), (256, 512), (33, 130),
+                                     (1, 4096), (128, 64)])
+    def test_matches_ref(self, m, k):
+        key = jax.random.PRNGKey(m + k)
+        x = heavy_tailed(key, (m, k), outlier_frac=0.02, outlier_scale=9.0)
+        s = sigma_init_scale(x, "int4")
+        got = ops.ovp_encode(x, s, interpret=True)
+        want = ref.ovp_encode_ref(x / s)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_encode_then_kernel_matmul(self):
+        """Online activation quant + fused matmul (the serving path)."""
+        m, k, n = 64, 256, 64
+        ka, kw = jax.random.split(jax.random.PRNGKey(5))
+        x = jax.random.normal(ka, (m, k))
+        s = sigma_init_scale(x, "int4")
+        packed = ops.ovp_encode(x, s, interpret=True)
+        wq = make_packed(kw, k, n)
+        got = ops.matmul_w4a4(packed, s, wq.data,
+                              jnp.asarray(wq.scale).reshape(-1),
+                              interpret=True)
+        want = x @ (ref.decode_packed(wq.data, "int4", 0)
+                    * jnp.asarray(wq.scale).reshape(1, -1))
+        rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+        assert rel < 0.25  # activation quantization error only

@@ -1,0 +1,177 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import datatypes as dt
+from repro.core import ovp
+
+
+def heavy_tailed(key, shape, outlier_frac=0.01, outlier_scale=20.0):
+    """Gaussian bulk + sparse large outliers (Transformer-like, Fig. 2)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, shape)
+    mask = jax.random.uniform(k2, shape) < outlier_frac
+    out = jax.random.normal(k3, shape) * outlier_scale
+    return jnp.where(mask, out, x)
+
+
+class TestPacking:
+    @pytest.mark.parametrize("shape,axis", [((8,), -1), ((4, 6), -1),
+                                            ((4, 6), 0), ((2, 3, 8), 1)])
+    def test_pack_unpack_inverse(self, shape, axis):
+        key = jax.random.PRNGKey(0)
+        codes = jax.random.randint(key, shape, 0, 16).astype(jnp.uint8)
+        # pairing axis must be even-length
+        if shape[axis] % 2:
+            pytest.skip("odd")
+        packed = ovp.pack4(codes, axis)
+        assert packed.dtype == jnp.uint8
+        ax = axis % len(shape)
+        assert packed.shape[ax] == shape[ax] // 2
+        out = ovp.unpack4(packed, axis)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+    def test_one_byte_is_one_pair(self):
+        codes = jnp.array([0x1, 0x2, 0x8, 0x5], dtype=jnp.uint8)
+        packed = np.asarray(ovp.pack4(codes))
+        assert packed.tolist() == [0x12, 0x85]
+
+
+class TestEncodeDecode:
+    def test_normal_pair_roundtrip(self):
+        u = jnp.array([1.0, -3.0, 7.0, -7.0])
+        out = ovp.ovp_decode_codes(ovp.ovp_encode_codes(u, "int4"), "int4")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(u))
+
+    def test_left_outlier_gets_right_victim(self):
+        # pair (20, 1): 20 > 7 is an outlier; 1 becomes the victim (0)
+        u = jnp.array([20.0, 1.0])
+        codes = np.asarray(ovp.ovp_encode_codes(u, "int4"))
+        assert codes[1] == dt.ID4
+        out = np.asarray(ovp.ovp_decode_codes(jnp.asarray(codes), "int4"))
+        assert out[1] == 0.0
+        # 20 is not representable in E2M1+bias2 ({12,16,24,...}); it rounds
+        # to 16 (Algorithm 2, base-integer rounding) — tie with 24 in value
+        # space, so either neighbour is acceptable.
+        assert out[0] in (16.0, 24.0)
+
+    def test_right_outlier_gets_left_victim(self):
+        u = jnp.array([1.0, -98.0])
+        codes = np.asarray(ovp.ovp_encode_codes(u, "int4"))
+        assert codes[0] == dt.ID4
+        out = np.asarray(ovp.ovp_decode_codes(jnp.asarray(codes), "int4"))
+        assert out[0] == 0.0
+        assert out[1] == -96.0  # clipped to abfloat max (bias=2)
+
+    def test_outlier_outlier_keeps_larger(self):
+        u = jnp.array([30.0, -50.0])
+        out = np.asarray(ovp.ovp_decode_codes(
+            ovp.ovp_encode_codes(u, "int4"), "int4"))
+        assert out[0] == 0.0          # smaller outlier becomes the victim
+        assert out[1] == -48.0        # -50 -> nearest E2M1*4 {…,-48,-64,…}
+
+    def test_exactly_one_nonzero_slot_when_outlier_present(self):
+        key = jax.random.PRNGKey(1)
+        x = heavy_tailed(key, (4096,))
+        s = 3 * jnp.std(x) / 7
+        u = x / s
+        codes = np.asarray(ovp.ovp_encode_codes(u, "int4"))
+        pairs = codes.reshape(-1, 2)
+        has_id = (pairs == dt.ID4).any(axis=1)
+        both_id = (pairs == dt.ID4).all(axis=1)
+        assert not both_id.any(), "a pair can never be two victims"
+        # identifier pairs decode with exactly one zero slot
+        out = np.asarray(ovp.ovp_decode_codes(jnp.asarray(codes),
+                                              "int4")).reshape(-1, 2)
+        for i in np.where(has_id)[0][:50]:
+            assert (out[i] == 0).sum() >= 1
+            assert np.abs(out[i]).max() > 7  # the outlier survived
+
+    @pytest.mark.parametrize("nd", ["int4", "flint4", "int8"])
+    def test_decode_error_bounded(self, nd):
+        key = jax.random.PRNGKey(2)
+        x = heavy_tailed(key, (8192,))
+        nmax = dt.NORMAL_MAX[nd]
+        s = 3 * jnp.std(x) / nmax
+        u = x / s
+        out = ovp.ovp_decode_codes(ovp.ovp_encode_codes(u, nd), nd)
+        err = np.asarray(jnp.abs(out - u))
+        spec = dt.ABFLOAT_FOR_NORMAL[nd]
+        # victims can be pruned (err <= nmax there); normals err <= 1;
+        # outliers: relative error <= 1/2^mb + clip at max
+        a = np.abs(np.asarray(u))
+        normal_mask = a <= nmax
+        # non-victim normal values: error <= quantization step (1.0 for int)
+        step = 4.0 if nd == "flint4" else 0.51  # flint4 widest gap 8 -> /2
+        pair_has_outlier = np.repeat(
+            (np.abs(np.asarray(u)).reshape(-1, 2) > nmax).any(1), 2)
+        ok = normal_mask & ~pair_has_outlier
+        assert err[ok].max() <= step
+
+    def test_int8_pairing(self):
+        u = jnp.array([300.0, 5.0, -1.0, 2.0])
+        codes = np.asarray(ovp.ovp_encode_codes(u, "int8"))
+        assert codes[1] == dt.ID8
+        out = np.asarray(ovp.ovp_decode_codes(jnp.asarray(codes), "int8"))
+        assert out[1] == 0.0 and out[0] > 127
+        np.testing.assert_array_equal(out[2:], [-1.0, 2.0])
+
+
+class TestQuantizedTensor:
+    def test_quantize_dequantize_shapes(self):
+        key = jax.random.PRNGKey(3)
+        x = heavy_tailed(key, (64, 32))
+        qt = ovp.ovp_quantize(x, 0.05, "int4", pair_axis=-1)
+        assert qt.data.shape == (64, 16)
+        assert qt.data.dtype == jnp.uint8
+        assert qt.shape == (64, 32)
+        xh = ovp.ovp_dequantize(qt)
+        assert xh.shape == (64, 32)
+
+    def test_pair_axis_0(self):
+        key = jax.random.PRNGKey(4)
+        x = heavy_tailed(key, (64, 32))
+        qt = ovp.ovp_quantize(x, 0.05, "int4", pair_axis=0)
+        assert qt.data.shape == (32, 32)
+        xh = ovp.ovp_dequantize(qt)
+        assert xh.shape == (64, 32)
+        # must agree with pair_axis=-1 on the transposed tensor
+        qt2 = ovp.ovp_quantize(x.T, 0.05, "int4", pair_axis=-1)
+        xh2 = ovp.ovp_dequantize(qt2)
+        np.testing.assert_allclose(np.asarray(xh), np.asarray(xh2).T)
+
+    def test_memory_is_4x_smaller(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (256, 256))
+        qt = ovp.ovp_quantize(x, 0.05, "int4")
+        assert qt.nbytes() < x.size * 4 / 3.9
+
+    def test_is_pytree(self):
+        x = jax.random.normal(jax.random.PRNGKey(6), (16, 16))
+        qt = ovp.ovp_quantize(x, 0.05, "int4")
+        leaves = jax.tree_util.tree_leaves(qt)
+        assert len(leaves) == 2  # data + scale
+        # jit through it
+        f = jax.jit(lambda q: ovp.ovp_dequantize(q))
+        out = f(qt)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ovp.ovp_dequantize(qt)))
+
+    def test_fake_quant_matches_quant_dequant(self):
+        key = jax.random.PRNGKey(7)
+        x = heavy_tailed(key, (128, 64))
+        fq = ovp.ovp_fake_quant(x, 0.07, "int4")
+        qd = ovp.ovp_dequantize(ovp.ovp_quantize(x, 0.07, "int4"))
+        np.testing.assert_allclose(np.asarray(fq), np.asarray(qd),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_pair_statistics_table2_shape():
+    key = jax.random.PRNGKey(8)
+    x = heavy_tailed(key, (1 << 16,), outlier_frac=0.005)
+    st = ovp.pair_statistics(x)
+    assert 0.97 < st["normal_normal"] <= 1.0
+    assert st["outlier_outlier"] < 0.005
+    total = (st["normal_normal"] + st["outlier_normal"]
+             + st["outlier_outlier"])
+    assert abs(total - 1.0) < 1e-5

@@ -1,0 +1,142 @@
+"""Property-based tests (hypothesis) for the OVP encoding invariants.
+
+System invariants under test, for every normal dtype and any real input:
+  I1  pack/unpack is an exact inverse
+  I2  encoded normal slots never hold the outlier identifier
+  I3  every victim (identifier) slot is adjacent to an abfloat outlier
+  I4  decode error of normal values ≤ the dtype's max rounding step
+  I5  outliers survive with bounded relative error (vs catastrophic clip)
+  I6  the MSE-searched scale never loses to the 3σ init
+  I7  QuantizedTensor round-trips shape/dtype for any pair axis
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.datatypes import (ABFLOAT_FOR_NORMAL, ID4, ID8, NORMAL_MAX,
+                                  abfloat_decode, abfloat_encode)
+from repro.core.ovp import (ovp_decode_codes, ovp_encode_codes,
+                            ovp_dequantize, ovp_quantize, pack4, unpack4)
+from repro.core.quantizer import ovp_search_scale, sigma_init_scale
+
+DTYPES = ["int4", "flint4", "int8"]
+
+
+def arrays(min_pairs=2, max_pairs=64, lo=-400.0, hi=400.0):
+    return st.lists(
+        st.floats(min_value=lo, max_value=hi, allow_nan=False,
+                  width=32),
+        min_size=2 * min_pairs, max_size=2 * max_pairs)\
+        .filter(lambda v: len(v) % 2 == 0)\
+        .map(lambda v: np.asarray(v, np.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(vals=arrays(), dt=st.sampled_from(["int4", "flint4"]))
+def test_pack_unpack_inverse(vals, dt):
+    codes = ovp_encode_codes(jnp.asarray(vals), dt)
+    rt = unpack4(pack4(codes))
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(codes))
+
+
+@settings(max_examples=40, deadline=None)
+@given(vals=arrays(), dt=st.sampled_from(DTYPES))
+def test_identifier_only_in_victim_slots(vals, dt):
+    ident = ID8 if dt == "int8" else ID4
+    codes = np.asarray(ovp_encode_codes(jnp.asarray(vals), dt))
+    c0, c1 = codes[0::2], codes[1::2]
+    # I2/I3: an identifier in one slot implies the partner is a non-zero
+    # abfloat code (outliers never encode to 0 — disabled code invariant)
+    both = (c0 == ident) & (c1 == ident)
+    assert not both.any(), "both slots cannot be victims"
+    spec = ABFLOAT_FOR_NORMAL[dt]
+    for vic, out in [(c0, c1), (c1, c0)]:
+        sel = vic == ident
+        if sel.any():
+            partner = out[sel]
+            decoded = np.asarray(abfloat_decode(jnp.asarray(partner), spec))
+            assert (decoded != 0).all(), "victim must pair with an outlier"
+
+
+@settings(max_examples=40, deadline=None)
+@given(vals=arrays(), dt=st.sampled_from(DTYPES))
+def test_normal_value_error_bounded(vals, dt):
+    t = NORMAL_MAX[dt]
+    codes = ovp_encode_codes(jnp.asarray(vals), dt)
+    dec = np.asarray(ovp_decode_codes(codes, dt))
+    v = vals.reshape(-1, 2)
+    d = dec.reshape(-1, 2)
+    a = np.abs(v)
+    # pairs where both |x| ≤ t are normal–normal: element error ≤ step
+    nn = (a[:, 0] <= t) & (a[:, 1] <= t)
+    step = {"int4": 0.5, "int8": 0.5, "flint4": 4.0}[dt]  # max half-gap
+    assert np.all(np.abs(d[nn] - v[nn]) <= step + 1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vals=arrays(), dt=st.sampled_from(DTYPES))
+def test_outlier_survives(vals, dt):
+    t = NORMAL_MAX[dt]
+    spec = ABFLOAT_FOR_NORMAL[dt]
+    codes = ovp_encode_codes(jnp.asarray(vals), dt)
+    dec = np.asarray(ovp_decode_codes(codes, dt))
+    v = vals.reshape(-1, 2)
+    d = dec.reshape(-1, 2)
+    a = np.abs(v)
+    # one-outlier pairs: the outlier decodes within abfloat's quantization
+    # error (≤ half the max gap between magnitudes) — never clipped to t
+    lone0 = (a[:, 0] > t) & (a[:, 1] <= t)
+    if lone0.any():
+        x, y = v[lone0, 0], d[lone0, 0]
+        in_range = np.minimum(np.abs(x), spec.max_mag)
+        # relative error of the kept outlier ≤ 50% (vs int4 clip: ~1-t/|x|)
+        assert np.all(np.abs(y - np.sign(x) * in_range)
+                      <= 0.5 * in_range + 1e-5)
+        assert np.all(d[lone0, 1] == 0), "its neighbour must be the victim"
+
+
+@settings(max_examples=15, deadline=None)
+@given(sigma=st.floats(0.02, 30.0), seed=st.integers(0, 2 ** 16))
+def test_mse_search_never_loses_to_3sigma(sigma, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (512,)) * sigma
+    s0 = sigma_init_scale(x, "int4")
+    s = ovp_search_scale(x, "int4", n_grid=16)
+
+    def mse(sc):
+        from repro.core.ovp import ovp_fake_quant
+        return float(jnp.mean((ovp_fake_quant(x, sc, "int4") - x) ** 2))
+
+    assert mse(s) <= mse(s0) * (1 + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 5), pairs=st.integers(1, 8),
+       axis=st.sampled_from([0, 1]), dt=st.sampled_from(DTYPES),
+       seed=st.integers(0, 99))
+def test_quantized_tensor_roundtrip_shapes(rows, pairs, axis, dt, seed):
+    shape = [rows, 2 * pairs] if axis == 1 else [2 * pairs, rows]
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * 2.0
+    qt = ovp_quantize(x, 1.0, dt, pair_axis=axis)
+    xh = ovp_dequantize(qt)
+    assert xh.shape == tuple(shape)
+    assert qt.shape == tuple(shape)
+    if dt != "int8":
+        assert qt.data.shape[qt.pair_axis] == pairs
+    assert qt.data.dtype == jnp.uint8
+
+
+@settings(max_examples=30, deadline=None)
+@given(vals=arrays(min_pairs=4), dt=st.sampled_from(["int4", "flint4"]))
+def test_abfloat_codes_reencode_stable(vals, dt):
+    """decode(encode(x)) is a fixed point of the abfloat codec."""
+    spec = ABFLOAT_FOR_NORMAL[dt]
+    big = jnp.asarray(np.abs(vals) + spec.min_mag)  # force outlier range
+    c1 = abfloat_encode(big, spec)
+    d1 = abfloat_decode(c1, spec)
+    c2 = abfloat_encode(d1, spec)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))

@@ -1,0 +1,163 @@
+"""Unit tests for the sharding rules: divisibility fallbacks, long-context
+SP, vocab padding, and spec derivation for representative param shapes.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.sharding.rules import (cache_pspecs, make_rules, param_spec,
+                                  params_pspecs)
+
+
+def make_mesh(shape, axes):
+    """Spec derivation only needs axis sizes — AbstractMesh works on one
+    CPU device."""
+    return AbstractMesh(shape, axes)
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    return make_mesh((2, 2), ("data", "model"))
+
+
+class TestMakeRules:
+    def test_divisible_heads_go_model(self, mesh22):
+        cfg = get_config("yi-6b")          # 32 heads % 2 == 0
+        r = make_rules(cfg, mesh22)
+        assert r["heads"] == "model"
+        assert r["batch"] == "data"
+
+    def test_nondivisible_falls_back(self, mesh22):
+        # qwen2-7b kv=4 divisible by 2; fabricate a 3-head config
+        cfg = get_config("qwen2-7b")
+        import dataclasses
+        odd = dataclasses.replace(cfg, n_heads=7, n_kv_heads=7)
+        r = make_rules(odd, mesh22)
+        assert r["heads"] is None
+
+    def test_long_context_replicates_batch_shards_seq(self, mesh22):
+        cfg = get_config("recurrentgemma-9b")
+        r = make_rules(cfg, mesh22, long_context=True)
+        assert r["batch"] is None
+        assert r["seq"] == "data"
+
+    def test_long_context_multipod_uses_both_axes(self):
+        mesh = make_mesh((1, 2, 2), ("pod", "data", "model"))
+        cfg = get_config("xlstm-350m")
+        r = make_rules(cfg, mesh, long_context=True)
+        assert r["batch"] is None
+        assert r["seq"] in (("pod", "data"), "pod", "data")
+
+    def test_vocab_uses_padded(self, mesh22):
+        cfg = get_config("seamless-m4t-large-v2")   # vocab 256206 -> padded
+        assert cfg.padded_vocab % 256 == 0
+        r = make_rules(cfg, mesh22)
+        assert r["vocab"] == "model"
+
+
+class TestVocabPadding:
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    def test_all_archs_pad_to_256(self, arch):
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert 0 <= cfg.padded_vocab - cfg.vocab < 256
+
+    def test_padded_logits_masked(self):
+        """Model with padded vocab must never emit a pad-token argmax."""
+        import jax.numpy as jnp
+        from repro.configs.base import ArchConfig
+        from repro.core.policy import QuantPolicy
+        from repro.models.model import build_model
+        cfg = ArchConfig(name="padtest", family="dense", n_layers=1,
+                         d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                         vocab=300, head_dim=16, block_pattern=("attn",))
+        assert cfg.padded_vocab == 512
+        model = build_model(cfg, QuantPolicy(compute_dtype="float32"),
+                            remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jnp.zeros((2, 8), jnp.int32)
+        logits, _, _ = model.forward(params, {"tokens": toks},
+                                     mode="train")
+        assert logits.shape[-1] == 512
+        assert np.all(np.asarray(logits[..., 300:]) <= -1e8)
+
+
+class TestParamSpecs:
+    def test_stacked_qkv_spec(self, mesh22):
+        cfg = get_config("yi-6b")
+        # stacked (G, d_model, H*hd): TP out-dim, FSDP in-dim
+        class K:  # fake key path
+            def __init__(self, key):
+                self.key = key
+        spec = param_spec((K("blocks"), K("0"), K("attn"), K("wq")),
+                          (16, 4096, 4096), cfg, {"data": 2, "model": 2})
+        assert spec == P(None, "data", "model")
+
+    def test_row_parallel_wo(self, mesh22):
+        cfg = get_config("yi-6b")
+        class K:
+            def __init__(self, key):
+                self.key = key
+        spec = param_spec((K("blocks"), K("0"), K("attn"), K("wo")),
+                          (16, 4096, 4096), cfg, {"data": 2, "model": 2})
+        assert spec == P(None, "model", "data")
+
+    def test_moe_expert_dim_ep(self, mesh22):
+        cfg = get_config("qwen3-moe-30b-a3b")   # 128 experts % 2 == 0
+        class K:
+            def __init__(self, key):
+                self.key = key
+        spec = param_spec(
+            (K("blocks"), K("0"), K("moe"), K("experts"), K("wg")),
+            (12, 128, 2048, 768), cfg, {"data": 2, "model": 2})
+        assert spec[1] == "model"   # EP on the expert dim
+
+    def test_norms_replicated(self, mesh22):
+        cfg = get_config("yi-6b")
+        class K:
+            def __init__(self, key):
+                self.key = key
+        spec = param_spec((K("blocks"), K("0"), K("ln1"),
+                           K("gamma_scale")), (16, 4096), cfg,
+                          {"data": 2, "model": 2})
+        assert spec == P(None, None)
+
+
+class TestCachePSpecs:
+    def test_kv_cache_spec_decode(self, mesh22):
+        from repro.core.policy import QuantPolicy
+        from repro.models.model import build_model
+        cfg = get_config("yi-6b").reduced()
+        model = build_model(cfg, QuantPolicy())
+        caches = jax.eval_shape(lambda: model.init_caches(8, 64))
+        specs = cache_pspecs(caches, cfg, mesh22)
+        flat = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert all(isinstance(s, P) for s in flat)
+
+    def test_kv_cache_long_context_seq_sharded(self):
+        mesh = make_mesh((2, 2), ("data", "model"))
+        from repro.core.policy import QuantPolicy
+        from repro.models.model import build_model
+        cfg = get_config("recurrentgemma-9b").reduced()
+        model = build_model(cfg, QuantPolicy())
+        caches = jax.eval_shape(lambda: model.init_caches(1, 64))
+        specs = cache_pspecs(caches, cfg, mesh, long_context=True)
+
+        def kv_specs(specs, caches):
+            flat_s = jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]
+            return {("/".join(str(getattr(k, "key", k)) for k in kp)): s
+                    for kp, s in flat_s}
+
+        m = kv_specs(specs, caches)
+        kv = {k: v for k, v in m.items() if k.endswith("/k")}
+        assert kv, "expected kv leaves"
+        for k, s in kv.items():
+            # batch dim replicated, seq dim sharded over data
+            assert "data" in jax.tree_util.tree_leaves(s) or \
+                s[-3] == "data"
