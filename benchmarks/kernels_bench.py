@@ -1,12 +1,16 @@
-"""Kernel microbenchmarks: the fused OVP-decode matmul vs oracles.
+"""Kernel microbenchmarks: the fused OVP matmul vs oracles, and the fused
+single-dispatch path vs the unfused encode -> matmul -> scale pipeline.
 
 On this CPU container the Pallas kernels run in interpret mode (Python
 emulation — correctness, not speed), so the numbers that matter are:
   1. allclose of pallas-interpret vs the pure-jnp oracle (correctness),
   2. wall time of the XLA decode-and-matmul path vs an fp32 matmul at the
-     same logical shape (the decode prologue's overhead on CPU), and
+     same logical shape (the decode prologue's overhead on CPU),
   3. the HBM-traffic ratio (packed bytes vs bf16/fp32 bytes) — the term
-     that governs TPU performance (see speedup.py / §Perf).
+     that governs TPU performance (see speedup.py / §Perf), and
+  4. the dispatch-count delta of the fused backend: one pallas_call vs
+     the unfused XLA-encode -> kernel-decode -> XLA-scale round trip
+     (which also writes + rereads the packed activation tensor in HBM).
 """
 from __future__ import annotations
 
@@ -16,10 +20,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backends
 from repro.core.ovp import ovp_dequantize, ovp_quantize
+from repro.core.quantizer import sigma_init_scale
 from repro.kernels import ops, ref
+from repro.kernels import ovp_matmul as raw_kernels
 
 from . import common
+
+count_pallas_calls = backends.count_pallas_calls
 
 
 def main() -> int:
@@ -65,6 +74,35 @@ def main() -> int:
     bytes_bf16 = w.size * 2
     bytes_f32 = w.size * 4
 
+    # 4) fused single-dispatch path vs the unfused pipeline it replaced:
+    #    XLA-side encode kernel -> packed tensor -> decode matmul kernel ->
+    #    XLA scale multiply (3 dispatches + an HBM round trip of the packed
+    #    activations) vs ONE pallas_call with the in-kernel prologue.
+    a_scale = sigma_init_scale(a, "int4")
+
+    def fused(a, a_scale):
+        return ops.fused_ovp_matmul(a, wq, a_dtype="int4",
+                                    act_scale=a_scale, interpret=True)
+
+    def unfused(a, a_scale):
+        packed = ops.ovp_encode(a, a_scale, interpret=True)
+        scaled_units = raw_kernels.ovp_matmul_w4a4(packed, wq.data,
+                                                   interpret=True)
+        return scaled_units * a_scale * jnp.asarray(wq.scale)
+
+    n_fused = count_pallas_calls(fused, a, a_scale)
+    n_unfused = count_pallas_calls(unfused, a, a_scale)
+    out_fused = fused(a, a_scale)
+    out_unfused = unfused(a, a_scale)
+    err_fuse = float(jnp.max(jnp.abs(out_fused - out_unfused))
+                     / (jnp.max(jnp.abs(out_unfused)) + 1e-9))
+    us_fused = common.timer(jax.jit(fused), a, a_scale)
+    us_unfused = common.timer(jax.jit(unfused), a, a_scale)
+    pallas = backends.get_backend("pallas")
+    xla_b = backends.get_backend("xla")
+    ok = ok and err_fuse < 1e-5 and n_fused == pallas.dispatches_per_matmul \
+        and n_fused < n_unfused
+
     print("# kernel correctness: max rel err "
           f"w4a16={err16:.2e} w4a4={err4:.2e}")
     print(f"# xla decode-matmul {us_q:.0f}us vs plain fp32 {us_p:.0f}us "
@@ -72,12 +110,20 @@ def main() -> int:
     print(f"# weight bytes: packed={bytes_packed} bf16={bytes_bf16} "
           f"fp32={bytes_f32} (ratios {bytes_bf16/bytes_packed:.2f}x / "
           f"{bytes_f32/bytes_packed:.2f}x)")
+    print(f"# fused vs unfused W4A4 dispatch: {n_fused} pallas_call vs "
+          f"{n_unfused} + XLA scale mul ({xla_b.dispatches_per_matmul} "
+          f"dispatches end-to-end unfused); rel err {err_fuse:.1e}; "
+          f"interpret-mode wall {us_fused:.0f}us vs {us_unfused:.0f}us; "
+          f"packed-act HBM round trip eliminated: {a.size // 2} B/matmul")
 
     us = (time.perf_counter() - t0) * 1e6
     common.emit("kernels_bench", us,
                 f"err16={err16:.1e} err4={err4:.1e} "
                 f"xla_decode_us={us_q:.0f} plain_us={us_p:.0f} "
-                f"traffic_vs_bf16={bytes_bf16/bytes_packed:.2f}x ok={ok}")
+                f"traffic_vs_bf16={bytes_bf16/bytes_packed:.2f}x "
+                f"fused_calls={n_fused} unfused_calls={n_unfused} "
+                f"fused_us={us_fused:.0f} unfused_us={us_unfused:.0f} "
+                f"ok={ok}")
     return 0 if ok else 1
 
 

@@ -32,6 +32,7 @@ import time
 
 import numpy as np
 
+from repro import backends
 from repro.configs import ARCHS
 from repro.roofline import hw
 
@@ -55,11 +56,23 @@ METHODS = {
 }
 
 
+def act_elements(cfg, batch) -> float:
+    """Per-decode-step activation elements (≈8 linear operands/layer)."""
+    return batch * cfg.n_layers * 8 * cfg.d_model
+
+
 def step_bytes(cfg, batch, ctx, w_bpe, kv_bpe, a_bpe) -> float:
     n = cfg.active_param_count()
     kv = batch * ctx * 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
-    act = batch * cfg.n_layers * 8 * cfg.d_model
-    return n * w_bpe + kv * kv_bpe + act * a_bpe
+    return n * w_bpe + kv * kv_bpe + act_elements(cfg, batch) * a_bpe
+
+
+def act_encode_roundtrip_bytes(cfg, batch, a_bpe) -> float:
+    """Extra HBM bytes/step when activation OVP encode is NOT fused into
+    the matmul kernel: the packed tensor is written by the encode dispatch
+    and reread by the matmul. Whether a backend eliminates this round trip
+    comes from its `fuses_act_encode` flag (see main below)."""
+    return 2 * act_elements(cfg, batch) * a_bpe
 
 
 def measured_bf16_bytes(arch: str):
@@ -109,6 +122,26 @@ def main() -> int:
     print(f"# decode_32k: weight-only OliVe gives just {w_only_32k:.2f}x "
           f"(KV-dominated); OVP KV cache adds {kv_32k:.2f}x on top "
           f"(beyond-paper, see EXPERIMENTS.md §Perf)")
+
+    # fused-prologue term, read from the backend registry: the pallas
+    # backend encodes activations inside the matmul kernel, the xla
+    # backend round-trips a packed activation tensor through HBM
+    exec_backend = backends.get_backend("pallas")
+    unfused_backend = backends.get_backend(exec_backend.fallback)
+    if exec_backend.fuses_act_encode and not unfused_backend.fuses_act_encode:
+        for regime, (batch, ctx) in REGIMES.items():
+            extra = {nme: act_encode_roundtrip_bytes(ARCHS[nme], batch,
+                                                     METHODS["olive4"][2])
+                     for nme in MODELS}
+            frac = float(np.mean(
+                [extra[nme] / rows[regime][nme]["bytes"]["olive4"]
+                 for nme in MODELS]))
+            print(f"# fused act-encode prologue ({exec_backend.name}: "
+                  f"{exec_backend.dispatches_per_matmul} dispatch vs "
+                  f"{unfused_backend.name}: "
+                  f"{unfused_backend.dispatches_per_matmul}) saves "
+                  f"{np.mean(list(extra.values()))/1e6:.2f} MB/step "
+                  f"({100*frac:.2f}% of olive4 traffic) in {regime}")
     for name in MODELS:
         meas = measured_bf16_bytes(name)
         if meas:

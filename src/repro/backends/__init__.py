@@ -1,0 +1,116 @@
+"""Quantized-execution backend registry.
+
+One entry point — `dispatch(x, w, policy, act_scale)` — executes every
+quantized matmul in the repo. `policy.backend` names a registered
+`QuantizedMatmulBackend`; consumers (qlinear, model layers, the serving
+engine, benchmarks) never branch on backend strings themselves.
+
+Registered backends:
+  xla              — dequantize-to-compute-dtype, XLA fuses decode into the
+                     GEMM prologue; handles any rank and stacked weights
+                     (also the fallback for unsupported operand layouts)
+  pallas           — single fused pallas_call: in-kernel activation OVP
+                     quantization + VMEM weight decode + scale epilogue
+  pallas_interpret — same kernel, CPU interpreter (tests / this container)
+  reference        — pure-jnp fp32 oracle (equivalence tests)
+
+Adding a backend: subclass `QuantizedMatmulBackend`, implement `matmul`
+(and `supports` if partial), then `register(MyBackend())` — the name
+becomes a valid `QuantPolicy.backend` value everywhere at once. See
+docs/backends.md.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.core.ovp import QuantizedTensor
+from repro.core.policy import QuantPolicy
+
+from .base import (QuantizedMatmulBackend, act_normal_dtype,
+                   quantize_activation, resolve_act_scale)
+from .pallas import PallasBackend, PallasInterpretBackend
+from .reference import ReferenceBackend
+from .xla import XlaBackend
+
+_REGISTRY: Dict[str, QuantizedMatmulBackend] = {}
+
+
+def register(backend: QuantizedMatmulBackend) -> QuantizedMatmulBackend:
+    """Register (or override) a backend under `backend.name`."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> QuantizedMatmulBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown quantized-matmul backend {name!r}; "
+                       f"registered: {available()}") from None
+
+
+def available() -> list:
+    return sorted(_REGISTRY)
+
+
+for _b in (XlaBackend(), PallasBackend(), PallasInterpretBackend(),
+           ReferenceBackend()):
+    register(_b)
+del _b
+
+
+def count_pallas_calls(fn, *args) -> int:
+    """Number of pallas_call primitives in fn's jaxpr (recursing through
+    pjit/closed-call sub-jaxprs) — the kernel-dispatch count of a pipeline.
+    Benchmarks and tests use it to verify a backend's fusion claim
+    (`dispatches_per_matmul`) against the traced program."""
+    closed = jax.make_jaxpr(fn)(*args)
+
+    def sub_jaxprs(v):
+        # params hold sub-jaxprs as ClosedJaxpr (.jaxpr), bare Jaxpr
+        # (.eqns), or tuples/lists of either (e.g. lax.cond branches)
+        if isinstance(v, (tuple, list)):
+            for item in v:
+                yield from sub_jaxprs(item)
+        else:
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                yield inner
+            elif hasattr(v, "eqns"):
+                yield v
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                for inner in sub_jaxprs(v):
+                    n += walk(inner)
+        return n
+
+    return walk(closed.jaxpr)
+
+
+def dispatch(x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
+             act_scale: Optional[jax.Array] = None,
+             precision=None) -> jax.Array:
+    """Execute x (..., K) @ dequant(w) (K, N) on the policy's backend.
+
+    Falls back (one hop) when the requested backend does not support the
+    operand layout — e.g. stacked per-expert weights on the Pallas kernel
+    run on XLA instead of asserting mid-trace.
+    """
+    backend = get_backend(policy.backend)
+    if not backend.supports(x, w, policy):
+        backend = get_backend(backend.fallback)
+    return backend.matmul(x, w, policy, act_scale=act_scale,
+                          precision=precision)
+
+
+__all__ = ["QuantizedMatmulBackend", "register", "get_backend", "available",
+           "dispatch", "count_pallas_calls", "quantize_activation",
+           "resolve_act_scale", "act_normal_dtype", "XlaBackend",
+           "PallasBackend", "PallasInterpretBackend", "ReferenceBackend"]

@@ -1,0 +1,82 @@
+"""Backend interface + the canonical activation-quantization rule.
+
+A backend executes one quantized matmul: real-valued lhs `x` against an
+OVP `QuantizedTensor` weight, under a `QuantPolicy`. Everything upstream
+(models, serving engine, benchmarks) talks to `repro.backends.dispatch`;
+nothing above this layer branches on backend names.
+
+The activation scale rule lives here — NOT per backend — so every backend
+quantizes activations identically and their outputs are comparable
+bit-for-bit up to matmul reassociation. `core.qlinear.quantize_activation`
+delegates to `quantize_activation` below.
+
+This module must not import `repro.core.qlinear` (qlinear routes through
+the registry; importing it back would be a cycle).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ovp import QuantizedTensor, ovp_quantize
+from repro.core.policy import QuantPolicy
+from repro.core.quantizer import sigma_init_scale
+
+
+def act_normal_dtype(policy: QuantPolicy) -> str:
+    """The paper's A-side dtype rule: 4-bit uses the policy's activation
+    normal dtype, 8-bit always int8 OVP."""
+    return policy.a_normal_dtype if policy.abits == 4 else "int8"
+
+
+def resolve_act_scale(x: jax.Array, policy: QuantPolicy,
+                      static_scale: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, str]:
+    """Returns (scale, normal_dtype) for the A side of one matmul."""
+    nd = act_normal_dtype(policy)
+    if policy.act_scale_mode == "static" and static_scale is not None:
+        return jnp.asarray(static_scale, jnp.float32), nd
+    return sigma_init_scale(x, nd), nd  # dynamic 3σ rule, cheap (one std)
+
+
+def quantize_activation(x: jax.Array, policy: QuantPolicy,
+                        static_scale: Optional[jax.Array] = None
+                        ) -> QuantizedTensor:
+    """Materialized OVP activation tensor (XLA/reference paths; the fused
+    Pallas path quantizes in the kernel prologue instead)."""
+    s, nd = resolve_act_scale(x, policy, static_scale)
+    return ovp_quantize(x, s, nd, pair_axis=-1)
+
+
+class QuantizedMatmulBackend:
+    """One way to execute x @ dequant(w) under a policy.
+
+    Subclasses set `name` (the registry key / `policy.backend` value) and
+    implement `matmul`. `supports` gates dispatch: when it returns False
+    the registry falls back to the `fallback` backend (default "xla"), so
+    partial backends (e.g. a kernel without stacked-weight support) degrade
+    gracefully instead of asserting mid-trace.
+    """
+
+    name: str = "?"
+    fallback: str = "xla"
+    # True when activation OVP encode runs inside the matmul kernel (no
+    # packed activation round trip through HBM) — benchmarks and the
+    # roofline model read this.
+    fuses_act_encode: bool = False
+    # Device dispatches per quantized matmul with activation quantization
+    # on: the unfused pipeline is encode + matmul + scale-multiply.
+    dispatches_per_matmul: int = 3
+
+    def supports(self, x, w: QuantizedTensor, policy: QuantPolicy) -> bool:
+        return True
+
+    def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
+               act_scale: Optional[jax.Array] = None,
+               precision=None) -> jax.Array:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name!r}>"

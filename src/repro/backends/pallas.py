@@ -1,0 +1,56 @@
+"""Fused Pallas backend: one `pallas_call` per quantized matmul.
+
+Activation OVP quantization runs as the kernel prologue at a precomputed
+per-tensor/per-row scale (no packed activation tensor in HBM, no XLA
+encode -> kernel decode round trip), weight codes decode in VMEM, and both
+scales apply in the accumulator epilogue. 2-D and 3-D lhs share the kernel
+via its batch grid dim, so serving decode-step GEMMs hit the fused path
+without reshape glue.
+
+`pallas_interpret` is the same backend with `interpret=True` — the CPU
+emulation used by tests and this container; numerics are identical.
+
+Stacked (scan/per-expert) weights carry a leading dim the kernel's weight
+operand doesn't model — `supports` returns False there and dispatch falls
+back to the XLA backend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ovp import QuantizedTensor
+from repro.core.policy import QuantPolicy
+from repro.kernels import ops
+
+from .base import QuantizedMatmulBackend, act_normal_dtype, resolve_act_scale
+
+
+class PallasBackend(QuantizedMatmulBackend):
+    name = "pallas"
+    interpret = False
+    fuses_act_encode = True
+    dispatches_per_matmul = 1
+
+    def supports(self, x, w: QuantizedTensor, policy: QuantPolicy) -> bool:
+        # 2-D weights only (stacked weights fall back to XLA); pairing must
+        # run along K, which quantize_weight guarantees (pair_axis = -2).
+        return w.data.ndim == 2 and w.pair_axis % 2 == 0 and x.ndim >= 2
+
+    def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
+               act_scale: Optional[jax.Array] = None,
+               precision=None) -> jax.Array:
+        cdt = jnp.dtype(policy.compute_dtype)
+        a_dtype = None
+        scale = None
+        if policy.abits:
+            scale, a_dtype = resolve_act_scale(x, policy, act_scale)
+        return ops.fused_ovp_matmul(x, w, a_dtype=a_dtype, act_scale=scale,
+                                    out_dtype=cdt, interpret=self.interpret)
+
+
+class PallasInterpretBackend(PallasBackend):
+    name = "pallas_interpret"
+    interpret = True

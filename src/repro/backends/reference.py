@@ -1,0 +1,34 @@
+"""Pure-jnp fp32 oracle backend.
+
+Same quantization semantics as every other backend (shared activation rule
+from `backends.base`), but everything runs in float32 with no kernel, no
+padding, and no compute-dtype cast. Equivalence tests compare the real
+backends against this one.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ovp import QuantizedTensor, ovp_dequantize
+from repro.core.policy import QuantPolicy
+
+from .base import QuantizedMatmulBackend, quantize_activation
+
+
+class ReferenceBackend(QuantizedMatmulBackend):
+    name = "reference"
+    fuses_act_encode = False
+    dispatches_per_matmul = 3
+
+    def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
+               act_scale: Optional[jax.Array] = None,
+               precision=None) -> jax.Array:
+        wd = ovp_dequantize(w, dtype=jnp.float32)
+        xd = x.astype(jnp.float32)
+        if policy.abits:
+            xq = quantize_activation(x, policy, act_scale)
+            xd = ovp_dequantize(xq, dtype=jnp.float32)
+        return jnp.matmul(xd, wd, preferred_element_type=jnp.float32)

@@ -1,0 +1,36 @@
+"""XLA decode-and-matmul backend.
+
+Dequantizes the weight (and, when `policy.abits`, a materialized OVP
+round-trip of the activation) to the compute dtype and lets XLA fuse the
+decode into the GEMM prologue. This is the portable path: it handles any
+lhs rank and stacked (scan/per-expert) weights via broadcasting, so it is
+also the registry's fallback backend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ovp import QuantizedTensor, ovp_dequantize
+from repro.core.policy import QuantPolicy
+
+from .base import QuantizedMatmulBackend, quantize_activation
+
+
+class XlaBackend(QuantizedMatmulBackend):
+    name = "xla"
+    fuses_act_encode = False
+    dispatches_per_matmul = 3  # encode, matmul, scale (pre-fusion XLA ops)
+
+    def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
+               act_scale: Optional[jax.Array] = None,
+               precision=None) -> jax.Array:
+        cdt = jnp.dtype(policy.compute_dtype)
+        wd = ovp_dequantize(w, dtype=cdt)
+        if policy.abits:
+            xq = quantize_activation(x, policy, act_scale)
+            xd = ovp_dequantize(xq, dtype=cdt)
+            return jnp.matmul(xd, wd, precision=precision).astype(cdt)
+        return jnp.matmul(x.astype(cdt), wd, precision=precision)

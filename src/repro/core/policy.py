@@ -40,8 +40,9 @@ class QuantPolicy:
     # where quantize_params already converted the eligible ones)
     qat: bool = False
 
-    # execution backend for quantized matmuls
-    backend: str = "xla"                # xla | pallas | pallas_interpret
+    # execution backend for quantized matmuls: any name registered in
+    # `repro.backends` (xla | pallas | pallas_interpret | reference | ...)
+    backend: str = "xla"
 
     # compute dtype for the dequantized matmul on the MXU
     compute_dtype: str = "bfloat16"

@@ -5,10 +5,10 @@ Weights arrive either as raw arrays (training / fp serving) or as
 
   raw + policy off        -> plain matmul
   raw + policy on (QAT)   -> STE fake-quant matmul
-  QuantizedTensor         -> decode-and-matmul, on the XLA path (dequantize to
-                             compute dtype; XLA fuses decode into the GEMM
-                             prologue) or the Pallas path (fused VMEM decode
-                             kernel, repro.kernels)
+  QuantizedTensor         -> `repro.backends.dispatch`: the registered
+                             execution backend named by `policy.backend`
+                             (xla decode-and-matmul, fused Pallas kernel,
+                             fp32 reference, ...)
 
 Pairing/packing is always along the reduction dim so per-channel (output)
 scales never split a pair.
@@ -20,9 +20,10 @@ from typing import Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro import backends
+
 from . import baselines
-from .datatypes import NORMAL_MAX
-from .ovp import QuantizedTensor, ovp_dequantize, ovp_quantize
+from .ovp import QuantizedTensor
 from .policy import QuantPolicy
 from .quantizer import (QuantSpec, fake_quant_ste, quantize,
                         sigma_init_scale)
@@ -63,41 +64,27 @@ def quantize_weight(w: jax.Array, policy: QuantPolicy) -> Weight:
 # --------------------------------------------------------------------------
 def quantize_activation(x: jax.Array, policy: QuantPolicy,
                         static_scale: Optional[jax.Array] = None):
-    """Returns (QuantizedTensor | fake-quant array) for the A side."""
-    nd = policy.a_normal_dtype if policy.abits == 4 else "int8"
-    if policy.act_scale_mode == "static" and static_scale is not None:
-        s = static_scale
-    else:
-        s = sigma_init_scale(x, nd)  # dynamic 3σ rule, cheap (one std)
-    return ovp_quantize(x, s, nd, pair_axis=-1)
+    """Materialized OVP activation tensor for the A side.
+
+    The scale rule is owned by `repro.backends.base` so every execution
+    backend quantizes identically; this delegate keeps the public API.
+    The fused Pallas backend never calls this — it quantizes in the kernel
+    prologue from the same resolved scale.
+    """
+    return backends.quantize_activation(x, policy, static_scale)
 
 
 # --------------------------------------------------------------------------
 # The quantized matmul
 # --------------------------------------------------------------------------
-def _dequant_w(w: QuantizedTensor, dtype) -> jax.Array:
-    return ovp_dequantize(w, dtype=dtype)
-
-
 def qmatmul(x: jax.Array, w: Weight, policy: QuantPolicy,
             act_scale: Optional[jax.Array] = None,
             precision=None) -> jax.Array:
     """x: (..., K) @ w: (K, N) with the policy's quantization applied."""
     cdt = jnp.dtype(policy.compute_dtype)
     if isinstance(w, QuantizedTensor):
-        if policy.backend.startswith("pallas"):
-            from repro.kernels import ops as kops
-            interpret = policy.backend == "pallas_interpret"
-            xq = (quantize_activation(x, policy, act_scale)
-                  if policy.abits else None)
-            return kops.ovp_matmul(x if xq is None else xq, w,
-                                   out_dtype=cdt, interpret=interpret)
-        wd = _dequant_w(w, cdt)
-        if policy.abits:
-            xq = quantize_activation(x, policy, act_scale)
-            xd = ovp_dequantize(xq, dtype=cdt)
-            return jnp.matmul(xd, wd, precision=precision).astype(cdt)
-        return jnp.matmul(x.astype(cdt), wd, precision=precision)
+        return backends.dispatch(x, w, policy, act_scale=act_scale,
+                                 precision=precision)
     # raw weights
     if policy.enabled and policy.qat and policy.method == "olive":
         # QAT path: STE fake-quant on W (and A if configured)

@@ -1,8 +1,12 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the fused OVP Pallas kernel.
 
-Handles: shape padding to block multiples, scale application (kernels work
-in scaled units), QuantizedTensor plumbing, and the interpret switch (CPU
-validation vs TPU execution).
+Handles: lhs normalization to the kernel's 3-D (batch, M, K) layout, shape
+padding to block multiples, scale broadcasting into the kernel's epilogue
+layout (per-row activation / per-output-channel weight), QuantizedTensor
+plumbing, and the interpret switch (CPU validation vs TPU execution).
+
+Scales are applied *inside* the kernel epilogue — there is no post-kernel
+XLA multiply; a quantized matmul is exactly one device dispatch.
 """
 from __future__ import annotations
 
@@ -27,86 +31,159 @@ def _pad_to(x: jax.Array, mults, value=0):
     return jnp.pad(x, pads, constant_values=value)
 
 
-def _block_sizes(m, n, k, bm, bn, bk):
-    """Clamp block sizes to the (padded) problem size."""
-    bm = min(bm, max(8, m))
-    bn = min(bn, max(128, n)) if n >= 128 else n
-    bk = min(bk, k)
-    return bm, bn, bk
+@functools.partial(jax.jit, static_argnames=("w_dtype", "a_mode", "a_dtype",
+                                             "out_dtype", "interpret",
+                                             "bm", "bn", "bk"))
+def _fused_padded(a3: jax.Array, sa3: jax.Array, w_data: jax.Array,
+                  sw: jax.Array, *, w_dtype: str, a_mode: str, a_dtype: str,
+                  out_dtype=jnp.float32, interpret: bool = False,
+                  bm: int = 128, bn: int = 128, bk: int = 256) -> jax.Array:
+    """Pad operands to block multiples, run the fused kernel, slice back.
+
+    a3 (B, M, Ka); sa3 (B, M, 1); w_data (Kw, N); sw (1, N).
+    Padded activation rows get scale 1 (prologue divides by the scale) and
+    padded codes/values decode to 0, so padding never perturbs the result.
+    """
+    b, m, ka = a3.shape
+    kw, n = w_data.shape
+    k2 = kw if w_dtype != "int8" else kw // 2
+    # clamp blocks to the problem, then pad up to the clamped multiples
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk2 = min(bk // 2, k2)
+    a_mult = bk2 if a_mode == "codes4" else 2 * bk2
+    w_mult = bk2 if w_dtype != "int8" else 2 * bk2
+    ap = _pad_to(a3, (1, bm, a_mult))
+    sap = _pad_to(sa3, (1, bm, 1), value=1.0)
+    wp = _pad_to(w_data, (w_mult, bn))
+    swp = _pad_to(sw, (1, bn), value=1.0)
+    out = _mm.fused_ovp_matmul_kernel(ap, sap, wp, swp, w_dtype=w_dtype,
+                                      a_mode=a_mode, a_dtype=a_dtype,
+                                      bm=bm, bn=bn, bk=2 * bk2,
+                                      interpret=interpret)
+    return out[:, :m, :n].astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("normal_dtype", "out_dtype",
-                                             "interpret", "bm", "bn", "bk"))
+def _as_3d(x: jax.Array):
+    """(…, M, K) -> ((B, M, K), lead) with all leading dims folded into B."""
+    if x.ndim < 2:
+        raise ValueError(f"lhs must be at least 2-D, got {x.shape}")
+    lead = x.shape[:-2]
+    b = 1
+    for d in lead:
+        b *= d
+    return x.reshape(b, x.shape[-2], x.shape[-1]), lead
+
+
+def _row_scale(s, x: jax.Array) -> jax.Array:
+    """Broadcast a scalar / per-row scale to the kernel's (B, M, 1)."""
+    s = jnp.asarray(s, jnp.float32)
+    target = x.shape[:-1] + (1,)
+    if s.ndim and s.shape == x.shape[:-1]:
+        s = s[..., None]
+    s3, _ = _as_3d(jnp.broadcast_to(s, target))
+    return s3
+
+
+def _col_scale(s, n: int) -> jax.Array:
+    """Broadcast a scalar / per-channel weight scale to (1, N)."""
+    s = jnp.asarray(s, jnp.float32)
+    return jnp.broadcast_to(s.reshape(1, -1) if s.ndim else s, (1, n))
+
+
+def fused_ovp_matmul(x: Union[jax.Array, QuantizedTensor],
+                     w: QuantizedTensor, *,
+                     a_dtype: Optional[str] = None,
+                     act_scale: Optional[jax.Array] = None,
+                     out_dtype=jnp.float32, interpret: bool = False,
+                     bm: int = 128, bn: int = 128,
+                     bk: int = 256) -> jax.Array:
+    """Single-dispatch quantized matmul: (…, K) @ (K, N) -> (…, N).
+
+    x is either a real-valued tensor — used as-is (W4A16/W8A16) or
+    OVP-quantized in the kernel prologue when `a_dtype` is set (pass the
+    per-tensor or per-row `act_scale`; no packed activation tensor is ever
+    materialized) — or a pre-quantized `QuantizedTensor` whose codes are
+    decoded in the prologue. Weight pairs must run along K; any leading lhs
+    dims are batch (3-D decode-step GEMMs take the same path as 2-D).
+    """
+    n = w.data.shape[-1]
+    sw = _col_scale(w.scale, n)
+    if isinstance(x, QuantizedTensor):
+        a_mode = "codes4" if x.is_packed else "codes8"
+        a3, lead = _as_3d(x.data)
+        sa3 = _row_scale(x.scale, x.data)
+        a_dtype = x.normal_dtype
+    elif a_dtype is not None:
+        if act_scale is None:
+            raise ValueError("in-kernel activation quantization needs an "
+                             "act_scale (per-tensor or per-row)")
+        a_mode = "quantize"
+        a3, lead = _as_3d(x)
+        sa3 = _row_scale(act_scale, x)
+    else:
+        a_mode = "fp"
+        a3, lead = _as_3d(x)
+        sa3 = jnp.ones((a3.shape[0], a3.shape[1], 1), jnp.float32)
+        a_dtype = w.normal_dtype
+    out = _fused_padded(a3, sa3, w.data, sw, w_dtype=w.normal_dtype,
+                        a_mode=a_mode, a_dtype=a_dtype, out_dtype=out_dtype,
+                        interpret=interpret, bm=bm, bn=bn, bk=bk)
+    return out.reshape(*lead, out.shape[-2], out.shape[-1]) if lead \
+        else out[0]
+
+
+# --------------------------------------------------------------------------
+# Shape-level wrappers (kernel benchmarks / tests drive these directly)
+# --------------------------------------------------------------------------
 def matmul_w4a16(a: jax.Array, w_data: jax.Array, w_scale: jax.Array,
                  normal_dtype: str = "int4", out_dtype=jnp.float32,
                  interpret: bool = False, bm: int = 128, bn: int = 128,
                  bk: int = 256) -> jax.Array:
-    """a (M, K) fp @ packed w (K/2, N): decode fused into the kernel."""
-    m, k = a.shape
-    k2, n = w_data.shape
-    # pad to block multiples; packed pad byte 0x00 decodes to (0, 0)
-    ap = _pad_to(a, (bm, bk))
-    wp = _pad_to(w_data, (bk // 2, bn))
-    out = _mm.ovp_matmul_w4a16(ap, wp, normal_dtype,
-                               bm=bm, bn=bn, bk=bk, interpret=interpret)
-    out = out[:m, :n]
-    return (out * w_scale.reshape(1, -1) if w_scale.ndim else
-            out * w_scale).astype(out_dtype)
+    """a (M, K) fp @ packed w (K/2, N): decode + scales fused in-kernel."""
+    m = a.shape[0]
+    n = w_data.shape[1]
+    return _fused_padded(a[None], jnp.ones((1, m, 1), jnp.float32),
+                         w_data, _col_scale(w_scale, n),
+                         w_dtype=normal_dtype, a_mode="fp",
+                         a_dtype=normal_dtype, out_dtype=out_dtype,
+                         interpret=interpret, bm=bm, bn=bn, bk=bk)[0]
 
 
-@functools.partial(jax.jit, static_argnames=("normal_dtype", "out_dtype",
-                                             "interpret", "bm", "bn", "bk"))
 def matmul_w4a4(a_data: jax.Array, a_scale: jax.Array, w_data: jax.Array,
                 w_scale: jax.Array, normal_dtype: str = "int4",
                 out_dtype=jnp.float32, interpret: bool = False,
                 bm: int = 128, bn: int = 128, bk: int = 256) -> jax.Array:
-    """packed a (M, K/2) @ packed w (K/2, N), both decoded in-kernel."""
-    m, k2a = a_data.shape
-    k2, n = w_data.shape
-    ap = _pad_to(a_data, (bm, bk // 2))
-    wp = _pad_to(w_data, (bk // 2, bn))
-    out = _mm.ovp_matmul_w4a4(ap, wp, normal_dtype,
-                              bm=bm, bn=bn, bk=bk, interpret=interpret)
-    out = out[:m, :n]
-    sa = a_scale if a_scale.ndim == 0 else a_scale.reshape(m, 1)
-    sw = w_scale if w_scale.ndim == 0 else w_scale.reshape(1, -1)
-    return (out * sa * sw).astype(out_dtype)
+    """packed a (M, K/2) @ packed w (K/2, N): decode + scales in-kernel."""
+    n = w_data.shape[1]
+    return _fused_padded(a_data[None], _row_scale(a_scale, a_data),
+                         w_data, _col_scale(w_scale, n),
+                         w_dtype=normal_dtype, a_mode="codes4",
+                         a_dtype=normal_dtype, out_dtype=out_dtype,
+                         interpret=interpret, bm=bm, bn=bn, bk=bk)[0]
+
+
+def matmul_w8a8(a_data: jax.Array, a_scale: jax.Array, w_data: jax.Array,
+                w_scale: jax.Array, out_dtype=jnp.float32,
+                interpret: bool = False, bm: int = 128, bn: int = 128,
+                bk: int = 256) -> jax.Array:
+    """int8 OVP codes a (M, K) @ w codes (K, N), one code per byte."""
+    n = w_data.shape[1]
+    return _fused_padded(a_data[None], _row_scale(a_scale, a_data),
+                         w_data, _col_scale(w_scale, n),
+                         w_dtype="int8", a_mode="codes8", a_dtype="int8",
+                         out_dtype=out_dtype, interpret=interpret,
+                         bm=bm, bn=bn, bk=bk)[0]
 
 
 def ovp_matmul(a: Union[jax.Array, QuantizedTensor], w: QuantizedTensor,
                out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
-    """Public entry: dispatch W4A16 vs W4A4 from the operand types.
+    """Public entry: dispatch from operand types (4-bit packed or int8 OVP).
 
-    Leading batch dims of `a` are flattened into M. Weight pairs must run
-    along K (pair_axis == 0 of the 2-D weight).
+    Leading batch dims of `a` ride the kernel's batch grid dim. Weight
+    pairs must run along K (pair_axis == 0 of the 2-D weight).
     """
-    if w.normal_dtype == "int8":
-        raise NotImplementedError("packed kernels are 4-bit; int8 OVP uses "
-                                  "the XLA path")
-    if isinstance(a, QuantizedTensor):
-        ad, ascale = a.data, jnp.asarray(a.scale)
-        lead = ad.shape[:-1]
-        m = 1
-        for d in lead:
-            m *= d
-        out = matmul_w4a4(ad.reshape(m, ad.shape[-1]),
-                          jnp.broadcast_to(ascale, ()).astype(jnp.float32)
-                          if ascale.ndim == 0 else ascale.reshape(-1),
-                          w.data, jnp.asarray(w.scale).reshape(-1)
-                          if jnp.asarray(w.scale).ndim else
-                          jnp.asarray(w.scale),
-                          w.normal_dtype, out_dtype, interpret)
-        return out.reshape(*lead, out.shape[-1])
-    lead = a.shape[:-1]
-    m = 1
-    for d in lead:
-        m *= d
-    a2 = a.reshape(m, a.shape[-1])
-    ws = jnp.asarray(w.scale)
-    out = matmul_w4a16(a2, w.data,
-                       ws.reshape(-1) if ws.ndim else ws,
-                       w.normal_dtype, out_dtype, interpret)
-    return out.reshape(*lead, out.shape[-1])
+    return fused_ovp_matmul(a, w, out_dtype=out_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("normal_dtype", "interpret",
@@ -114,7 +191,12 @@ def ovp_matmul(a: Union[jax.Array, QuantizedTensor], w: QuantizedTensor,
 def ovp_encode(x: jax.Array, scale: jax.Array, normal_dtype: str = "int4",
                interpret: bool = False, bm: int = 256,
                bk: int = 512) -> jax.Array:
-    """x (M, K) real values -> packed OVP bytes (M, K/2) at `scale`."""
+    """x (M, K) real values -> packed OVP bytes (M, K/2) at `scale`.
+
+    Standalone encoder (KV-cache packing, tests). The serving matmul path
+    does NOT use it — activation quantization runs in the fused matmul
+    prologue instead.
+    """
     m, k = x.shape
     u = x.astype(jnp.float32) / scale
     bm_, bk_ = min(bm, m), min(bk, k)

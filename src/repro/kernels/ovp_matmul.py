@@ -1,20 +1,35 @@
-"""Fused OVP-decode + matmul Pallas kernels (the paper's decoder, §4.2–4.4,
+"""Fused OVP matmul Pallas kernel (the paper's decoder + encoder, §3–4,
 re-sited for TPU).
 
-TPU adaptation of the OliVe decoder: on the GPU/systolic designs the OVP
-decoder sits per dot-product lane / at the array edge. The MXU is fixed
-function, so the decoder becomes the *VMEM prologue* of the matmul kernel:
-packed uint8 tiles stream HBM->VMEM (4x less traffic than bf16), nibbles are
-decoded branch-free on the VPU, and the MXU consumes the decoded tiles.
+TPU adaptation of the OliVe datapath: on the GPU/systolic designs the OVP
+decoder sits per dot-product lane and the encoder inside the quantization
+unit. The MXU is fixed function, so both become *phases of one matmul
+kernel*:
+
+  prologue  — activations are either decoded from packed OVP bytes
+              (pre-quantized operands) or OVP-quantized in value domain
+              straight from the fp tile (online serving: no packed
+              activation tensor ever touches HBM),
+  body      — packed uint8 weight tiles stream HBM->VMEM (4x less traffic
+              than bf16), nibbles/bytes are decoded branch-free on the VPU,
+              and the MXU consumes the decoded tiles,
+  epilogue  — per-row activation scales and per-output-channel weight
+              scales are applied to the fp32 accumulator on the last
+              K step (no separate XLA multiply dispatch).
 
 Key structural trick: pairs are packed along K, so a packed tile holds the
-even-K values in the high nibbles and odd-K values in the low nibbles.
-Instead of interleaving (a relayout), we split the reduction:
+even-K values in the high nibbles and odd-K values in the low nibbles (for
+int8 OVP: even/odd K rows/columns). Instead of interleaving (a relayout),
+we split the reduction:
 
     out = a_even @ w_even + a_odd @ w_odd
 
 two half-K MXU matmuls per tile, no transposes, no gathers — this is the
 memory-alignment claim of the paper realised on TPU.
+
+The grid is (batch, M/bm, N/bn, K2/bk2) with K innermost, so a 3-D lhs
+(decode-step GEMMs from the serving engine) hits the kernel without any
+reshape glue; 2-D callers pass batch=1.
 
 Blocks default to (bm, bk, bn) = (128, 256, 128): MXU-aligned, and the
 working set (a: 128x256 f32 + w packed: 128x128 u8 + out: 128x128 f32)
@@ -28,11 +43,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.datatypes import ABFLOAT_FOR_NORMAL, AbfloatSpec
+from repro.core.datatypes import (ABFLOAT_FOR_NORMAL, ID4, ID8, NORMAL_MAX,
+                                  AbfloatSpec, abfloat_decode, abfloat_encode,
+                                  int_normal_decode)
+
+# Activation operand modes of the fused kernel (static):
+#   fp        — fp tile used as-is (W4A16 / W8A16)
+#   quantize  — fp tile OVP fake-quantized in the prologue at the per-row
+#               scale (online W4A4 / W8A8 serving: no packed tensor in HBM)
+#   codes4    — packed nibble codes, decoded in the prologue
+#   codes8    — int8 OVP codes (one per byte), decoded in the prologue
+ACT_MODES = ("fp", "quantize", "codes4", "codes8")
 
 
 # --------------------------------------------------------------------------
-# Branch-free nibble decode (VPU-friendly: selects + integer shifts only)
+# Branch-free decode (VPU-friendly: selects + integer shifts only)
 # --------------------------------------------------------------------------
 def _decode_normal_int4(c: jax.Array) -> jax.Array:
     ci = c.astype(jnp.int32)
@@ -48,15 +73,49 @@ def _decode_normal_flint4(c: jax.Array) -> jax.Array:
     return (sign * mag).astype(jnp.float32)
 
 
-def _decode_abfloat4(c: jax.Array, spec: AbfloatSpec) -> jax.Array:
-    """Fig. 7 decoder: exponent = bias + e-bits; integer = (1 m)b."""
+def _decode_normal_int8(c: jax.Array) -> jax.Array:
+    # the datatypes decoder is already a branch-free where-chain, safe
+    # inside the kernel body (unlike LUT gathers)
+    return int_normal_decode(c, 8)
+
+
+_NORMAL_DECODERS = {"int4": _decode_normal_int4,
+                    "flint4": _decode_normal_flint4,
+                    "int8": _decode_normal_int8}
+
+
+def _decode_abfloat(c: jax.Array, spec: AbfloatSpec) -> jax.Array:
+    """Fig. 7 decoder: exponent = bias + e-bits; integer = (1 m)b.
+
+    Pure shifts + selects (§3.3); magnitudes clamp at 2^15 (§4.5) to match
+    `datatypes.abfloat_decode` for the wide int8/E4M3 spec.
+    """
     ci = c.astype(jnp.int32)
-    bits = ci & 0x7
+    nbits = spec.ebits + spec.mb
+    bits = ci & ((1 << nbits) - 1)
     e = bits >> spec.mb
     m = bits & ((1 << spec.mb) - 1)
-    mag = ((1 << spec.mb) + m) << (e + spec.bias)   # pure shifts, §3.3
-    v = jnp.where((ci >> 3) == 1, -mag, mag)
+    mag = ((1 << spec.mb) + m) << (e + spec.bias)    # pure shifts, §3.3
+    mag = jnp.minimum(mag, 1 << 15)
+    v = jnp.where((ci >> nbits) & 1 == 1, -mag, mag)
     return jnp.where(bits == 0, 0, v).astype(jnp.float32)
+
+
+def decode_pair_planes(c0: jax.Array, c1: jax.Array, normal_dtype: str,
+                       spec: AbfloatSpec):
+    """Two code planes (pair-mates) -> decoded fp32 planes.
+
+    If my neighbour holds the identifier, I am the outlier (abfloat); if I
+    hold it, I am the victim (0); otherwise I am a normal value.
+    """
+    ident = jnp.uint8(ID8 if normal_dtype == "int8" else ID4)
+    dn = _NORMAL_DECODERS[normal_dtype]
+
+    def slot(c, neighbour):
+        return jnp.where(neighbour == ident, _decode_abfloat(c, spec),
+                         jnp.where(c == ident, 0.0, dn(c)))
+
+    return slot(c0, c1), slot(c1, c0)
 
 
 def decode_nibble_planes(packed: jax.Array, normal_dtype: str,
@@ -67,64 +126,176 @@ def decode_nibble_planes(packed: jax.Array, normal_dtype: str,
     first axis (weights). For activations packed along the last axis the
     same planes correspond to columns 2c / 2c+1.
     """
+    if normal_dtype == "int8":
+        raise ValueError("int8 codes are not nibble-packed; split the code "
+                         "planes and use decode_pair_planes directly")
     hi = (packed >> 4) & jnp.uint8(0xF)
     lo = packed & jnp.uint8(0xF)
+    return decode_pair_planes(hi, lo, normal_dtype, spec)
+
+
+# --------------------------------------------------------------------------
+# In-kernel OVP fake quantization (the fused activation prologue).
+# Value-domain mirror of encode->decode: identical outlier/victim selection
+# (Algorithm 1) and identical rounding, so the fused path is bit-compatible
+# with the XLA encode -> kernel decode round trip it replaces.
+# --------------------------------------------------------------------------
+def _roundtrip_normal(u: jax.Array, normal_dtype: str) -> jax.Array:
     if normal_dtype == "int4":
-        dn = _decode_normal_int4
-    elif normal_dtype == "flint4":
-        dn = _decode_normal_flint4
+        return jnp.clip(jnp.round(u), -7, 7)
+    if normal_dtype == "int8":
+        return jnp.clip(jnp.round(u), -127, 127)
+    # flint4: nearest magnitude in {0,1,2,3,4,6,8,16} via midpoint
+    # thresholds (ties -> smaller magnitude, matching flint4_encode's
+    # argmin tie rule). A select chain, not a LUT gather: pallas_call
+    # rejects captured constant arrays in the kernel body.
+    a = jnp.abs(u)
+    mag = jnp.where(a <= 0.5, 0.0,
+          jnp.where(a <= 1.5, 1.0,
+          jnp.where(a <= 2.5, 2.0,
+          jnp.where(a <= 3.5, 3.0,
+          jnp.where(a <= 5.0, 4.0,
+          jnp.where(a <= 7.0, 6.0,
+          jnp.where(a <= 12.0, 8.0, 16.0)))))))
+    return jnp.where((u < 0) & (mag > 0), -mag, mag)
+
+
+def _roundtrip_abfloat(u: jax.Array, spec: AbfloatSpec) -> jax.Array:
+    return abfloat_decode(abfloat_encode(u, spec), spec)
+
+
+def quantize_pair_planes(u0: jax.Array, u1: jax.Array, normal_dtype: str,
+                         spec: AbfloatSpec):
+    """Scaled value planes -> OVP fake-quantized planes (Algorithm 1).
+
+    Same outlier-victim selection as `core.ovp.ovp_encode_codes`: per pair,
+    at most one outlier survives as abfloat, its neighbour is pruned to 0.
+    """
+    t = float(NORMAL_MAX[normal_dtype])
+    a0, a1 = jnp.abs(u0), jnp.abs(u1)
+    o0, o1 = a0 > t, a1 > t
+    first_out = o0 & (~o1 | (a0 >= a1))
+    second_out = o1 & ~first_out
+    q0 = jnp.where(first_out, _roundtrip_abfloat(u0, spec),
+                   jnp.where(second_out, 0.0,
+                             _roundtrip_normal(u0, normal_dtype)))
+    q1 = jnp.where(second_out, _roundtrip_abfloat(u1, spec),
+                   jnp.where(first_out, 0.0,
+                             _roundtrip_normal(u1, normal_dtype)))
+    return q0.astype(jnp.float32), q1.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# The unified fused kernel body
+# --------------------------------------------------------------------------
+def _fused_mm_kernel(a_ref, sa_ref, wp_ref, sw_ref, o_ref, *,
+                     w_dtype: str, w_spec: AbfloatSpec,
+                     a_mode: str, a_dtype: str, a_spec: AbfloatSpec):
+    """One (batch, M, N, K) grid step.
+
+    a_ref  (1, bm, bk)   fp tile (fp/quantize), or codes: (1, bm, bk2)
+                         packed nibbles (codes4) / (1, bm, bk) bytes (codes8)
+    sa_ref (1, bm, 1)    per-row activation scale (1.0 when unscaled)
+    wp_ref (bk2, bn)     packed nibbles, or (bk, bn) int8 OVP codes
+    sw_ref (1, bn)       per-output-channel weight scale (1.0 when unscaled)
+    o_ref  (1, bm, bn)   fp32 accumulator; scales applied on the last K step
+    """
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # -- weight decode ---------------------------------------------------
+    wp = wp_ref[...]
+    if w_dtype == "int8":
+        w_even, w_odd = decode_pair_planes(wp[0::2, :], wp[1::2, :],
+                                           "int8", w_spec)
     else:
-        raise ValueError("packed kernels support 4-bit dtypes only")
+        w_even, w_odd = decode_nibble_planes(wp, w_dtype, w_spec)
 
-    def slot(c, neighbour):
-        is_victim = c == jnp.uint8(0x8)
-        neighbour_victim = neighbour == jnp.uint8(0x8)
-        return jnp.where(neighbour_victim, _decode_abfloat4(c, spec),
-                         jnp.where(is_victim, 0.0, dn(c)))
+    # -- activation prologue ---------------------------------------------
+    if a_mode == "codes4":
+        a_even, a_odd = decode_nibble_planes(a_ref[0], a_dtype, a_spec)
+    elif a_mode == "codes8":
+        ap = a_ref[0]
+        a_even, a_odd = decode_pair_planes(ap[:, 0::2], ap[:, 1::2],
+                                           "int8", a_spec)
+    else:
+        a = a_ref[0].astype(jnp.float32)
+        if a_mode == "quantize":
+            u = a / sa_ref[0]
+            a_even, a_odd = quantize_pair_planes(u[:, 0::2], u[:, 1::2],
+                                                 a_dtype, a_spec)
+        else:  # fp
+            a_even, a_odd = a[:, 0::2], a[:, 1::2]
 
-    return slot(hi, lo), slot(lo, hi)
-
-
-# --------------------------------------------------------------------------
-# Kernel bodies
-# --------------------------------------------------------------------------
-def _mm_w4a16_kernel(a_ref, wp_ref, o_ref, *, normal_dtype, spec, n_k):
-    """a (bm, bk) fp; wp (bk/2, bn) packed; o (bm, bn) fp32 accumulator."""
-
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    w_even, w_odd = decode_nibble_planes(wp_ref[...], normal_dtype, spec)
-    a = a_ref[...].astype(jnp.float32)
-    a_even = a[:, 0::2]
-    a_odd = a[:, 1::2]
-    o_ref[...] += (
+    o_ref[0] += (
         jnp.dot(a_even, w_even, preferred_element_type=jnp.float32)
         + jnp.dot(a_odd, w_odd, preferred_element_type=jnp.float32))
 
-
-def _mm_w4a4_kernel(ap_ref, wp_ref, o_ref, *, normal_dtype, spec, n_k):
-    """ap (bm, bk/2) packed; wp (bk/2, bn) packed; o (bm, bn) fp32."""
-
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    # activation planes: column c of each plane is K-position 2c / 2c+1,
-    # matching weight rows exactly — the reduction splits cleanly.
-    a_even, a_odd = decode_nibble_planes(ap_ref[...], normal_dtype, spec)
-    w_even, w_odd = decode_nibble_planes(wp_ref[...], normal_dtype, spec)
-    o_ref[...] += (
-        jnp.dot(a_even, w_even, preferred_element_type=jnp.float32)
-        + jnp.dot(a_odd, w_odd, preferred_element_type=jnp.float32))
+    # -- scale epilogue ---------------------------------------------------
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _epilogue():
+        o_ref[0] = o_ref[0] * sa_ref[0] * sw_ref[...]
 
 
 # --------------------------------------------------------------------------
-# pallas_call builders
+# pallas_call builder
 # --------------------------------------------------------------------------
-def _grid(m, n, k2, bm, bn, bk2):
-    return (m // bm, n // bn, k2 // bk2)
+def fused_ovp_matmul_kernel(a: jax.Array, a_scale: jax.Array,
+                            w_data: jax.Array, w_scale: jax.Array, *,
+                            w_dtype: str = "int4",
+                            a_mode: str = "fp", a_dtype: str = "int4",
+                            w_spec: AbfloatSpec | None = None,
+                            a_spec: AbfloatSpec | None = None,
+                            bm: int = 128, bn: int = 128, bk: int = 256,
+                            interpret: bool = False) -> jax.Array:
+    """a: (B, M, Ka); a_scale: (B, M, 1); w_data: (Kw, N); w_scale: (1, N).
+
+    Ka is K for fp/quantize/codes8 activations and K/2 for codes4; Kw is
+    K/2 for packed nibbles and K for int8 codes. Returns (B, M, N) fp32
+    with both scales applied. Shapes must divide the (clamped) blocks —
+    `repro.kernels.ops` owns padding.
+    """
+    assert a_mode in ACT_MODES, a_mode
+    w_spec = ABFLOAT_FOR_NORMAL[w_dtype] if w_spec is None else w_spec
+    a_spec = ABFLOAT_FOR_NORMAL[a_dtype] if a_spec is None else a_spec
+
+    b, m, ka = a.shape
+    kw, n = w_data.shape
+    k2 = kw if w_dtype != "int8" else kw // 2   # number of pairs along K
+    bm, bn = min(bm, m), min(bn, n)
+    bk2 = min(bk // 2, k2)
+    grid = (b, m // bm, n // bn, k2 // bk2)
+
+    a_blk = bk2 if a_mode == "codes4" else 2 * bk2
+    w_blk = bk2 if w_dtype != "int8" else 2 * bk2
+    assert ka % a_blk == 0 and m % bm == 0 and n % bn == 0 \
+        and kw % w_blk == 0, (a.shape, w_data.shape, (bm, bn, bk2))
+
+    kernel = functools.partial(_fused_mm_kernel, w_dtype=w_dtype,
+                               w_spec=w_spec, a_mode=a_mode,
+                               a_dtype=a_dtype, a_spec=a_spec)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, a_blk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((1, bm, 1), lambda bb, i, j, kk: (bb, i, 0)),
+            pl.BlockSpec((w_blk, bn), lambda bb, i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda bb, i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda bb, i, j, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), jnp.float32),
+        interpret=interpret,
+    )(a, a_scale, w_data, w_scale)
+
+
+# --------------------------------------------------------------------------
+# Back-compat 2-D builders (scaled-unit outputs, as the oracles in ref.py)
+# --------------------------------------------------------------------------
+def _ones_scales(b, m, n):
+    return jnp.ones((b, m, 1), jnp.float32), jnp.ones((1, n), jnp.float32)
 
 
 def ovp_matmul_w4a16(a: jax.Array, w_packed: jax.Array,
@@ -133,27 +304,15 @@ def ovp_matmul_w4a16(a: jax.Array, w_packed: jax.Array,
                      bm: int = 128, bn: int = 128, bk: int = 256,
                      interpret: bool = False) -> jax.Array:
     """a: (M, K) fp; w_packed: (K/2, N) uint8 -> (M, N) fp32 (w-units)."""
-    spec = ABFLOAT_FOR_NORMAL[normal_dtype] if spec is None else spec
     m, k = a.shape
     k2, n = w_packed.shape
     assert k == 2 * k2, (a.shape, w_packed.shape)
-    bm, bn = min(bm, m), min(bn, n)
-    bk = min(bk, k)
-    bk2 = bk // 2
-    grid = _grid(m, n, k2, bm, bn, bk2)
-    kernel = functools.partial(_mm_w4a16_kernel, normal_dtype=normal_dtype,
-                               spec=spec, n_k=grid[2])
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk2, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
-    )(a, w_packed)
+    sa, sw = _ones_scales(1, m, n)
+    out = fused_ovp_matmul_kernel(a[None], sa, w_packed, sw,
+                                  w_dtype=normal_dtype, a_mode="fp",
+                                  w_spec=spec, bm=bm, bn=bn, bk=bk,
+                                  interpret=interpret)
+    return out[0]
 
 
 def ovp_matmul_w4a4(a_packed: jax.Array, w_packed: jax.Array,
@@ -162,23 +321,13 @@ def ovp_matmul_w4a4(a_packed: jax.Array, w_packed: jax.Array,
                     bm: int = 128, bn: int = 128, bk: int = 256,
                     interpret: bool = False) -> jax.Array:
     """a_packed: (M, K/2) uint8; w_packed: (K/2, N) uint8 -> (M, N) fp32."""
-    spec = ABFLOAT_FOR_NORMAL[normal_dtype] if spec is None else spec
     m, ak2 = a_packed.shape
     k2, n = w_packed.shape
     assert ak2 == k2, (a_packed.shape, w_packed.shape)
-    bm, bn = min(bm, m), min(bn, n)
-    bk2 = min(bk // 2, k2)
-    grid = _grid(m, n, k2, bm, bn, bk2)
-    kernel = functools.partial(_mm_w4a4_kernel, normal_dtype=normal_dtype,
-                               spec=spec, n_k=grid[2])
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk2), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk2, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
-    )(a_packed, w_packed)
+    sa, sw = _ones_scales(1, m, n)
+    out = fused_ovp_matmul_kernel(a_packed[None], sa, w_packed, sw,
+                                  w_dtype=normal_dtype, a_mode="codes4",
+                                  a_dtype=normal_dtype, w_spec=spec,
+                                  a_spec=spec, bm=bm, bn=bn, bk=bk,
+                                  interpret=interpret)
+    return out[0]

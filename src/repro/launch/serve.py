@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backends
 from repro.configs import get_config
 from repro.core.policy import PRESETS, get_policy
 from repro.core.qlinear import quantize_params
@@ -29,6 +30,11 @@ def main():
     ap.add_argument("--quant", default="olive_w4",
                     choices=sorted(PRESETS) + ["fp"],
                     help="PTQ policy for the weights/KV")
+    ap.add_argument("--backend", default=None,
+                    choices=backends.available(),
+                    help="quantized-matmul execution backend "
+                         "(default: the policy's; CPU smoke runs can use "
+                         "pallas_interpret to exercise the fused kernel)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
@@ -41,6 +47,10 @@ def main():
     import dataclasses
     policy = dataclasses.replace(policy, compute_dtype="float32",
                                  abits=0)  # CPU engine: weight + KV quant
+    if args.backend is not None:
+        policy = dataclasses.replace(policy, backend=args.backend)
+    print(f"[serve] quantized-matmul backend: "
+          f"{backends.get_backend(policy.backend).name}")
     model = build_model(cfg, policy, remat=False)
     params = model.init(jax.random.PRNGKey(args.seed), dtype=jnp.float32)
     if policy.enabled:
@@ -63,8 +73,13 @@ def main():
     ttft = [r.t_first - r.t_submit for r in done if r.t_first]
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s)")
-    print(f"[serve] mean latency {np.mean(lat)*1e3:.0f} ms, "
-          f"mean TTFT {np.mean(ttft)*1e3:.0f} ms" if ttft else "")
+    # latency and TTFT are independent metrics: an empty TTFT list (no
+    # request ever recorded a first token) must not suppress the latency
+    # line, so they print separately
+    if lat:
+        print(f"[serve] mean latency {np.mean(lat)*1e3:.0f} ms")
+    if ttft:
+        print(f"[serve] mean TTFT {np.mean(ttft)*1e3:.0f} ms")
 
 
 if __name__ == "__main__":

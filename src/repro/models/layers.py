@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import qlinear
-from repro.core.ovp import ovp_quantize, ovp_dequantize
 from repro.core.policy import QuantPolicy
 from repro.sharding.axes import logical
 
@@ -657,13 +656,22 @@ def moe_layer(p, x, cfg, policy: QuantPolicy, capacity_factor=None):
 
 
 def _expert_ein(xg, w, policy: QuantPolicy):
-    """([B,] E, C, K) x (E, K, F) -> ([B,] E, C, F) quantized matmul."""
+    """([B,] E, C, K) x (E, K, F) -> ([B,] E, C, F) quantized matmul.
+
+    Quantized per-expert weights go through the backend registry like every
+    other matmul (stacked weights broadcast on the XLA backend; the Pallas
+    kernel declines them via `supports` and dispatch falls back). Expert
+    GEMMs stay weight-only quantized — activation quantization here would
+    change MoE accuracy baselines and needs its own calibrated scales
+    (dispatched slots are capacity-gathered, so the 3σ rule sees padding).
+    """
     from repro.core.ovp import QuantizedTensor
     cdt = jnp.dtype(policy.compute_dtype)
-    eq = "eck,ekf->ecf" if xg.ndim == 3 else "beck,ekf->becf"
     if isinstance(w, QuantizedTensor):
-        wd = ovp_dequantize(w, dtype=cdt)
-        return jnp.einsum(eq, xg.astype(cdt), wd)
+        from repro import backends
+        w_only = dataclasses.replace(policy, abits=0)
+        return backends.dispatch(xg, w, w_only)
+    eq = "eck,ekf->ecf" if xg.ndim == 3 else "beck,ekf->becf"
     return jnp.einsum(eq, xg.astype(cdt), w.astype(cdt))
 
 

@@ -8,6 +8,7 @@ OVP-packed (policy.kv_bits=4) — the paper's serving story end to end.
 from __future__ import annotations
 
 import collections
+import copy
 import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
@@ -16,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backends
 from repro.models.model import Model
 
 
@@ -37,6 +39,9 @@ class EngineCfg:
     max_len: int = 256
     eos_id: int = -1            # -1: no EOS, run to max_new_tokens
     greedy: bool = True
+    # quantized-matmul execution backend override; None keeps the model
+    # policy's backend. Must name a `repro.backends` registry entry.
+    backend: Optional[str] = None
 
 
 class ServingEngine:
@@ -44,6 +49,15 @@ class ServingEngine:
     jitted steps over the mesh via pjit; see launch/serve.py)."""
 
     def __init__(self, model: Model, params, cfg: EngineCfg):
+        if cfg.backend is not None and cfg.backend != model.policy.backend:
+            # shallow-copy so the override never leaks into other users of
+            # the caller's Model instance
+            model = copy.copy(model)
+            model.policy = dataclasses.replace(model.policy,
+                                               backend=cfg.backend)
+        # resolve through the registry up front: a typo'd backend name
+        # fails here, not mid-trace on the first prefill
+        self.qbackend = backends.get_backend(model.policy.backend)
         self.model = model
         self.params = params
         self.cfg = cfg

@@ -15,6 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# optional dependency: property tests are skipped (not a collection error)
+# when hypothesis is absent — see tests/requirements-optional.txt
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.datatypes import (ABFLOAT_FOR_NORMAL, ID4, ID8, NORMAL_MAX,
