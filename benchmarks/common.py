@@ -155,6 +155,19 @@ def weight_tensors(params, min_size: int = 4096) -> Dict[str, np.ndarray]:
     return out
 
 
+def footprint(params) -> int:
+    """Total parameter bytes, counting packed QuantizedTensor storage."""
+    from repro.core.ovp import QuantizedTensor
+    tot = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        if isinstance(leaf, QuantizedTensor):
+            tot += leaf.nbytes()
+        else:
+            tot += leaf.size * leaf.dtype.itemsize
+    return tot
+
+
 def save_json(name: str, obj) -> str:
     os.makedirs(CACHE, exist_ok=True)
     path = os.path.join(CACHE, name + ".json")

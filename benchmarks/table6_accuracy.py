@@ -1,9 +1,12 @@
 """Paper Tables 6/7/8 (tensor-level analogue): round-trip quantization
-quality of OliVe vs every studied baseline on identical tensors.
+quality of OliVe vs every studied baseline on identical tensors — plus
+the mixed-precision *policy program* rows the flat policy API could not
+express: per-layer W4/W8 programs traded against model bytes.
 
-Metric: SQNR (dB, higher better) + byte footprint. Tensors: the trained
-LM's linear weights and transformer-like synthetic tensors across the
-Fig. 2 outlier-intensity range. The model-level (perplexity) analogue of
+Metric: SQNR (dB, higher better) + byte footprint; for the program rows,
+held-out perplexity + parameter bytes. Tensors: the trained LM's linear
+weights and transformer-like synthetic tensors across the Fig. 2
+outlier-intensity range. The model-level (perplexity) analogue of
 Tables 6/9 lives in table9_llm.py.
 
 Expected ordering on outlier-heavy tensors (the paper's claim):
@@ -20,7 +23,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines
+from repro.core.calibration import auto_mixed, record_weights, \
+    site_sensitivity
+from repro.core.policy import PolicyProgram, QuantPolicy
+from repro.core.qlinear import quantize_params
 from repro.core.quantizer import QuantSpec, dequantize, quantize
+from repro.models.model import build_model
 
 from . import common
 
@@ -67,7 +75,7 @@ METHODS = {
 
 def main() -> int:
     t0 = time.perf_counter()
-    model, params, _ = common.trained_lm()
+    model, params, loader = common.trained_lm()
     tensors = {}
     ws = common.weight_tensors(params)
     # three representative LM weights + three synthetic intensities
@@ -92,6 +100,38 @@ def main() -> int:
             f"{results[m][t]['sqnr']:10.2f}" for t in tensors)
         print(line)
 
+    # ---- mixed-precision policy programs: ppl vs model bytes -----------
+    cfg = model.cfg
+    w4 = QuantPolicy(method="olive", wbits=4, abits=0,
+                     compute_dtype="float32")
+    w8 = QuantPolicy(method="olive", wbits=8, abits=0,
+                     w_normal_dtype="int8", compute_dtype="float32")
+    mixed = PolicyProgram.from_policy(w4, name="mixed_w48").with_rules([
+        ("layers/0/*", w8),
+        (f"layers/{cfg.n_layers - 1}/*", w8),
+    ])
+    sens = site_sensitivity(record_weights(params, min_size=1024),
+                            "int4", n_grid=8)
+    autop = auto_mixed(sens, budget_bits=5.0, low=w4, high=w8)
+    programs = {
+        "prog_uniform_w4": PolicyProgram.from_policy(w4),
+        "prog_mixed_w48": mixed,
+        "prog_auto_w48": autop,
+        "prog_uniform_w8": PolicyProgram.from_policy(w8),
+    }
+    prog_rows = {}
+    fp_bytes = common.footprint(params)
+    print(f"# mixed-precision programs (fp32 "
+          f"ppl={common.eval_ppl(model, params, loader):.3f}, "
+          f"{fp_bytes/1e6:.2f} MB)")
+    for tag, prog in programs.items():
+        pm = build_model(cfg, prog, remat=False)
+        qp = quantize_params(pm.adapt_params(params), prog, min_size=1024)
+        ppl = common.eval_ppl(pm, qp, loader)
+        nbytes = common.footprint(qp)
+        prog_rows[tag] = {"ppl": ppl, "bytes": nbytes}
+        print(f"#   {tag:18s} ppl={ppl:8.3f}  bytes={nbytes/1e6:6.2f} MB")
+
     syn = [t for t in tensors if t.startswith("syn")]
     mean_syn = {m: np.mean([results[m][t]["sqnr"] for t in syn])
                 for m in METHODS}
@@ -104,14 +144,22 @@ def main() -> int:
     print(f"#   bytes on synthetic: olive={b_olive:.0f} gobo={b_gobo:.0f} "
           f"(gobo/olive={b_gobo/b_olive:.2f}x)")
 
+    # the program rows must show the expressible trade-off: mixed sits
+    # between uniform W4 and uniform W8 in bytes
+    ok_prog = (prog_rows["prog_uniform_w4"]["bytes"]
+               < prog_rows["prog_mixed_w48"]["bytes"]
+               < prog_rows["prog_uniform_w8"]["bytes"])
+    ok = ok and ok_prog
+
     us = (time.perf_counter() - t0) * 1e6
     common.emit("table6_accuracy", us,
                 f"olive4={mean_syn['olive_4bit']:.1f}dB "
                 f"ant4={mean_syn['ant_4bit']:.1f}dB "
                 f"int4={mean_syn['int4_mse']:.1f}dB "
+                f"mixed_w48_ppl={prog_rows['prog_mixed_w48']['ppl']:.2f} "
                 f"olive_beats_4bit_baselines={ok}")
     common.save_json("table6_accuracy", {
-        "results": results, "ok": bool(ok)})
+        "results": results, "programs": prog_rows, "ok": bool(ok)})
     return 0 if ok else 1
 
 

@@ -19,7 +19,9 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks import common  # noqa: E402
 
-from repro.core.calibration import ActTape, calibrate_activation_scales  # noqa: E402
+from repro.core.calibration import (ActTape, auto_mixed,  # noqa: E402
+                                    calibrate_activation_scales,
+                                    record_weights, site_sensitivity)
 from repro.core.policy import QuantPolicy  # noqa: E402
 from repro.core.qlinear import quantize_params  # noqa: E402
 from repro.models.model import build_model  # noqa: E402
@@ -57,6 +59,24 @@ def main():
         qp = quantize_params(params, pol)
         rows[tag] = common.eval_ppl(build_model(cfg, pol, remat=False),
                                     qp, loader)
+
+    # --- sensitivity pass -> automatic mixed-precision program ----------
+    # per-site SQNR at 4 bits on the weight tape ranks the sites; the
+    # emitted program keeps the most sensitive ones at W8 within a
+    # 5-bit average budget (see docs/policies.md)
+    w4 = QuantPolicy(method="olive", wbits=4, abits=0,
+                     compute_dtype="float32")
+    w8 = QuantPolicy(method="olive", wbits=8, abits=0,
+                     w_normal_dtype="int8", compute_dtype="float32")
+    sens = site_sensitivity(record_weights(params), "int4", n_grid=8)
+    worst = sorted(sens, key=lambda k: sens[k])[:3]
+    print("\nmost sensitive sites (lowest W4 SQNR):")
+    for k in worst:
+        print(f"  {k}: {sens[k]:.1f} dB")
+    prog = auto_mixed(sens, budget_bits=5.0, low=w4, high=w8)
+    model_am = build_model(cfg, prog, remat=False)
+    qp = quantize_params(model_am.adapt_params(params), prog)
+    rows["olive_auto_w48"] = common.eval_ppl(model_am, qp, loader)
 
     print("\nheld-out perplexity:")
     for k, v in rows.items():

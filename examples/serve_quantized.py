@@ -5,37 +5,31 @@ Train a small LM on the synthetic corpus (cached), OliVe-PTQ it to W4
 continuous-batching engine. Reports: greedy-output agreement vs the fp32
 engine, weight footprint, and tokens/s.
 
-Run:  PYTHONPATH=src python examples/serve_quantized.py [--kv4] [--w8]
+`--mixed` serves a site-addressed policy *program* instead of a flat
+policy: first/last layer W8 (+ OVP KV cache there), middle layers W4 —
+the per-layer mixed precision the flat API could not express.
+
+Run:  PYTHONPATH=src python examples/serve_quantized.py \
+          [--kv4] [--w8 | --mixed]
 """
 import argparse
 import os
 import sys
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 # reuse the cached trained-LM fixture from the benchmark harness
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks import common  # noqa: E402
 
-from repro.core.ovp import QuantizedTensor  # noqa: E402
-from repro.core.policy import QuantPolicy  # noqa: E402
+from repro.core.policy import PolicyProgram, QuantPolicy  # noqa: E402
 from repro.core.qlinear import quantize_params  # noqa: E402
 from repro.models.model import build_model  # noqa: E402
 from repro.serve.engine import EngineCfg, ServingEngine  # noqa: E402
 
 
-def footprint(params) -> int:
-    tot = 0
-    for leaf in jax.tree_util.tree_leaves(
-            params, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
-        if isinstance(leaf, QuantizedTensor):
-            tot += leaf.nbytes()
-        else:
-            tot += leaf.size * leaf.dtype.itemsize
-    return tot
+footprint = common.footprint
 
 
 def run_engine(model, params, prompts, max_new=24):
@@ -56,22 +50,33 @@ def main():
     ap.add_argument("--kv4", action="store_true",
                     help="also OVP-quantize the KV cache (beyond-paper)")
     ap.add_argument("--w8", action="store_true", help="W8A8 instead of W4")
+    ap.add_argument("--mixed", action="store_true",
+                    help="per-layer mixed program: first/last W8+KV4, "
+                         "middle W4")
     ap.add_argument("--n-requests", type=int, default=12)
     args = ap.parse_args()
 
     model_fp, params, loader = common.trained_lm()
     cfg = model_fp.cfg
 
-    if args.w8:
-        pol = QuantPolicy(method="olive", wbits=8, abits=0,
-                          w_normal_dtype="int8", compute_dtype="float32",
-                          kv_bits=4 if args.kv4 else 0)
+    w4 = QuantPolicy(method="olive", wbits=4, abits=0,
+                     compute_dtype="float32",
+                     kv_bits=4 if args.kv4 else 0)
+    w8 = QuantPolicy(method="olive", wbits=8, abits=0,
+                     w_normal_dtype="int8", compute_dtype="float32",
+                     kv_bits=4 if args.kv4 else 0)
+    if args.mixed:
+        w8kv = QuantPolicy(method="olive", wbits=8, abits=0,
+                           w_normal_dtype="int8", compute_dtype="float32",
+                           kv_bits=4)
+        pol = PolicyProgram.from_policy(w4, name="mixed_w48").with_rules([
+            ("layers/0/*", w8kv),
+            (f"layers/{cfg.n_layers - 1}/*", w8kv),
+        ])
     else:
-        pol = QuantPolicy(method="olive", wbits=4, abits=0,
-                          compute_dtype="float32",
-                          kv_bits=4 if args.kv4 else 0)
-    qparams = quantize_params(params, pol)
+        pol = w8 if args.w8 else w4
     model_q = build_model(cfg, pol, remat=False)
+    qparams = quantize_params(model_q.adapt_params(params), pol)
 
     print(f"weights: fp32 {footprint(params)/1e6:.2f} MB -> olive "
           f"{footprint(qparams)/1e6:.2f} MB "

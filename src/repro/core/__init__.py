@@ -8,10 +8,13 @@ from .datatypes import (ABFLOAT_FOR_NORMAL, E2M1_INT4, E2M1_FLINT4,
 from .ovp import (QuantizedTensor, ovp_decode_codes, ovp_dequantize,
                   ovp_encode_codes, ovp_fake_quant, ovp_quantize, pack4,
                   pair_statistics, unpack4)
-from .policy import PRESETS, QuantPolicy, get_policy
+from .policy import (PRESETS, PROGRAM_PRESETS, PolicyProgram, QuantPolicy,
+                     Rule, as_program, get_policy, get_program, parse_rules,
+                     resolve)
 from .quantizer import (QuantSpec, dequantize, fake_quant_ste,
                         ovp_search_scale, ovp_search_scale_per_channel,
                         quantization_error, quantize, sigma_init_scale)
 from .qlinear import (linear, qmatmul, quantize_activation, quantize_params,
                       quantize_weight)
-from .calibration import ActTape, calibrate_activation_scales, run_calibration
+from .calibration import (ActTape, auto_mixed, calibrate_activation_scales,
+                          record_weights, run_calibration, site_sensitivity)

@@ -1,10 +1,17 @@
-"""PTQ calibration (paper §3.4): static activation scales from one batch.
+"""PTQ calibration (paper §3.4): static activation scales from one batch,
+plus the per-site sensitivity pass that can *emit* a mixed-precision
+`PolicyProgram` automatically.
 
 The paper uses one batch of *training-set* data to select scale factors.
 Models in `repro.models` support `collect_acts=True`, returning a tape of
 matmul-input activations keyed by site name. We subsample each site, run the
 OVP MSE scale search, and hand the scales back to the serving path
 (`QuantPolicy.act_scale_mode == "static"`).
+
+Site addressing is shared with the policy program: tape keys, the static
+scale dict returned by `calibrate_activation_scales`, and the rules an
+`auto_mixed` program emits all use the same "/"-joined pytree-path grammar
+that `quantize_params` walks (see docs/policies.md).
 """
 from __future__ import annotations
 
@@ -14,7 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .policy import PolicyProgram, QuantPolicy, Rule
 from .quantizer import ovp_search_scale
+from .ovp import ovp_fake_quant
 
 
 class ActTape:
@@ -42,9 +51,25 @@ class ActTape:
             self.samples[name] = flat
 
 
+def record_weights(params, tape: Optional[ActTape] = None,
+                   min_size: int = 4096) -> ActTape:
+    """Tape every linear-weight leaf under its param-tree site address —
+    the weight-side twin of the activation tape, so the sensitivity pass
+    and `auto_mixed` run on the exact addresses `quantize_params` resolves.
+    """
+    from .qlinear import is_linear_weight, tree_paths
+    tape = tape if tape is not None else ActTape()
+    for path, w in tree_paths(params):
+        if hasattr(w, "ndim") and w.ndim >= 2 and w.size >= min_size \
+                and is_linear_weight(path, w):
+            tape.record(path, w)
+    return tape
+
+
 def calibrate_activation_scales(tape: ActTape, normal_dtype: str = "int4",
                                 n_grid: int = 24) -> Dict[str, jax.Array]:
-    """Per-site static scales via the OVP MSE search (3σ-seeded)."""
+    """Per-site static scales via the OVP MSE search (3σ-seeded), keyed by
+    the tape's site addresses."""
     scales = {}
     for name, sample in sorted(tape.samples.items()):
         s = sample
@@ -69,3 +94,58 @@ def run_calibration(apply_collect: Callable, params, batches: Iterable,
         for name, x in acts.items():
             tape.record(name, x)
     return calibrate_activation_scales(tape, normal_dtype)
+
+
+# ==========================================================================
+# Sensitivity pass: per-site SQNR -> automatic mixed-precision program
+# ==========================================================================
+def site_sensitivity(tape: ActTape, normal_dtype: str = "int4",
+                     n_grid: int = 16) -> Dict[str, float]:
+    """Per-site SQNR (dB) of the best low-precision OVP round-trip.
+
+    Low SQNR = the site loses the most signal at `normal_dtype` = the most
+    sensitive site = the first candidate for higher precision.
+    """
+    out = {}
+    for name, sample in sorted(tape.samples.items()):
+        s = sample[:-1] if sample.size % 2 else sample
+        x = jnp.asarray(s)
+        scale = ovp_search_scale(x, normal_dtype, n_grid=n_grid)
+        xh = ovp_fake_quant(x, scale, normal_dtype)
+        mse = float(jnp.mean((xh - x) ** 2))
+        power = float(jnp.mean(x * x))
+        out[name] = 10.0 * float(np.log10(max(power, 1e-30)
+                                          / max(mse, 1e-30)))
+    return out
+
+
+def auto_mixed(sensitivity: Dict[str, float],
+               budget_bits: float = 4.5,
+               low: QuantPolicy = None,
+               high: QuantPolicy = None) -> PolicyProgram:
+    """Emit a mixed-precision program from a sensitivity map.
+
+    Sites rank by ascending SQNR; the most sensitive get `high` (default
+    W8A8 OVP) until the average weight bit-width over the quantized sites
+    would exceed `budget_bits`; everything else resolves through the
+    compiled `low` program (default W4A4 OVP with the standard embed/
+    router exclusions). Sites the low program keeps at full precision
+    (embed/head/router under default flags) are never promoted — the
+    exclusions outrank sensitivity. Rule patterns are the literal site
+    addresses, so the program applies exactly to the tree it was
+    measured on.
+    """
+    from .policy import OLIVE_W4A4, OLIVE_W8A8
+    low = low if low is not None else OLIVE_W4A4
+    high = high if high is not None else OLIVE_W8A8
+    base = PolicyProgram.from_policy(low, name="auto_mixed")
+    candidates = {k: v for k, v in sensitivity.items()
+                  if base.resolve(k).enabled}
+    if not candidates:
+        return base
+    span = high.wbits - low.wbits
+    frac_high = 0.0 if span <= 0 else \
+        min(max((budget_bits - low.wbits) / span, 0.0), 1.0)
+    n_high = int(frac_high * len(candidates))
+    ranked = sorted(candidates, key=lambda k: candidates[k])
+    return base.with_rules([Rule(site, high) for site in ranked[:n_high]])

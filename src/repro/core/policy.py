@@ -1,13 +1,33 @@
 """Quantization policy: which tensors get quantized, how, and on what backend.
 
-This is the framework-level switch that makes OliVe a first-class feature:
-every linear in the model zoo routes through `repro.core.qlinear` and
-consults a `QuantPolicy`.
+Two levels of API:
+
+`QuantPolicy` — the per-site decision record: method, bit widths, dtypes,
+granularity, backend, compute dtype. One frozen dataclass.
+
+`PolicyProgram` — a *site-addressed program*: an ordered list of
+(glob pattern -> QuantPolicy) rules matched against pytree-path site names
+(the same "/"-joined addresses `quantize_params` walks and `ActTape`
+records), plus a default. `resolve(site)` returns the policy for one site;
+first matching rule wins. Mixed precision (first/last blocks W8, middle
+W4, per-layer kv_bits, per-site backends) is a program; the old global
+booleans (`quantize_attn`, `quantize_ffn`, ...) compile into an equivalent
+program via `PolicyProgram.from_policy`, so every legacy
+`QuantPolicy(quantize_attn=..., ...)` call site keeps working unchanged —
+`QuantPolicy.resolve(site)` delegates to its compiled program.
+
+Site grammar: `fnmatch` globs, matched case-insensitively against the full
+path; `*` crosses `/` separators. Canonical addresses (see
+docs/policies.md): `layers/<i>/attn/wq`, `layers/<i>/mlp/wg`,
+`layers/<i>/attn/kv` (KV cache), `blocks/<j>/...` (scan-stacked layouts),
+`embed/table`, `lm_head/w_out`, `moe/experts/wg`, `moe/router/w_gate`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import fnmatch
+import functools
+from typing import List, Optional, Sequence, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,7 +46,8 @@ class QuantPolicy:
     a_normal_dtype: str = "int4"
     act_scale_mode: str = "dynamic"     # dynamic (3σ rule) | static (calibrated)
 
-    # layer selection (paper keeps sensitive layers high precision)
+    # legacy coarse layer selection (compiled into a PolicyProgram by
+    # `from_policy`; new code writes site rules instead)
     quantize_attn: bool = True
     quantize_ffn: bool = True
     quantize_embed: bool = False
@@ -54,8 +75,207 @@ class QuantPolicy:
     def normal_dtype_for_bits(self, bits: int) -> str:
         return "int8" if bits == 8 else self.w_normal_dtype
 
+    # ----------------------------------------------------- program protocol
+    # QuantPolicy and PolicyProgram share this surface so every consumer
+    # (models, quantize_params, the serving engine) takes either.
+    def resolve(self, site: str) -> "QuantPolicy":
+        """Per-site policy under the legacy boolean flags."""
+        return _compiled(self).resolve(site)
 
-# Convenience presets
+    def off(self) -> "QuantPolicy":
+        """Disabled variant: same compute dtype / backend, no quantization."""
+        return dataclasses.replace(self, method="none")
+
+    def with_backend(self, name: str) -> "QuantPolicy":
+        return self if name == self.backend \
+            else dataclasses.replace(self, backend=name)
+
+    def replace_all(self, **kw) -> "QuantPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def backends(self) -> frozenset:
+        return frozenset((self.backend,))
+
+    def as_program(self) -> "PolicyProgram":
+        return _compiled(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One pattern -> policy entry of a PolicyProgram."""
+    pattern: str
+    policy: QuantPolicy
+
+    def matches(self, site: str) -> bool:
+        return fnmatch.fnmatchcase(site.lower(), self.pattern.lower())
+
+
+def _as_rule(r) -> Rule:
+    if isinstance(r, Rule):
+        return r
+    pattern, policy = r                 # (pattern, policy) tuples accepted
+    return Rule(pattern, policy)
+
+
+# Probe addresses used to decide whether a program distinguishes layers —
+# one representative site per block family plus the KV-cache address.
+_LAYER_PROBES = ("attn/wq", "attn/wk", "attn/wv", "attn/wo", "attn/kv",
+                 "mlp/wg", "mlp/wu", "mlp/wd", "mlp/wi",
+                 "moe/experts/wg", "moe/experts/wd", "moe/router/w_gate",
+                 "mlstm/wq", "mlstm/w_up", "rec/wx", "slstm/wz")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyProgram:
+    """Ordered (pattern -> QuantPolicy) rules + a default; first match wins."""
+    rules: Tuple[Rule, ...] = ()
+    default: QuantPolicy = QuantPolicy()
+    name: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules",
+                           tuple(_as_rule(r) for r in self.rules))
+
+    # ---------------------------------------------------------- resolution
+    def resolve(self, site: str) -> QuantPolicy:
+        return _program_resolve(self, site)
+
+    # ---------------------------------------------------------- protocol
+    @property
+    def enabled(self) -> bool:
+        return self.default.enabled or any(r.policy.enabled
+                                           for r in self.rules)
+
+    @property
+    def compute_dtype(self) -> str:
+        return self.default.compute_dtype
+
+    @property
+    def backend(self) -> str:
+        return self.default.backend
+
+    @property
+    def kv_bits(self) -> int:
+        """Largest kv_bits any rule can resolve to (capacity planning /
+        logging; cache construction resolves per layer instead)."""
+        return max([self.default.kv_bits]
+                   + [r.policy.kv_bits for r in self.rules])
+
+    @property
+    def qat(self) -> bool:
+        return self.default.qat or any(r.policy.qat for r in self.rules)
+
+    def backends(self) -> frozenset:
+        return frozenset([self.default.backend]
+                         + [r.policy.backend for r in self.rules])
+
+    def off(self) -> "PolicyProgram":
+        return self.replace_all(method="none")
+
+    def with_backend(self, name: str) -> "PolicyProgram":
+        return self.replace_all(backend=name)
+
+    def as_program(self) -> "PolicyProgram":
+        return self
+
+    def replace_all(self, **kw) -> "PolicyProgram":
+        """`dataclasses.replace` applied to every rule policy + default."""
+        return PolicyProgram(
+            rules=tuple(Rule(r.pattern, dataclasses.replace(r.policy, **kw))
+                        for r in self.rules),
+            default=dataclasses.replace(self.default, **kw),
+            name=self.name)
+
+    def with_rules(self, rules: Sequence, front: bool = True
+                   ) -> "PolicyProgram":
+        """New program with extra rules prepended (they take precedence)
+        or appended."""
+        extra = tuple(_as_rule(r) for r in rules)
+        new = extra + self.rules if front else self.rules + extra
+        return PolicyProgram(rules=new, default=self.default, name=self.name)
+
+    # ------------------------------------------------------------- layout
+    def varies_across_layers(self, n_layers: int) -> bool:
+        """True when any two layers resolve differently at a probe site."""
+        if n_layers <= 1:
+            return False
+        sig0 = tuple(self.resolve(f"layers/0/{s}") for s in _LAYER_PROBES)
+        return any(tuple(self.resolve(f"layers/{i}/{s}")
+                         for s in _LAYER_PROBES) != sig0
+                   for i in range(1, n_layers))
+
+    def addresses_layers(self, n_layers: int) -> bool:
+        """Should the model unroll its layer stack so `layers/<i>/...`
+        addresses exist in the param tree?
+
+        True when the program resolves differently across layers at a
+        probe site, OR when any rule pattern references the `layers/`
+        grammar at all — a rule written against `layers/...` can only
+        ever match on the unrolled layout, so keeping the scan would
+        silently drop it (even layer-uniform ones like
+        ``layers/*/attn/wq``, which no probe can distinguish)."""
+        if any("layers/" in r.pattern.lower() for r in self.rules):
+            return True
+        return self.varies_across_layers(n_layers)
+
+    # -------------------------------------------------------------- compat
+    @classmethod
+    def from_policy(cls, policy: QuantPolicy,
+                    name: str = "") -> "PolicyProgram":
+        """Compile the legacy boolean flags into an equivalent program.
+
+        Mirrors the seed `eligible()` heuristic exactly: embed/lm_head
+        first, then router, then attention substrings, then FFN substrings,
+        with the FFN flag as the default bucket.
+        """
+        on = policy
+        off = policy.off()
+        a = on if policy.quantize_attn else off
+        f = on if policy.quantize_ffn else off
+        e = on if policy.quantize_embed else off
+        r = on if policy.quantize_router else off
+        rules = (
+            Rule("*embed*", e), Rule("*lm_head*", e),
+            Rule("*router*", r),
+            Rule("*attn*", a), Rule("*attention*", a),
+            Rule("*wq*", a), Rule("*wk*", a), Rule("*wv*", a),
+            Rule("*wo*", a),
+            Rule("*mlp*", f), Rule("*ffn*", f), Rule("*expert*", f),
+            Rule("*wi*", f), Rule("*wu*", f), Rule("*wg*", f),
+            Rule("*wd*", f),
+        )
+        return cls(rules=rules, default=f, name=name or "compat")
+
+
+@functools.lru_cache(maxsize=256)
+def _compiled(policy: QuantPolicy) -> PolicyProgram:
+    return PolicyProgram.from_policy(policy)
+
+
+@functools.lru_cache(maxsize=65536)
+def _program_resolve(program: PolicyProgram, site: str) -> QuantPolicy:
+    for rule in program.rules:
+        if rule.matches(site):
+            return rule.policy
+    return program.default
+
+
+PolicyLike = Union[QuantPolicy, PolicyProgram]
+
+
+def as_program(policy: PolicyLike) -> PolicyProgram:
+    """Normalize either policy form to a PolicyProgram."""
+    return policy.as_program()
+
+
+def resolve(policy: PolicyLike, site: str) -> QuantPolicy:
+    """The single resolution entry point consumers call per site."""
+    return policy.resolve(site)
+
+
+# ==========================================================================
+# Convenience presets — flat policies (legacy) and policy programs
+# ==========================================================================
 FP = QuantPolicy(method="none")
 OLIVE_W4A4 = QuantPolicy(method="olive", wbits=4, abits=4)
 OLIVE_W4 = QuantPolicy(method="olive", wbits=4, abits=0)
@@ -73,6 +293,32 @@ PRESETS = {
 }
 
 
+def olive_mixed_w48(n_layers: int) -> PolicyProgram:
+    """First/last layer W8A8, everything between W4A4 — the paper's
+    "keep sensitive layers high precision" at layer granularity."""
+    base = PolicyProgram.from_policy(OLIVE_W4A4, name="olive_mixed_w48")
+    return base.with_rules([
+        ("layers/0/*", OLIVE_W8A8),
+        (f"layers/{max(n_layers - 1, 0)}/*", OLIVE_W8A8),
+    ])
+
+
+def olive_owq_style(n_layers: int = 0) -> PolicyProgram:
+    """OWQ-style: the sensitive attention q/k projections (RoPE feeds
+    them straight into the score path) stay W8, the rest runs W4."""
+    base = PolicyProgram.from_policy(OLIVE_W4A4, name="olive_owq_style")
+    return base.with_rules([
+        ("*attn/wq*", OLIVE_W8A8),
+        ("*attn/wk*", OLIVE_W8A8),
+    ])
+
+
+PROGRAM_PRESETS = {
+    "olive_mixed_w48": olive_mixed_w48,
+    "olive_owq_style": olive_owq_style,
+}
+
+
 def get_policy(name: Optional[str]) -> QuantPolicy:
     if name is None:
         return FP
@@ -80,3 +326,29 @@ def get_policy(name: Optional[str]) -> QuantPolicy:
         raise KeyError(f"unknown quant policy {name!r}; "
                        f"options: {sorted(PRESETS)}")
     return PRESETS[name]
+
+
+def get_program(name: Optional[str], n_layers: int = 0) -> PolicyProgram:
+    """Program for any preset name — flat presets compile via from_policy,
+    program presets (layer-addressed) take the target's layer count."""
+    if name in PROGRAM_PRESETS:
+        return PROGRAM_PRESETS[name](n_layers)
+    return PolicyProgram.from_policy(get_policy(name), name=name or "fp")
+
+
+def parse_rules(spec: str) -> List[Rule]:
+    """Parse a CLI rule list: ``pattern=preset[,pattern=preset...]``.
+
+    Presets name `PRESETS` entries (``fp`` disables a site). Example:
+    ``--policy-rules "layers/0/*=olive_w8a8,*mlp*=olive_w4a4"``.
+    """
+    rules = []
+    for tok in spec.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        if "=" not in tok:
+            raise ValueError(f"bad rule {tok!r}: expected pattern=preset")
+        pattern, preset = tok.split("=", 1)
+        rules.append(Rule(pattern.strip(), get_policy(preset.strip())))
+    return rules

@@ -24,7 +24,7 @@ from repro import backends
 
 from . import baselines
 from .ovp import QuantizedTensor
-from .policy import QuantPolicy
+from .policy import PolicyLike, QuantPolicy, resolve
 from .quantizer import (QuantSpec, fake_quant_ste, quantize,
                         sigma_init_scale)
 
@@ -126,6 +126,9 @@ NEVER_QUANT = {"w_igate", "w_fgate", "w_gate", "conv_kernel"}
 
 
 def is_linear_weight(path: str, w) -> bool:
+    """Structural gate: is this leaf a matmul weight qlinear consumes at
+    all? (Site *eligibility* — should it quantize — is the policy
+    program's job; this only filters gates/convs/norms/small tensors.)"""
     if not hasattr(w, "ndim") or w.ndim < 2:
         return False
     leaf = path.split("/")[-1]
@@ -135,21 +138,36 @@ def is_linear_weight(path: str, w) -> bool:
                                             "wv", "wu", "wg", "wd")
 
 
-def eligible(path: str, policy: QuantPolicy) -> bool:
-    p = path.lower()
-    if "embed" in p or "lm_head" in p:
-        return policy.quantize_embed
-    if "router" in p or "gate_router" in p:
-        return policy.quantize_router
-    if any(k in p for k in ("attn", "attention", "wq", "wk", "wv", "wo")):
-        return policy.quantize_attn
-    if any(k in p for k in ("mlp", "ffn", "expert", "wi", "wu", "wg", "wd")):
-        return policy.quantize_ffn
-    return policy.quantize_ffn  # default bucket
+def eligible(path: str, policy: PolicyLike) -> bool:
+    """Per-site enablement — now a thin wrapper over policy resolution
+    (the seed's string heuristics live on as `PolicyProgram.from_policy`).
+    """
+    return resolve(policy, path).enabled
 
 
-def quantize_params(params, policy: QuantPolicy, min_size: int = 4096):
+def _qt_leaf(x) -> bool:
+    # QuantizedTensor is a registered pytree; treat it as one leaf so site
+    # addresses stay the weight path, not .../data and .../scale
+    return isinstance(x, QuantizedTensor)
+
+
+def tree_paths(params):
+    """(path, leaf) pairs with "/"-joined string paths — the site addresses
+    the policy program resolves against. QuantizedTensor leaves stay whole.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params, is_leaf=_qt_leaf)[0]
+    return [("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in kp), w)
+            for kp, w in flat]
+
+
+def quantize_params(params, policy: PolicyLike, min_size: int = 4096):
     """Map PTQ over a parameter pytree. Norms/bias/small tensors stay fp.
+
+    `policy` is a `QuantPolicy` (uniform, legacy flags) or a
+    `PolicyProgram`: each leaf quantizes under the policy its own site
+    address resolves to, so one tree can mix W4 and W8 leaves (and leave
+    sites fp) according to the program.
 
     Pair axis = -2 (reduction dim), per-output-channel scales. Dims must be
     even along the pair axis — true for every assigned architecture.
@@ -157,16 +175,15 @@ def quantize_params(params, policy: QuantPolicy, min_size: int = 4096):
     if not policy.enabled:
         return params
 
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    treedef = jax.tree_util.tree_structure(params)
+    treedef = jax.tree_util.tree_structure(params, is_leaf=_qt_leaf)
     out = []
-    for kp, w in flat:
-        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in kp)
-        if (hasattr(w, "ndim") and w.ndim >= 2 and w.size >= min_size
-                and w.shape[-2] % 2 == 0 and eligible(path, policy)
+    for path, w in tree_paths(params):
+        site_policy = resolve(policy, path)
+        if (site_policy.enabled and hasattr(w, "ndim") and w.ndim >= 2
+                and w.size >= min_size and w.shape[-2] % 2 == 0
                 and is_linear_weight(path, w)):
-            out.append(quantize_weight(jnp.asarray(w, jnp.float32), policy))
+            out.append(quantize_weight(jnp.asarray(w, jnp.float32),
+                                       site_policy))
         else:
             out.append(w)
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,11 +1,15 @@
 """Production serving launcher.
 
 Loads (or trains a throwaway) model for --arch, applies the OliVe PTQ
-policy, and either runs the continuous-batching engine on a synthetic
-request stream (--requests N) or a fixed-shape latency loop (--bench).
+policy — a flat preset, a named mixed-precision *policy program* preset
+(`olive_mixed_w48`, `olive_owq_style`), and/or ad-hoc site rules — and
+runs the continuous-batching engine on a synthetic request stream.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
       --quant olive_serve --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
+      --quant olive_mixed_w48 \
+      --policy-rules "layers/1/mlp/*=olive_w8a8" --requests 16
 """
 from __future__ import annotations
 
@@ -18,7 +22,8 @@ import numpy as np
 
 from repro import backends
 from repro.configs import get_config
-from repro.core.policy import PRESETS, get_policy
+from repro.core.policy import (PRESETS, PROGRAM_PRESETS, get_policy,
+                               get_program, parse_rules)
 from repro.core.qlinear import quantize_params
 from repro.models.model import build_model
 from repro.serve.engine import EngineCfg, Request, ServingEngine
@@ -28,8 +33,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--quant", default="olive_w4",
-                    choices=sorted(PRESETS) + ["fp"],
-                    help="PTQ policy for the weights/KV")
+                    choices=sorted(PRESETS) + sorted(PROGRAM_PRESETS)
+                    + ["fp"],
+                    help="PTQ policy or policy-program preset for the "
+                         "weights/KV")
+    ap.add_argument("--policy-rules", default=None,
+                    help="extra site rules prepended to the program, "
+                         "e.g. 'layers/0/*=olive_w8a8,*mlp*=olive_w4a4' "
+                         "(see docs/policies.md)")
     ap.add_argument("--backend", default=None,
                     choices=backends.available(),
                     help="quantized-matmul execution backend "
@@ -43,14 +54,20 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    policy = get_policy(None if args.quant == "fp" else args.quant)
-    import dataclasses
-    policy = dataclasses.replace(policy, compute_dtype="float32",
-                                 abits=0)  # CPU engine: weight + KV quant
+    if args.quant in PROGRAM_PRESETS or args.policy_rules:
+        policy = get_program(None if args.quant == "fp" else args.quant,
+                             n_layers=cfg.n_layers)
+        if args.policy_rules:
+            policy = policy.with_rules(parse_rules(args.policy_rules))
+    else:
+        policy = get_policy(None if args.quant == "fp" else args.quant)
+    # CPU engine: weight + KV quant only (replace_all rewrites every rule
+    # of a program, or the one flat policy)
+    policy = policy.replace_all(compute_dtype="float32", abits=0)
     if args.backend is not None:
-        policy = dataclasses.replace(policy, backend=args.backend)
-    print(f"[serve] quantized-matmul backend: "
-          f"{backends.get_backend(policy.backend).name}")
+        policy = policy.with_backend(args.backend)
+    print(f"[serve] quantized-matmul backend(s): "
+          f"{', '.join(sorted(policy.backends()))}")
     model = build_model(cfg, policy, remat=False)
     params = model.init(jax.random.PRNGKey(args.seed), dtype=jnp.float32)
     if policy.enabled:

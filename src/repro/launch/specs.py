@@ -54,7 +54,13 @@ def microbatches_for(cfg: ArchConfig, shape: ShapeCfg) -> int:
     return 8 if big else 4
 
 
-def serve_policy(quant: str) -> QuantPolicy:
+def serve_policy(quant: str, n_layers: int = 0):
+    """Policy (or policy program, for the mixed presets) for one serve
+    cell. Program presets need the layer count to address first/last."""
+    from repro.core.policy import PROGRAM_PRESETS, get_program
+    if quant in PROGRAM_PRESETS:
+        return get_program(quant, n_layers=n_layers) \
+            .replace_all(compute_dtype="bfloat16")
     if quant == "none":
         return QuantPolicy(compute_dtype="bfloat16")
     if quant == "olive":          # paper-faithful W4A4 serving
@@ -153,7 +159,7 @@ def build_serve_cell(arch: str, shape_name: str, mesh: Mesh, *,
     assert shape.kind in ("prefill", "decode")
     long_ctx = shape.name == "long_500k"
     rules = make_rules(cfg, mesh, long_context=long_ctx)
-    policy = serve_policy(quant)
+    policy = serve_policy(quant, n_layers=cfg.n_layers)
     model = build_model(cfg, policy, remat=False)
 
     params_sds = jax.eval_shape(

@@ -17,11 +17,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import qlinear
-from repro.core.policy import QuantPolicy
+from repro.core.policy import PolicyLike, QuantPolicy
 from repro.sharding.axes import logical
 
 Params = dict
 NEG_INF = -1e30
+
+
+def rp(policy: PolicyLike, site: str, leaf: str = "") -> QuantPolicy:
+    """Resolve the policy (flat or program) for one weight site.
+
+    `site` is the block's address prefix (e.g. ``layers/3/attn``), `leaf`
+    the weight name under it; empty-prefix callers resolve on the leaf
+    alone, which the flag-compat program buckets by substring exactly like
+    the seed heuristics did.
+    """
+    full = f"{site}/{leaf}" if (site and leaf) else (site or leaf)
+    return policy.resolve(full)
 
 
 def _init(key, shape, scale=None, dtype=jnp.float32):
@@ -443,22 +455,25 @@ def attention_params(key, d_model, n_heads, n_kv, head_dim, qkv_bias=False,
     return p
 
 
-def attention_forward(p, x, positions, cfg, policy: QuantPolicy, *,
+def attention_forward(p, x, positions, cfg, policy: PolicyLike, *,
                       window=0, causal=True, cache=None, mode="train",
-                      kv_x=None, use_rope=True):
+                      kv_x=None, use_rope=True, site="attn"):
     """mode: train|prefill|decode. Returns (out, new_cache).
 
     kv_x: source for K/V (cross-attention); defaults to x.
+    site: policy-program address prefix for this block's projections.
     """
     b, t, d_model = x.shape
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     src = x if kv_x is None else kv_x
 
-    q = qlinear.linear(x, p["wq"], p.get("bq"), policy)
+    q = qlinear.linear(x, p["wq"], p.get("bq"), rp(policy, site, "wq"))
     q = q.reshape(b, t, nh, hd)
     if mode == "decode" and kv_x is None:
-        k_new = qlinear.linear(x, p["wk"], p.get("bk"), policy)
-        v_new = qlinear.linear(x, p["wv"], p.get("bv"), policy)
+        k_new = qlinear.linear(x, p["wk"], p.get("bk"),
+                               rp(policy, site, "wk"))
+        v_new = qlinear.linear(x, p["wv"], p.get("bv"),
+                               rp(policy, site, "wv"))
         k_new = k_new.reshape(b, t, nkv, hd)
         v_new = v_new.reshape(b, t, nkv, hd)
         if use_rope:
@@ -474,8 +489,8 @@ def attention_forward(p, x, positions, cfg, policy: QuantPolicy, *,
         out = decode_attention(q, cache, positions[:, 0] * 0
                                + cache_len(cache) - 1)
     else:
-        k = qlinear.linear(src, p["wk"], p.get("bk"), policy)
-        v = qlinear.linear(src, p["wv"], p.get("bv"), policy)
+        k = qlinear.linear(src, p["wk"], p.get("bk"), rp(policy, site, "wk"))
+        v = qlinear.linear(src, p["wv"], p.get("bv"), rp(policy, site, "wv"))
         s_len = src.shape[1]
         k = k.reshape(b, s_len, nkv, hd)
         v = v.reshape(b, s_len, nkv, hd)
@@ -504,7 +519,7 @@ def attention_forward(p, x, positions, cfg, policy: QuantPolicy, *,
                 cache = cache_write(cache, k, v,
                                     jnp.zeros((b,), jnp.int32))
     out = out.reshape(b, t, nh * hd)
-    out = qlinear.linear(out, p["wo"], None, policy)
+    out = qlinear.linear(out, p["wo"], None, rp(policy, site, "wo"))
     return logical(out, "batch", "seq", "embed"), cache
 
 
@@ -525,12 +540,12 @@ def swiglu_params(key, d_model, d_ff, dtype=jnp.float32):
             "wd": _init(ks[2], (d_ff, d_model), dtype=dtype)}
 
 
-def swiglu(p, x, policy: QuantPolicy):
-    g = qlinear.linear(x, p["wg"], None, policy)
-    u = qlinear.linear(x, p["wu"], None, policy)
+def swiglu(p, x, policy: PolicyLike, site="mlp"):
+    g = qlinear.linear(x, p["wg"], None, rp(policy, site, "wg"))
+    u = qlinear.linear(x, p["wu"], None, rp(policy, site, "wu"))
     h = jax.nn.silu(g) * u
     h = logical(h, "batch", "seq", "ffn")
-    return logical(qlinear.linear(h, p["wd"], None, policy),
+    return logical(qlinear.linear(h, p["wd"], None, rp(policy, site, "wd")),
                    "batch", "seq", "embed")
 
 
@@ -542,10 +557,11 @@ def gelu_mlp_params(key, d_model, d_ff, dtype=jnp.float32):
             "bd": jnp.zeros((d_model,), dtype)}
 
 
-def gelu_mlp(p, x, policy: QuantPolicy):
-    h = jax.nn.gelu(qlinear.linear(x, p["wi"], p["bi"], policy))
+def gelu_mlp(p, x, policy: PolicyLike, site="mlp"):
+    h = jax.nn.gelu(qlinear.linear(x, p["wi"], p["bi"],
+                                   rp(policy, site, "wi")))
     h = logical(h, "batch", "seq", "ffn")
-    return qlinear.linear(h, p["wd"], p["bd"], policy)
+    return qlinear.linear(h, p["wd"], p["bd"], rp(policy, site, "wd"))
 
 
 # ==========================================================================
@@ -568,7 +584,8 @@ def moe_params(key, d_model, d_ff, n_experts, dtype=jnp.float32):
     }
 
 
-def moe_layer(p, x, cfg, policy: QuantPolicy, capacity_factor=None):
+def moe_layer(p, x, cfg, policy: PolicyLike, capacity_factor=None,
+              site="moe"):
     """Top-k token-choice MoE. Returns (y, aux_loss).
 
     Dispatch is PER BATCH ROW (§Perf iteration M): routing, capacity,
@@ -590,7 +607,7 @@ def moe_layer(p, x, cfg, policy: QuantPolicy, capacity_factor=None):
         capacity_factor = getattr(cfg, "capacity_factor", 1.25)
 
     router_w = p["router"]["w_gate"]
-    if policy.enabled and not policy.quantize_router \
+    if policy.enabled and not rp(policy, site, "router/w_gate").enabled \
             and hasattr(router_w, "astype"):
         router_w = router_w.astype(jnp.float32)
     logits = x.astype(jnp.float32) @ router_w            # (B, T, E)
@@ -629,11 +646,12 @@ def moe_layer(p, x, cfg, policy: QuantPolicy, capacity_factor=None):
     xg = logical(xg, "batch", "expert", "expert_cap", "embed")
 
     ew = p["experts"]
-    h = _expert_ein(xg, ew["wg"], policy)
-    u = _expert_ein(xg, ew["wu"], policy)
+    h = _expert_ein(xg, ew["wg"], rp(policy, site, "experts/wg"))
+    u = _expert_ein(xg, ew["wu"], rp(policy, site, "experts/wu"))
     hh = jax.nn.silu(h) * u
     hh = logical(hh, "batch", "expert", "expert_cap", "ffn")
-    yg = _expert_ein(hh, ew["wd"], policy)               # (B, E, cap, d)
+    yg = _expert_ein(hh, ew["wd"],
+                     rp(policy, site, "experts/wd"))    # (B, E, cap, d)
     yg = logical(yg, "batch", "expert", "expert_cap", "embed")
 
     def combine_row(yg_r, dest_r, st_r, sw_r, keep_r):
@@ -716,14 +734,16 @@ def rglru_params(key, d_model, d_rnn, dtype=jnp.float32):
     }
 
 
-def _rglru_core(p, u, h0, policy: QuantPolicy):
+def _rglru_core(p, u, h0, policy: PolicyLike, site="rec"):
     """u: (B,T,Dr) inputs; h0: (B,Dr). Linear diag recurrence via
     associative scan: h_t = a_t ⊙ h_{t-1} + b_t."""
     rt = jax.nn.sigmoid(
-        qlinear.linear(u, p["w_rec_gate"], None, policy)
+        qlinear.linear(u, p["w_rec_gate"], None,
+                       rp(policy, site, "w_rec_gate"))
         .astype(jnp.float32))
     it = jax.nn.sigmoid(
-        qlinear.linear(u, p["w_inp_gate"], None, policy)
+        qlinear.linear(u, p["w_inp_gate"], None,
+                       rp(policy, site, "w_inp_gate"))
         .astype(jnp.float32))
     log_a = -8.0 * jax.nn.softplus(p["a_param"]) * rt  # log a_t ≤ 0
     a = jnp.exp(log_a)
@@ -740,17 +760,20 @@ def _rglru_core(p, u, h0, policy: QuantPolicy):
     return a_scan * h0[:, None, :] + b_scan
 
 
-def rglru_forward(p, x, cfg, policy, *, state=None, mode="train"):
+def rglru_forward(p, x, cfg, policy, *, state=None, mode="train",
+                  site="rec"):
     """Griffin recurrent block. state = {"h": (B,Dr), "conv": (B,3,Dr)}."""
     b, t, _ = x.shape
-    gate = jax.nn.gelu(qlinear.linear(x, p["wgate"], None, policy))
-    u = qlinear.linear(x, p["wx"], None, policy)
+    gate = jax.nn.gelu(qlinear.linear(x, p["wgate"], None,
+                                      rp(policy, site, "wgate")))
+    u = qlinear.linear(x, p["wx"], None, rp(policy, site, "wx"))
     conv_state = state["conv"] if state is not None else None
     u, new_conv = conv1d_causal(p["conv"], u, conv_state)
     h0 = state["h"] if state is not None else jnp.zeros(
         (b, u.shape[-1]), jnp.float32)
-    h = _rglru_core(p, u, h0, policy)
-    y = qlinear.linear((h.astype(x.dtype) * gate), p["wo"], None, policy)
+    h = _rglru_core(p, u, h0, policy, site=site)
+    y = qlinear.linear((h.astype(x.dtype) * gate), p["wo"], None,
+                       rp(policy, site, "wo"))
     new_state = None
     if state is not None:
         new_state = {"h": h[:, -1].astype(jnp.float32), "conv": new_conv}
@@ -891,18 +914,22 @@ def _mlstm_chunkwise(q, k, v, i_pre, f_pre, state, chunk: int = 64):
     return hout, {"c": c, "n": n, "m": m}
 
 
-def mlstm_forward(p, x, cfg, policy, *, state=None, mode="train"):
+def mlstm_forward(p, x, cfg, policy, *, state=None, mode="train",
+                  site="mlstm"):
     b, t, d = x.shape
     nh = cfg.n_heads
-    up = qlinear.linear(x, p["w_up"], None, policy)
+    up = qlinear.linear(x, p["w_up"], None, rp(policy, site, "w_up"))
     xm, z = jnp.split(up, 2, axis=-1)
     conv_state = state["conv"] if state is not None else None
     xc, new_conv = conv1d_causal(p["conv"], jax.nn.silu(xm), conv_state)
     d_inner = xm.shape[-1]
     dh = d_inner // nh
-    q = qlinear.linear(xc, p["wq"], None, policy).reshape(b, t, nh, dh)
-    k = qlinear.linear(xc, p["wk"], None, policy).reshape(b, t, nh, dh)
-    v = qlinear.linear(xm, p["wv"], None, policy).reshape(b, t, nh, dh)
+    q = qlinear.linear(xc, p["wq"], None,
+                       rp(policy, site, "wq")).reshape(b, t, nh, dh)
+    k = qlinear.linear(xc, p["wk"], None,
+                       rp(policy, site, "wk")).reshape(b, t, nh, dh)
+    v = qlinear.linear(xm, p["wv"], None,
+                       rp(policy, site, "wv")).reshape(b, t, nh, dh)
     i_pre = (xc.astype(jnp.float32) @ p["w_igate"].astype(jnp.float32)
              + p["igate_bias"])
     f_pre = jax.nn.log_sigmoid(
@@ -921,7 +948,8 @@ def mlstm_forward(p, x, cfg, policy, *, state=None, mode="train"):
         hout, new_mem = _mlstm_core(q, k, v, i_pre, f_pre, st)
     hout = hout.reshape(b, t, d_inner).astype(x.dtype)
     hout = rms_norm(hout, p["outnorm"])
-    y = qlinear.linear(hout * jax.nn.silu(z), p["w_down"], None, policy)
+    y = qlinear.linear(hout * jax.nn.silu(z), p["w_down"], None,
+                       rp(policy, site, "w_down"))
     new_state = None
     if state is not None:
         new_state = {"mem": new_mem, "conv": new_conv}
@@ -993,12 +1021,14 @@ def _slstm_core(p, zi, ii, fi, oi, n_heads, state):
     return jnp.moveaxis(hs, 0, 1), {"c": c, "n": n, "m": m, "h": h}
 
 
-def slstm_forward(p, x, cfg, policy, *, state=None, mode="train"):
+def slstm_forward(p, x, cfg, policy, *, state=None, mode="train",
+                  site="slstm"):
     b, t, d = x.shape
-    zi = qlinear.linear(x, p["wz"], None, policy)
-    ii = qlinear.linear(x, p["wi_gate"], None, policy)
-    fi = qlinear.linear(x, p["wf_gate"], None, policy) + p["fgate_bias"]
-    oi = qlinear.linear(x, p["wo_gate"], None, policy)
+    zi = qlinear.linear(x, p["wz"], None, rp(policy, site, "wz"))
+    ii = qlinear.linear(x, p["wi_gate"], None, rp(policy, site, "wi_gate"))
+    fi = qlinear.linear(x, p["wf_gate"], None,
+                        rp(policy, site, "wf_gate")) + p["fgate_bias"]
+    oi = qlinear.linear(x, p["wo_gate"], None, rp(policy, site, "wo_gate"))
     st = state["mem"] if state is not None else {
         "c": jnp.zeros((b, d), jnp.float32),
         "n": jnp.ones((b, d), jnp.float32),
@@ -1007,8 +1037,9 @@ def slstm_forward(p, x, cfg, policy, *, state=None, mode="train"):
     hs, new_mem = _slstm_core(p, zi, ii, fi, oi, cfg.n_heads, st)
     hs = hs.astype(x.dtype)
     # post up-projection MLP (xLSTM sLSTM block, pf = 4/3)
-    u = jax.nn.gelu(qlinear.linear(hs, p["mlp"]["wu2"], None, policy))
-    y = qlinear.linear(u, p["mlp"]["wd2"], None, policy)
+    u = jax.nn.gelu(qlinear.linear(hs, p["mlp"]["wu2"], None,
+                                   rp(policy, site, "mlp/wu2")))
+    y = qlinear.linear(u, p["mlp"]["wd2"], None, rp(policy, site, "mlp/wd2"))
     new_state = {"mem": new_mem} if state is not None else None
     return logical(y, "batch", "seq", "embed"), new_state
 

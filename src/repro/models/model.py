@@ -7,7 +7,6 @@ group axis (MaxText-style). Remainder layers live in `tail`.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
@@ -16,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import qlinear
-from repro.core.policy import QuantPolicy
+from repro.core.policy import PolicyLike, PolicyProgram, QuantPolicy
 from repro.configs.base import ArchConfig
 from repro.sharding.axes import logical
 from . import layers as L
@@ -98,24 +97,34 @@ def block_cache(cfg: ArchConfig, btype: str, batch: int, max_len: int,
     raise ValueError(btype)
 
 
-def block_forward(p, x, positions, cfg: ArchConfig, policy: QuantPolicy,
-                  btype: str, cache=None, mode="train", enc_out=None):
-    """Returns (x, new_cache, aux_loss)."""
+def block_forward(p, x, positions, cfg: ArchConfig, policy: PolicyLike,
+                  btype: str, cache=None, mode="train", enc_out=None,
+                  site=""):
+    """Returns (x, new_cache, aux_loss).
+
+    `site` is this block's policy-program address prefix — the pytree path
+    of its params (``layers/3``, ``blocks/0``, ``tail/1``, ...); the layer
+    forwards resolve each projection under it.
+    """
+    def sub(leaf):
+        return f"{site}/{leaf}" if site else leaf
+
     aux = jnp.zeros((), jnp.float32)
     if btype in ("attn", "local_attn", "moe"):
         window = cfg.window if btype == "local_attn" else 0
         h, kv = L.attention_forward(
             p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
             cfg, policy, window=window, cache=None if cache is None
-            else cache["kv"], mode=mode)
+            else cache["kv"], mode=mode, site=sub("attn"))
         x = x + h
         xm = L.rms_norm(x, p["ln2"], cfg.norm_eps)
         if btype == "moe":
-            h2, aux = L.moe_layer(p["moe"], xm, cfg, policy)
+            h2, aux = L.moe_layer(p["moe"], xm, cfg, policy,
+                                  site=sub("moe"))
         elif cfg.mlp_kind == "swiglu":
-            h2 = L.swiglu(p["mlp"], xm, policy)
+            h2 = L.swiglu(p["mlp"], xm, policy, site=sub("mlp"))
         else:
-            h2 = L.gelu_mlp(p["mlp"], xm, policy)
+            h2 = L.gelu_mlp(p["mlp"], xm, policy, site=sub("mlp"))
         x = x + h2
         return x, (None if cache is None else {"kv": kv}), aux
     if btype == "rglru":
@@ -123,10 +132,11 @@ def block_forward(p, x, positions, cfg: ArchConfig, policy: QuantPolicy,
                                 L.rms_norm(x, p["ln1"], cfg.norm_eps),
                                 cfg, policy,
                                 state=None if cache is None
-                                else cache["rec"], mode=mode)
+                                else cache["rec"], mode=mode,
+                                site=sub("rec"))
         x = x + h
         h2 = L.swiglu(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps),
-                      policy)
+                      policy, site=sub("mlp"))
         x = x + h2
         return x, (None if cache is None else {"rec": st}), aux
     if btype == "mlstm":
@@ -134,37 +144,42 @@ def block_forward(p, x, positions, cfg: ArchConfig, policy: QuantPolicy,
                                 L.rms_norm(x, p["ln1"], cfg.norm_eps),
                                 cfg, policy,
                                 state=None if cache is None
-                                else cache["mlstm"], mode=mode)
+                                else cache["mlstm"], mode=mode,
+                                site=sub("mlstm"))
         return x + h, (None if cache is None else {"mlstm": st}), aux
     if btype == "slstm":
         h, st = L.slstm_forward(p["slstm"],
                                 L.rms_norm(x, p["ln1"], cfg.norm_eps),
                                 cfg, policy,
                                 state=None if cache is None
-                                else cache["slstm"], mode=mode)
+                                else cache["slstm"], mode=mode,
+                                site=sub("slstm"))
         return x + h, (None if cache is None else {"slstm": st}), aux
     if btype == "encdec_attn":
         h, kv = L.attention_forward(
             p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
             cfg, policy, cache=None if cache is None else cache["kv"],
-            mode=mode)
+            mode=mode, site=sub("attn"))
         x = x + h
         xkv = None if cache is None else cache["xkv"]
         if mode == "decode":
             hx, _ = L.attention_forward(
                 p["xattn"], L.rms_norm(x, p["lnx"], cfg.norm_eps),
                 positions, cfg, policy, cache=xkv, mode="decode",
-                kv_x=jnp.zeros_like(x), use_rope=False)
+                kv_x=jnp.zeros_like(x), use_rope=False,
+                site=sub("xattn"))
             new_xkv = xkv
         else:
             hx, new_xkv = L.attention_forward(
                 p["xattn"], L.rms_norm(x, p["lnx"], cfg.norm_eps),
                 positions, cfg, policy, causal=False, cache=xkv,
-                mode=mode, kv_x=enc_out, use_rope=False)
+                mode=mode, kv_x=enc_out, use_rope=False,
+                site=sub("xattn"))
         x = x + hx
         xm = L.rms_norm(x, p["ln2"], cfg.norm_eps)
-        h2 = (L.swiglu(p["mlp"], xm, policy) if cfg.mlp_kind == "swiglu"
-              else L.gelu_mlp(p["mlp"], xm, policy))
+        h2 = (L.swiglu(p["mlp"], xm, policy, site=sub("mlp"))
+              if cfg.mlp_kind == "swiglu"
+              else L.gelu_mlp(p["mlp"], xm, policy, site=sub("mlp")))
         x = x + h2
         new_cache = None if cache is None else {"kv": kv, "xkv": new_xkv}
         return x, new_cache, aux
@@ -175,16 +190,32 @@ def block_forward(p, x, positions, cfg: ArchConfig, policy: QuantPolicy,
 # The Model
 # ==========================================================================
 class Model:
-    """Functional LM bundle for one ArchConfig."""
+    """Functional LM bundle for one ArchConfig.
 
-    def __init__(self, cfg: ArchConfig, policy: QuantPolicy = QuantPolicy(),
+    `policy` is a flat `QuantPolicy` (uniform — the layer stack scans over
+    groups with stacked params, MaxText-style) or a `PolicyProgram`. A
+    program that resolves differently across layers *unrolls* the stack:
+    params live under ``layers/<i>/...`` so every per-layer site address
+    exists in the pytree and each layer runs under its own resolved policy
+    (mixed W4/W8 trees, per-layer kv_bits, per-site backends).
+    """
+
+    def __init__(self, cfg: ArchConfig, policy: PolicyLike = QuantPolicy(),
                  remat: bool = True):
         self.cfg = cfg
         self.policy = policy
         self.remat = remat
         period = len(cfg.block_pattern)
-        self.n_groups = cfg.n_layers // period
-        self.n_tail = cfg.n_layers % period
+        self.unrolled = (isinstance(policy, PolicyProgram)
+                         and policy.addresses_layers(cfg.n_layers))
+        if self.unrolled:
+            self.n_groups, self.n_tail = 0, 0
+        else:
+            self.n_groups = cfg.n_layers // period
+            self.n_tail = cfg.n_layers % period
+
+    def _block_type(self, layer: int) -> str:
+        return self.cfg.block_pattern[layer % len(self.cfg.block_pattern)]
 
     # ------------------------------------------------------------- init
     def init(self, key, dtype=jnp.float32) -> Params:
@@ -199,22 +230,31 @@ class Model:
                 keys[1], (cfg.d_model, vp))
                 / math.sqrt(cfg.d_model)).astype(dtype)},
         }
-        # stacked per-period-position block params
+        # stacked per-period-position block params (or, for layer-varying
+        # policy programs, an unrolled per-layer list so every layer has
+        # its own `layers/<i>/...` address)
         period = len(cfg.block_pattern)
 
-        def one_group(k):
-            gks = jax.random.split(k, period)
-            return {str(j): block_params(gks[j], cfg, cfg.block_pattern[j],
-                                         dtype)
-                    for j in range(period)}
+        if self.unrolled:
+            lks = jax.random.split(keys[2], cfg.n_layers)
+            params["layers"] = [block_params(lks[i], cfg,
+                                             self._block_type(i), dtype)
+                                for i in range(cfg.n_layers)]
+            params["blocks"], params["tail"] = {}, []
+        else:
+            def one_group(k):
+                gks = jax.random.split(k, period)
+                return {str(j): block_params(gks[j], cfg,
+                                             cfg.block_pattern[j], dtype)
+                        for j in range(period)}
 
-        gkeys = jax.random.split(keys[2], max(self.n_groups, 1))
-        params["blocks"] = jax.vmap(one_group)(gkeys) if self.n_groups \
-            else {}
-        tks = jax.random.split(keys[3], max(self.n_tail, 1))
-        params["tail"] = [block_params(tks[j], cfg, cfg.block_pattern[j],
-                                       dtype)
-                          for j in range(self.n_tail)]
+            gkeys = jax.random.split(keys[2], max(self.n_groups, 1))
+            params["blocks"] = jax.vmap(one_group)(gkeys) if self.n_groups \
+                else {}
+            tks = jax.random.split(keys[3], max(self.n_tail, 1))
+            params["tail"] = [block_params(tks[j], cfg,
+                                           cfg.block_pattern[j], dtype)
+                              for j in range(self.n_tail)]
         if cfg.enc_dec:
             eks = jax.random.split(keys[4], max(cfg.n_enc_layers, 1))
 
@@ -234,20 +274,32 @@ class Model:
     # ------------------------------------------------------------ caches
     def init_caches(self, batch: int, max_len: int, enc_len: int = 0,
                     dtype=jnp.bfloat16):
+        """KV/recurrent caches; kv_bits resolves per cache site
+        (``<block>/attn/kv``), so a program can OVP-pack some layers'
+        caches and keep others full precision."""
         cfg = self.cfg
-        kvb = self.policy.kv_bits
+        pol = self.policy
         period = len(cfg.block_pattern)
 
+        if self.unrolled:
+            return {"layers": [
+                block_cache(cfg, self._block_type(i), batch, max_len,
+                            enc_len, dtype,
+                            pol.resolve(f"layers/{i}/attn/kv").kv_bits)
+                for i in range(cfg.n_layers)]}
+
         def one_group(_):
-            return {str(j): block_cache(cfg, cfg.block_pattern[j], batch,
-                                        max_len, enc_len, dtype, kvb)
-                    for j in range(period)}
+            return {str(j): block_cache(
+                cfg, cfg.block_pattern[j], batch, max_len, enc_len, dtype,
+                pol.resolve(f"blocks/{j}/attn/kv").kv_bits)
+                for j in range(period)}
 
         caches = {
             "blocks": (jax.vmap(one_group)(jnp.arange(self.n_groups))
                        if self.n_groups else {}),
             "tail": [block_cache(cfg, cfg.block_pattern[j], batch, max_len,
-                                 enc_len, dtype, kvb)
+                                 enc_len, dtype,
+                                 pol.resolve(f"tail/{j}/attn/kv").kv_bits)
                      for j in range(self.n_tail)],
         }
         return caches
@@ -263,7 +315,8 @@ class Model:
         if cfg.frontend == "vit" and "patch_embeds" in batch:
             pe = qlinear.linear(batch["patch_embeds"].astype(cdt),
                                 params["frontend_proj"]["w_in"],
-                                params["frontend_proj"]["b_in"], pol)
+                                params["frontend_proj"]["b_in"],
+                                pol.resolve("frontend_proj/w_in"))
             x = jnp.concatenate([pe, x], axis=1)
         return logical(x, "batch", "seq", "embed")
 
@@ -274,13 +327,14 @@ class Model:
         cdt = jnp.dtype(pol.compute_dtype)
         x = qlinear.linear(frames.astype(cdt),
                            params["frontend_proj"]["w_in"],
-                           params["frontend_proj"]["b_in"], pol)
+                           params["frontend_proj"]["b_in"],
+                           pol.resolve("frontend_proj/w_in"))
         b, s, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
 
         def body(carry, p):
             h, _, _ = block_forward(p, carry, positions, cfg, pol, "attn",
-                                    mode="encode")
+                                    mode="encode", site="enc_blocks")
             return h, None
 
         fn = jax.checkpoint(body) if self.remat else body
@@ -313,6 +367,29 @@ class Model:
         aux0 = jnp.zeros((), jnp.float32)
         period = len(cfg.block_pattern)
 
+        if self.unrolled:
+            # per-layer policies: python loop, one block per `layers/<i>`
+            aux = aux0
+            new_layer_caches = []
+            for i in range(cfg.n_layers):
+                bt = self._block_type(i)
+                c_i = None if caches is None else caches["layers"][i]
+
+                def run(p_i, h, c_i, i=i, bt=bt):
+                    return block_forward(p_i, h, positions, cfg, pol, bt,
+                                         cache=c_i, mode=mode,
+                                         enc_out=enc_out,
+                                         site=f"layers/{i}")
+
+                fn = jax.checkpoint(run) if (self.remat
+                                             and mode == "train") else run
+                x, nc, a = fn(params["layers"][i], x, c_i)
+                new_layer_caches.append(nc)
+                aux = aux + a
+            new_caches = ({"layers": new_layer_caches}
+                          if caches is not None else None)
+            return self._head(params, x, aux, new_caches, last_only)
+
         def body(carry, xs):
             h, aux = carry
             if caches is None:
@@ -325,7 +402,8 @@ class Model:
                 c_j = None if cg is None else cg[str(j)]
                 h, nc, a = block_forward(pg[str(j)], h, positions, cfg,
                                          pol, bt, cache=c_j, mode=mode,
-                                         enc_out=enc_out)
+                                         enc_out=enc_out,
+                                         site=f"blocks/{j}")
                 if nc is not None:
                     new_cg[str(j)] = nc
                 aux = aux + a
@@ -346,31 +424,75 @@ class Model:
             c_j = None if caches is None else caches["tail"][j]
             x, nc, a = block_forward(params["tail"][j], x, positions, cfg,
                                      pol, bt, cache=c_j, mode=mode,
-                                     enc_out=enc_out)
+                                     enc_out=enc_out, site=f"tail/{j}")
             new_tail.append(nc)
             aux = aux + a
 
+        new_caches = None
+        if caches is not None:
+            new_caches = {"blocks": new_block_caches, "tail": new_tail}
+        return self._head(params, x, aux, new_caches, last_only)
+
+    def _head(self, params, x, aux, new_caches, last_only: bool):
+        cfg = self.cfg
+        pol = self.policy
         if last_only:
             x = x[:, -1:]
         x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = params["lm_head"]["w_out"]
         if cfg.tie_embeddings:
             head = params["embed"]["table"].T
-        head_pol = pol if pol.quantize_embed else \
-            dataclasses.replace(pol, method="none")
-        logits = qlinear.qmatmul(x, head, head_pol).astype(jnp.float32)
+        logits = qlinear.qmatmul(x, head, pol.resolve("lm_head/w_out")) \
+            .astype(jnp.float32)
         if cfg.padded_vocab != cfg.vocab:
             # mask pad columns (elementwise along the sharded vocab dim)
             col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
                                            logits.ndim - 1)
             logits = jnp.where(col >= cfg.vocab, jnp.float32(-1e9), logits)
         logits = logical(logits, "batch", "seq", "vocab")
-        new_caches = None
-        if caches is not None:
-            new_caches = {"blocks": new_block_caches, "tail": new_tail}
         return logits, new_caches, aux
 
 
-def build_model(cfg: ArchConfig, policy: QuantPolicy = QuantPolicy(),
+    # ------------------------------------------------------------- layout
+    def adapt_params(self, params) -> Params:
+        """Convert a param tree to this model's layout.
+
+        Scan-stacked (``blocks``/``tail``) trees unroll into per-layer
+        ``layers/<i>`` entries when this model is layer-addressed; trees
+        already in the right layout pass through. Re-stacking an unrolled
+        tree is not supported (quantized leaves may differ per layer)."""
+        has_layers = isinstance(params, dict) and params.get("layers")
+        if self.unrolled and not has_layers:
+            return unroll_params(self.cfg, params)
+        if not self.unrolled and has_layers:
+            raise ValueError(
+                "cannot re-stack an unrolled param tree for a uniform "
+                "policy; rebuild the model with the layer-varying program")
+        return params
+
+
+def unroll_params(cfg: ArchConfig, params: Params) -> Params:
+    """``blocks``/``tail`` (scan-stacked) param layout -> per-layer
+    ``layers/<i>`` list, so layer-addressed policy programs can resolve
+    each layer independently. Slices the leading group dim off every
+    stacked leaf; ``tail`` entries append in order."""
+    period = len(cfg.block_pattern)
+    out = {k: v for k, v in params.items() if k not in ("blocks", "tail")}
+    layers = []
+    blocks = params.get("blocks") or {}
+    if blocks:
+        any_leaf = jax.tree_util.tree_leaves(blocks)[0]
+        n_groups = any_leaf.shape[0]
+        for g in range(n_groups):
+            for j in range(period):
+                layers.append(jax.tree_util.tree_map(
+                    lambda leaf, g=g: leaf[g], blocks[str(j)]))
+    layers.extend(params.get("tail") or [])
+    out["layers"] = layers
+    out["blocks"], out["tail"] = {}, []
+    return out
+
+
+def build_model(cfg: ArchConfig, policy: PolicyLike = QuantPolicy(),
                 remat: bool = True) -> Model:
     return Model(cfg, policy, remat)

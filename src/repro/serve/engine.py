@@ -49,15 +49,17 @@ class ServingEngine:
     jitted steps over the mesh via pjit; see launch/serve.py)."""
 
     def __init__(self, model: Model, params, cfg: EngineCfg):
-        if cfg.backend is not None and cfg.backend != model.policy.backend:
+        if cfg.backend is not None and \
+                model.policy.backends() != frozenset((cfg.backend,)):
             # shallow-copy so the override never leaks into other users of
-            # the caller's Model instance
+            # the caller's Model instance (`with_backend` rewrites every
+            # rule of a policy program)
             model = copy.copy(model)
-            model.policy = dataclasses.replace(model.policy,
-                                               backend=cfg.backend)
-        # resolve through the registry up front: a typo'd backend name
-        # fails here, not mid-trace on the first prefill
-        self.qbackend = backends.get_backend(model.policy.backend)
+            model.policy = model.policy.with_backend(cfg.backend)
+        # resolve every rule's backend through the registry up front: a
+        # typo'd backend name fails here, not mid-trace on first prefill
+        for name in model.policy.backends():
+            backends.get_backend(name)
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -68,12 +70,25 @@ class ServingEngine:
                                         dtype=jnp.float32)
         self.completed: List[Request] = []
         self._uid = 0
+        # Bucketed prefill right-pads the prompt so the trace is keyed by
+        # the bucket length, not the exact prompt length. Under a causal
+        # index mask real tokens never attend the trailing pads and the pad
+        # cache rows sit beyond `pos`, where decode overwrites them before
+        # they can become valid — but recurrent states and ring (sliding-
+        # window) caches DO absorb trailing garbage, so those block types
+        # keep the exact-length path.
+        self._bucket_ok = all(bt in ("attn", "moe")
+                              for bt in model.cfg.block_pattern)
+        self.prefill_traces = 0  # trace counter (tests assert bucket reuse)
 
-        def prefill_one(params, caches, tokens, slot):
-            """Prefill a single slot's row with a right-aligned prompt."""
+        def prefill_one(params, caches, tokens, length):
+            """Prefill one slot row; `tokens` (1, bucket) right-padded,
+            `length` the true prompt length (traced, so one jit trace
+            serves every prompt in the bucket)."""
+            self.prefill_traces += 1
             logits, new_caches, _ = self.model.forward(
                 params, {"tokens": tokens}, mode="prefill", caches=caches)
-            return logits[:, -1], new_caches
+            return jnp.take(logits, length - 1, axis=1), new_caches
 
         def decode_step(params, caches, tokens, pos):
             logits, new_caches, _ = self.model.forward(
@@ -101,16 +116,19 @@ class ServingEngine:
         return b
 
     def _admit(self):
-        """Fill free slots from the queue (prefill batched per request)."""
+        """Fill free slots from the queue (prefill batched per request).
+
+        Prompts right-pad to the bucket length so the jit cache key (the
+        bucket) matches the traced shape: every prompt length in a bucket
+        reuses one trace. Next-token logits read at `length - 1`."""
         for s in range(self.cfg.batch_slots):
             if self.slots[s] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
             t = len(req.prompt)
-            bucket = self._bucket(t)
+            bucket = self._bucket(t) if self._bucket_ok else t
             toks = np.zeros((bucket,), np.int32)
-            toks[-t:] = req.prompt  # left-pad; positions still 0..t-1
-            # simple approach: prefill with exact length (re-jit per bucket)
+            toks[:t] = req.prompt  # right-pad; causal mask shields pads
             key = bucket
             if key not in self._prefill_cache:
                 self._prefill_cache[key] = jax.jit(self._prefill)
@@ -118,8 +136,8 @@ class ServingEngine:
             row_cache = self.model.init_caches(1, self.cfg.max_len,
                                                dtype=jnp.float32)
             logits, row_cache = self._prefill_cache[key](
-                self.params, row_cache,
-                jnp.asarray(req.prompt[None, :]), s)
+                self.params, row_cache, jnp.asarray(toks[None, :]),
+                jnp.int32(t))
             self.caches = _splice_slot(self.caches, row_cache, s)
             self.pos[s] = t
             nxt = int(jnp.argmax(logits[0]))
@@ -181,6 +199,11 @@ def _splice_slot(full_caches, row_caches, slot: int):
                 idx = [slice(None)] * full.ndim
                 idx[ax] = slice(slot, slot + 1)
                 return full.at[tuple(idx)].set(row.astype(full.dtype))
-        return full
+        # silently keeping `full` here would drop the prefilled row and
+        # serve the request on a stale cache — fail loudly instead
+        raise ValueError(
+            f"_splice_slot: cannot splice row cache of shape {row.shape} "
+            f"into batched cache of shape {full.shape}: no axis has "
+            f"size 1 in the row and the slot count in the batch")
 
     return jax.tree_util.tree_map(splice, full_caches, row_caches)

@@ -1,0 +1,251 @@
+"""Policy-program resolution: legacy-flag compatibility against the seed
+heuristics, rule precedence, mixed W4/W8 trees through `quantize_params` +
+`backends.dispatch`, and the mixed-precision end-to-end serving path."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.configs.base import ArchConfig
+from repro.core.calibration import auto_mixed, record_weights, \
+    site_sensitivity
+from repro.core.ovp import QuantizedTensor
+from repro.core.policy import (PolicyProgram, QuantPolicy, Rule,
+                               get_program, parse_rules)
+from repro.core.qlinear import quantize_params, tree_paths
+from repro.models.model import build_model, unroll_params
+
+TINY = ArchConfig(name="pp-tiny", family="dense", n_layers=4, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                  head_dim=16, block_pattern=("attn",))
+
+W4 = QuantPolicy(method="olive", wbits=4, abits=0, compute_dtype="float32")
+W8 = QuantPolicy(method="olive", wbits=8, abits=0, w_normal_dtype="int8",
+                 compute_dtype="float32")
+
+
+def seed_eligible(path: str, policy: QuantPolicy) -> bool:
+    """The seed repo's string heuristic, verbatim — the compatibility
+    oracle `PolicyProgram.from_policy` must reproduce."""
+    p = path.lower()
+    if "embed" in p or "lm_head" in p:
+        return policy.quantize_embed
+    if "router" in p or "gate_router" in p:
+        return policy.quantize_router
+    if any(k in p for k in ("attn", "attention", "wq", "wk", "wv", "wo")):
+        return policy.quantize_attn
+    if any(k in p for k in ("mlp", "ffn", "expert", "wi", "wu", "wg", "wd")):
+        return policy.quantize_ffn
+    return policy.quantize_ffn  # default bucket
+
+
+def quantized_paths(tree):
+    return {path for path, leaf in tree_paths(tree)
+            if isinstance(leaf, QuantizedTensor)}
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    model = build_model(TINY, QuantPolicy(compute_dtype="float32"),
+                        remat=False)
+    return model.init(jax.random.PRNGKey(0))
+
+
+MOE_TINY = ArchConfig(name="pp-moe", family="moe", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                      head_dim=16, n_experts=4, top_k=2,
+                      block_pattern=("moe",))
+
+
+@pytest.mark.parametrize("flags", [
+    dict(),
+    dict(quantize_attn=False),
+    dict(quantize_ffn=False),
+    dict(quantize_embed=True),
+    dict(quantize_attn=False, quantize_ffn=False, quantize_embed=True),
+    dict(quantize_router=True),
+])
+@pytest.mark.parametrize("arch", [TINY, MOE_TINY])
+def test_flag_compat_matches_seed_heuristics(flags, arch):
+    """Flags compiled to rules make the same quantize_params decisions as
+    the seed string heuristics, on a real param tree."""
+    model = build_model(arch, QuantPolicy(compute_dtype="float32"),
+                        remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = dataclasses.replace(W4, **flags)
+    min_size = 1024
+
+    from repro.core.qlinear import is_linear_weight
+    expect = {path for path, w in tree_paths(params)
+              if hasattr(w, "ndim") and w.ndim >= 2
+              and w.size >= min_size and w.shape[-2] % 2 == 0
+              and seed_eligible(path, policy)
+              and is_linear_weight(path, w)}
+
+    got_flags = quantized_paths(quantize_params(params, policy,
+                                                min_size=min_size))
+    got_prog = quantized_paths(quantize_params(
+        params, PolicyProgram.from_policy(policy), min_size=min_size))
+    assert got_flags == expect
+    assert got_prog == expect
+
+
+def test_rule_precedence_first_match_wins():
+    prog = PolicyProgram(rules=[
+        Rule("layers/0/*", W8),
+        Rule("layers/*", W4),
+        Rule("layers/0/*", W4.off()),   # shadowed by the first rule
+    ], default=W4.off())
+    assert prog.resolve("layers/0/attn/wq").wbits == 8
+    assert prog.resolve("layers/2/attn/wq").wbits == 4
+    assert not prog.resolve("embed/table").enabled
+    # matching is case-insensitive, * crosses separators
+    assert prog.resolve("LAYERS/0/mlp/wg").wbits == 8
+
+
+def test_with_rules_prepends_and_takes_precedence():
+    base = PolicyProgram.from_policy(W4)
+    prog = base.with_rules([("*attn/wq*", W8)])
+    assert prog.resolve("layers/1/attn/wq").wbits == 8
+    assert prog.resolve("layers/1/attn/wk").wbits == 4
+
+
+def test_layer_uniform_layers_rule_forces_unroll(tiny_params):
+    """A rule in the `layers/` grammar must unroll the model even when it
+    resolves identically for every layer (a scan keeps `blocks/<j>`
+    addresses, where the rule would silently never match)."""
+    prog = PolicyProgram.from_policy(W4).with_rules(
+        [("layers/*/attn/wq", W8)])
+    assert not prog.varies_across_layers(TINY.n_layers)
+    assert prog.addresses_layers(TINY.n_layers)
+    model = build_model(TINY, prog, remat=False)
+    assert model.unrolled
+    qp = quantize_params(model.adapt_params(tiny_params), prog,
+                         min_size=1024)
+    dtypes = {path: leaf.normal_dtype for path, leaf in tree_paths(qp)
+              if isinstance(leaf, QuantizedTensor)}
+    assert dtypes["layers/2/attn/wq"] == "int8"   # the rule applied
+    assert dtypes["layers/2/attn/wk"] == "int4"
+    # probe-blind per-layer rules (sites outside _LAYER_PROBES) unroll too
+    prog2 = PolicyProgram.from_policy(W4).with_rules(
+        [("layers/2/mlstm/w_down", W8)])
+    assert prog2.addresses_layers(4)
+
+
+def test_parse_rules_and_presets():
+    rules = parse_rules("layers/0/*=olive_w8a8, *mlp*=fp")
+    assert rules[0].pattern == "layers/0/*"
+    assert rules[0].policy.wbits == 8
+    assert not rules[1].policy.enabled
+    with pytest.raises(ValueError):
+        parse_rules("no-equals-sign")
+    prog = get_program("olive_mixed_w48", n_layers=6)
+    assert prog.resolve("layers/0/attn/wq").wbits == 8
+    assert prog.resolve("layers/5/attn/wq").wbits == 8
+    assert prog.resolve("layers/3/attn/wq").wbits == 4
+    assert not prog.resolve("embed/table").enabled
+
+
+def test_mixed_tree_roundtrip_quantize_and_dispatch(tiny_params):
+    """A layer-varying program quantizes one tree to mixed W4/W8 leaves,
+    and each leaf dispatches on its site's backend."""
+    prog = PolicyProgram.from_policy(W4).with_rules([
+        ("layers/0/*", W8), ("layers/3/*", W8)])
+    assert prog.varies_across_layers(TINY.n_layers)
+    params = unroll_params(TINY, tiny_params)
+    qp = quantize_params(params, prog, min_size=1024)
+
+    dtypes = {path: leaf.normal_dtype for path, leaf in tree_paths(qp)
+              if isinstance(leaf, QuantizedTensor)}
+    assert dtypes["layers/0/attn/wq"] == "int8"
+    assert dtypes["layers/3/mlp/wd"] == "int8"
+    assert dtypes["layers/1/attn/wq"] == "int4"
+    assert dtypes["layers/2/mlp/wg"] == "int4"
+
+    # dispatch each leaf under its own resolved policy, against reference
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 64))
+    for path in ("layers/0/attn/wq", "layers/1/attn/wq"):
+        w = dict(tree_paths(qp))[path]
+        pol = prog.resolve(path)
+        y = backends.dispatch(x, w, pol)
+        y_ref = backends.dispatch(
+            x, w, dataclasses.replace(pol, backend="reference"))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_mixed_program_end_to_end_serving(tiny_params):
+    """Acceptance: a ≤10-line mixed program (first/last W8, middle W4,
+    per-layer kv_bits) runs quantize_params -> ServingEngine on the
+    pallas_interpret backend."""
+    from repro.serve.engine import EngineCfg, ServingEngine
+    w8kv = dataclasses.replace(W8, kv_bits=4)
+    prog = PolicyProgram.from_policy(W4).with_rules([
+        ("layers/0/*", w8kv),
+        (f"layers/{TINY.n_layers - 1}/*", w8kv),
+    ])
+
+    model = build_model(TINY, prog, remat=False)
+    assert model.unrolled
+    qp = quantize_params(model.adapt_params(tiny_params), prog,
+                         min_size=1024)
+    caches = model.init_caches(2, 32, dtype=jnp.float32)
+    # per-layer kv_bits: first/last layers OVP-packed, middle fp
+    assert "k_data" in caches["layers"][0]["kv"]
+    assert "k" in caches["layers"][1]["kv"]
+    assert "k_data" in caches["layers"][3]["kv"]
+
+    eng = ServingEngine(model, qp,
+                        EngineCfg(batch_slots=2, max_len=48,
+                                  backend="pallas_interpret"))
+    assert eng.model.policy.backends() == frozenset(("pallas_interpret",))
+    rng = np.random.default_rng(0)
+    for n in (5, 9):
+        eng.submit(rng.integers(0, TINY.vocab, size=n).astype(np.int32),
+                   max_new_tokens=4)
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    assert all(len(r.out_tokens) == 4 for r in done)
+
+
+def test_legacy_quantpolicy_call_sites_unchanged(tiny_params):
+    """Old flat-policy call sites keep working bit-for-bit: resolve() on
+    a QuantPolicy reproduces the flag decisions."""
+    pol = QuantPolicy(method="olive", wbits=4, abits=0,
+                      compute_dtype="float32", quantize_ffn=False)
+    assert pol.resolve("blocks/0/attn/wq") == pol
+    assert not pol.resolve("blocks/0/mlp/wg").enabled
+    assert not pol.resolve("embed/table").enabled
+    # disabled sites keep execution config (dtype/backend)
+    off = pol.resolve("blocks/0/mlp/wg")
+    assert off.compute_dtype == pol.compute_dtype
+    assert off.backend == pol.backend
+
+
+def test_auto_mixed_respects_budget(tiny_params):
+    tape = record_weights(tiny_params, min_size=1024)
+    sens = site_sensitivity(tape, "int4", n_grid=8)
+    assert sens  # found sites
+    prog = auto_mixed(sens, budget_bits=5.0, low=W4, high=W8)
+    high_sites = [r.pattern for r in prog.rules
+                  if r.policy.wbits == 8]
+    # only sites the low program quantizes are promotable: the head
+    # (fp under default flags) must never be force-quantized even if
+    # it ranks most sensitive
+    base = PolicyProgram.from_policy(W4)
+    eligible = {k: v for k, v in sens.items() if base.resolve(k).enabled}
+    assert "lm_head/w_out" in sens and "lm_head/w_out" not in eligible
+    assert "lm_head/w_out" not in high_sites
+    # 5-bit budget over {4,8} bits -> at most 25% of eligible sites at W8
+    assert 0 < len(high_sites) <= max(1, len(eligible) // 4)
+    # the W8 sites are the lowest-SQNR eligible ones
+    ranked = sorted(eligible, key=lambda k: eligible[k])
+    assert set(high_sites) == set(ranked[:len(high_sites)])
+    # budget at the floor -> no high-precision sites
+    lo = auto_mixed(sens, budget_bits=4.0, low=W4, high=W8)
+    assert all(r.policy.wbits != 8 for r in lo.rules)

@@ -1,0 +1,90 @@
+"""ServingEngine regressions: bucketed prefill reuses one trace per
+bucket (and matches exact-length prefill token-for-token), and
+`_splice_slot` fails loudly on shape mismatches instead of silently
+dropping the prefilled row."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import QuantPolicy
+from repro.models.model import build_model
+from repro.serve.engine import EngineCfg, ServingEngine, _splice_slot
+
+TINY = ArchConfig(name="se-tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                  head_dim=16, block_pattern=("attn",))
+
+
+@pytest.fixture(scope="module")
+def tiny_model_params():
+    model = build_model(TINY, QuantPolicy(compute_dtype="float32"),
+                        remat=False)
+    return model, model.init(jax.random.PRNGKey(1))
+
+
+def _run(model, params, prompts, max_new=4, exact=False):
+    eng = ServingEngine(model, params, EngineCfg(batch_slots=2, max_len=64))
+    if exact:
+        eng._bucket_ok = False  # legacy exact-length prefill path
+    for p in prompts:
+        eng.submit(p, max_new_tokens=max_new)
+    done = eng.run_until_drained()
+    return eng, {r.uid: r.out_tokens for r in done}
+
+
+def test_bucket_prefill_reuses_one_trace(tiny_model_params):
+    """Two prompt lengths in one bucket -> one prefill trace, and the
+    padded-bucket prefill produces the same tokens as exact-length."""
+    model, params = tiny_model_params
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, TINY.vocab, size=n).astype(np.int32)
+               for n in (5, 9, 13)]      # all in the 16-bucket
+
+    eng, outs = _run(model, params, prompts)
+    assert eng.prefill_traces == 1
+    assert sorted(eng._prefill_cache) == [16]
+
+    eng_exact, outs_exact = _run(model, params, prompts, exact=True)
+    assert eng_exact.prefill_traces == 3  # the cost the bucket fix removes
+    assert outs == outs_exact
+
+
+def test_bucket_prefill_across_buckets(tiny_model_params):
+    model, params = tiny_model_params
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, TINY.vocab, size=n).astype(np.int32)
+               for n in (4, 20, 25)]     # buckets 16 and 32
+    eng, outs = _run(model, params, prompts)
+    assert eng.prefill_traces == 2
+    assert sorted(eng._prefill_cache) == [16, 32]
+    assert all(len(v) == 4 for v in outs.values())
+
+
+def test_recurrent_arch_keeps_exact_prefill():
+    """Recurrent states absorb trailing pads, so bucketing must stay off
+    for non-attention block patterns."""
+    cfg = ArchConfig(name="se-rg", family="hybrid", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+                     head_dim=16, block_pattern=("rglru",))
+    model = build_model(cfg, QuantPolicy(compute_dtype="float32"),
+                        remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params,
+                        EngineCfg(batch_slots=1, max_len=64))
+    assert not eng._bucket_ok
+
+
+def test_splice_slot_raises_on_shape_mismatch():
+    full = {"kv": {"k": jnp.zeros((4, 32, 2, 16))}}
+    ok_row = {"kv": {"k": jnp.ones((1, 32, 2, 16))}}
+    out = _splice_slot(full, ok_row, 2)
+    assert float(out["kv"]["k"][2].sum()) == 32 * 2 * 16
+    assert float(out["kv"]["k"][0].sum()) == 0.0
+
+    bad_row = {"kv": {"k": jnp.ones((1, 16, 2, 16))}}  # seq-len mismatch
+    with pytest.raises(ValueError, match="no axis"):
+        _splice_slot(full, bad_row, 2)

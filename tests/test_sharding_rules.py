@@ -15,8 +15,12 @@ from repro.sharding.rules import (cache_pspecs, make_rules, param_spec,
 
 def make_mesh(shape, axes):
     """Spec derivation only needs axis sizes — AbstractMesh works on one
-    CPU device."""
-    return AbstractMesh(shape, axes)
+    CPU device. jax 0.4.x takes ((name, size), ...); newer versions take
+    (sizes, names)."""
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return AbstractMesh(shape, axes)
 
 
 @pytest.fixture(scope="module")
