@@ -1,5 +1,6 @@
-"""Kernel microbenchmarks: the fused OVP matmul vs oracles, and the fused
-single-dispatch path vs the unfused encode -> matmul -> scale pipeline.
+"""Kernel microbenchmarks: the fused OVP matmul vs oracles, the fused
+single-dispatch path vs the unfused encode -> matmul -> scale pipeline,
+and the grouped per-expert (MoE) path vs the XLA broadcast fallback.
 
 On this CPU container the Pallas kernels run in interpret mode (Python
 emulation — correctness, not speed), so the numbers that matter are:
@@ -10,18 +11,31 @@ emulation — correctness, not speed), so the numbers that matter are:
      that governs TPU performance (see speedup.py / §Perf), and
   4. the dispatch-count delta of the fused backend: one pallas_call vs
      the unfused XLA-encode -> kernel-decode -> XLA-scale round trip
-     (which also writes + rereads the packed activation tensor in HBM).
+     (which also writes + rereads the packed activation tensor in HBM),
+  5. the grouped MoE path: stacked (E, K, N) expert weights must serve on
+     the grouped kernel with ZERO fallbacks to the XLA broadcast — any
+     decline is reported with its machine-readable reason from
+     `backends.dispatch_stats()` and fails the benchmark.
+
+``BENCH_SMOKE=1`` (or ``--smoke``) shrinks every shape so CI can run the
+whole file in interpret mode in seconds; results land in
+``EXPERIMENTS/bench_cache/kernels_bench.json`` either way (the CI smoke
+job uploads that file as an artifact).
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import backends
 from repro.core.ovp import ovp_dequantize, ovp_quantize
+from repro.core.policy import QuantPolicy
+from repro.core.qlinear import quantize_weight
 from repro.core.quantizer import sigma_init_scale
 from repro.kernels import ops, ref
 from repro.kernels import ovp_matmul as raw_kernels
@@ -31,10 +45,17 @@ from . import common
 count_pallas_calls = backends.count_pallas_calls
 
 
+def _smoke_requested() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0") \
+        or "--smoke" in sys.argv[1:]
+
+
 def main() -> int:
     t0 = time.perf_counter()
+    smoke = _smoke_requested()
+    m, k, n = (64, 128, 64) if smoke else (256, 512, 256)
+    n_experts, cap = (2, 16) if smoke else (8, 64)
     key = jax.random.PRNGKey(0)
-    m, k, n = 256, 512, 256
     ka, kw = jax.random.split(key)
     a = common.transformer_like(ka, (m, k), max_sigma=40.0)
     w = common.transformer_like(kw, (k, n), max_sigma=40.0)
@@ -103,6 +124,45 @@ def main() -> int:
     ok = ok and err_fuse < 1e-5 and n_fused == pallas.dispatches_per_matmul \
         and n_fused < n_unfused
 
+    # 5) grouped per-expert (MoE) path: stacked weights on the expert grid
+    #    dim vs the XLA broadcast fallback they used to take. The dispatch
+    #    ledger must show the stack SERVED on the kernel backend — any
+    #    "->fallback:<reason>[stacked]" entry fails the benchmark.
+    ke, kxg = jax.random.split(jax.random.PRNGKey(1))
+    xg = common.transformer_like(kxg, (n_experts, cap, k), max_sigma=20.0)
+    ws = common.transformer_like(ke, (n_experts, k, n), max_sigma=20.0)
+    moe_pol = QuantPolicy(method="olive", wbits=4, abits=0,
+                          w_granularity="tensor", compute_dtype="float32",
+                          backend="pallas_interpret")
+    wq_moe = quantize_weight(ws, moe_pol)
+
+    backends.reset_dispatch_stats()
+
+    def moe_grouped(xg):
+        return backends.dispatch(xg, wq_moe, moe_pol)
+
+    n_moe = count_pallas_calls(moe_grouped, xg)
+    stats = backends.dispatch_stats()
+    moe_fallbacks = sum(v for tag, v in stats.items()
+                        if "->fallback:" in tag and "[stacked]" in tag)
+    out_moe = moe_grouped(xg)
+    want_moe = backends.dispatch(
+        xg, wq_moe, dataclasses.replace(moe_pol, backend="xla"))
+    err_moe = float(jnp.max(jnp.abs(out_moe - want_moe))
+                    / (jnp.max(jnp.abs(want_moe)) + 1e-9))
+    us_moe = common.timer(jax.jit(moe_grouped), xg)
+    us_moe_xla = common.timer(jax.jit(
+        lambda xg: backends.dispatch(
+            xg, wq_moe, dataclasses.replace(moe_pol, backend="xla"))), xg)
+    # declined layouts carry machine-readable reasons, not prose: a rank-4
+    # weight stack is the one layout the grouped kernel still declines
+    decline_r4 = pallas.decline_reason(
+        xg[None], dataclasses.replace(wq_moe, data=wq_moe.data[None]),
+        moe_pol)
+    decline_lhs = pallas.decline_reason(xg[0, 0], wq_moe, moe_pol)
+    ok = ok and err_moe < 1e-5 and moe_fallbacks == 0 \
+        and n_moe == pallas.dispatches_per_matmul
+
     print("# kernel correctness: max rel err "
           f"w4a16={err16:.2e} w4a4={err4:.2e}")
     print(f"# xla decode-matmul {us_q:.0f}us vs plain fp32 {us_p:.0f}us "
@@ -115,13 +175,33 @@ def main() -> int:
           f"dispatches end-to-end unfused); rel err {err_fuse:.1e}; "
           f"interpret-mode wall {us_fused:.0f}us vs {us_unfused:.0f}us; "
           f"packed-act HBM round trip eliminated: {a.size // 2} B/matmul")
+    print(f"# grouped MoE ({n_experts}x{cap}x{k}x{n}): {n_moe} pallas_call "
+          f"for the whole expert stack, {moe_fallbacks} stacked fallbacks; "
+          f"rel err vs XLA broadcast {err_moe:.1e}; interpret wall "
+          f"{us_moe:.0f}us vs xla {us_moe_xla:.0f}us")
+    print(f"# dispatch ledger: {stats} (declines carry reason codes — e.g. "
+          f"rank-4 stack -> {decline_r4!r}, rank-1 lhs -> {decline_lhs!r})")
 
     us = (time.perf_counter() - t0) * 1e6
+    common.save_json("kernels_bench", {
+        "smoke": smoke,
+        "shapes": {"m": m, "k": k, "n": n, "experts": n_experts,
+                   "cap": cap},
+        "err_w4a16": err16, "err_w4a4": err4, "err_fused": err_fuse,
+        "fused_calls": n_fused, "unfused_calls": n_unfused,
+        "traffic_vs_bf16": bytes_bf16 / bytes_packed,
+        "moe": {"pallas_calls": n_moe, "stacked_fallbacks": moe_fallbacks,
+                "err_vs_xla": err_moe, "dispatch_stats": stats,
+                "decline_rank4": decline_r4, "decline_lhs": decline_lhs,
+                "wall_us": us_moe, "wall_us_xla": us_moe_xla},
+        "ok": bool(ok),
+    })
     common.emit("kernels_bench", us,
                 f"err16={err16:.1e} err4={err4:.1e} "
                 f"xla_decode_us={us_q:.0f} plain_us={us_p:.0f} "
                 f"traffic_vs_bf16={bytes_bf16/bytes_packed:.2f}x "
                 f"fused_calls={n_fused} unfused_calls={n_unfused} "
+                f"moe_calls={n_moe} moe_fallbacks={moe_fallbacks} "
                 f"fused_us={us_fused:.0f} unfused_us={us_unfused:.0f} "
                 f"ok={ok}")
     return 0 if ok else 1

@@ -75,6 +75,28 @@ def act_encode_roundtrip_bytes(cfg, batch, a_bpe) -> float:
     return 2 * act_elements(cfg, batch) * a_bpe
 
 
+def expert_weight_elements(cfg) -> float:
+    """Active (top-k) expert weight elements per decode step."""
+    if not cfg.n_experts:
+        return 0.0
+    return cfg.moe_block_count() * cfg.top_k * 3 * cfg.d_model * cfg.d_ff
+
+
+def grouped_moe_supported() -> bool:
+    """Probe the kernel backend with a representative stacked-expert
+    operand layout; the decline reason (None = served) is the
+    machine-readable contract, not prose."""
+    import jax.numpy as jnp
+    from repro.core.ovp import QuantizedTensor
+    pallas = backends.get_backend("pallas")
+    w = QuantizedTensor(data=jnp.zeros((4, 8, 16), jnp.uint8),
+                        scale=jnp.ones((4, 1, 16), jnp.float32),
+                        normal_dtype="int4", pair_axis=-2, orig_dim=16)
+    x = jnp.zeros((4, 2, 16), jnp.float32)
+    from repro.core.policy import OLIVE_W4
+    return pallas.decline_reason(x, w, OLIVE_W4) is None
+
+
 def measured_bf16_bytes(arch: str):
     p = os.path.join("EXPERIMENTS", "dryrun",
                      f"{arch}__decode_32k__single__none.json")
@@ -142,6 +164,32 @@ def main() -> int:
                   f"{unfused_backend.dispatches_per_matmul}) saves "
                   f"{np.mean(list(extra.values()))/1e6:.2f} MB/step "
                   f"({100*frac:.2f}% of olive4 traffic) in {regime}")
+    # grouped per-expert kernel credit: before the grouped path, stacked
+    # expert weights fell back to the XLA broadcast, whose separate
+    # dequant dispatch writes + rereads the dequantized (top-k) expert
+    # stack in the compute dtype — 2 x 2 B/el on top of the packed read.
+    # With the grouped kernel serving stacked weights (probed via the
+    # machine-readable decline-reason contract), that round trip is gone.
+    moe_served = grouped_moe_supported()
+    moe_credit = {}
+    for name in MODELS:
+        cfg = ARCHS[name]
+        ew = expert_weight_elements(cfg)
+        if not ew:
+            continue
+        roundtrip = 2 * ew * 2.0  # bf16 dequant write + reread per step
+        base = rows["paper_serving"][name]["bytes"]["olive4"]
+        moe_credit[name] = {"expert_elements": ew,
+                            "fallback_roundtrip_bytes": roundtrip,
+                            "frac_of_olive4": roundtrip / base,
+                            "served_by_grouped_kernel": moe_served}
+        verdict = "eliminated by the grouped kernel" if moe_served \
+            else "STILL PAID (stacked weights fall back)"
+        print(f"# grouped MoE path [{name}]: top-k expert weights "
+              f"{ew/1e9:.2f} Gel/step; XLA-fallback dequant round trip "
+              f"{roundtrip/1e9:.2f} GB/step "
+              f"({100*roundtrip/base:.1f}% of olive4 traffic) — {verdict}")
+
     for name in MODELS:
         meas = measured_bf16_bytes(name)
         if meas:
@@ -149,14 +197,17 @@ def main() -> int:
                   f"bytes global={meas/1e9:.0f} GB")
 
     # ordering claim: olive > ant > int8 > gobo in the paper's regime,
-    # with the gobo gap being the big one (4x-class)
+    # with the gobo gap being the big one (4x-class); plus the grouped
+    # kernel must serve stacked expert weights (no silent MoE fallback)
     ok = (sp_gobo > 3.0 and sp_int8 > 1.7 and sp_ant > 1.6
-          and kv_32k > 2.5)
+          and kv_32k > 2.5 and moe_served)
     us = (time.perf_counter() - t0) * 1e6
     common.emit("speedup", us,
                 f"olive_vs_gobo={sp_gobo:.2f}x vs_int8={sp_int8:.2f}x "
-                f"vs_ant={sp_ant:.2f}x kv_bonus_32k={kv_32k:.2f}x ok={ok}")
-    common.save_json("speedup", {"rows": rows, "ok": bool(ok)})
+                f"vs_ant={sp_ant:.2f}x kv_bonus_32k={kv_32k:.2f}x "
+                f"moe_grouped={moe_served} ok={ok}")
+    common.save_json("speedup", {"rows": rows, "moe_grouped": moe_credit,
+                                 "ok": bool(ok)})
     return 0 if ok else 1
 
 

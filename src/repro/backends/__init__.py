@@ -21,11 +21,15 @@ docs/backends.md.
 """
 from __future__ import annotations
 
+import collections
+import os
 from typing import Dict, Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro.core.ovp import QuantizedTensor
+from repro.core.ovp import MixedExpertQuant, QuantizedTensor
 from repro.core.policy import QuantPolicy
 
 from .base import (QuantizedMatmulBackend, act_normal_dtype,
@@ -59,6 +63,40 @@ for _b in (XlaBackend(), PallasBackend(), PallasInterpretBackend(),
            ReferenceBackend()):
     register(_b)
 del _b
+
+# REPRO_FORCE_INTERPRET=1 re-registers "pallas" as the interpret twin, so
+# CI (no TPU) exercises the real kernel code paths — including grouped MoE
+# dispatch — under any config that names the compiled backend.
+if os.environ.get("REPRO_FORCE_INTERPRET", "0") not in ("", "0"):
+    class _ForcedInterpret(PallasInterpretBackend):
+        name = "pallas"
+    register(_ForcedInterpret())
+
+
+# --------------------------------------------------------------------------
+# Dispatch statistics: fused-vs-fallback counts with machine-readable
+# decline reasons. Counts accumulate at trace time (one per traced matmul
+# call site), which is exactly the granularity kernels_bench reports.
+# --------------------------------------------------------------------------
+_DISPATCH_STATS: collections.Counter = collections.Counter()
+
+
+def reset_dispatch_stats() -> None:
+    _DISPATCH_STATS.clear()
+
+
+def dispatch_stats() -> Dict[str, int]:
+    """Counter keyed "backend" (served) / "backend->fallback:reason"
+    (declined), with a `stacked` marker for 3-D weight stacks."""
+    return dict(_DISPATCH_STATS)
+
+
+def _record(backend_name: str, reason: Optional[str], stacked: bool) -> None:
+    tag = backend_name if reason is None \
+        else f"{backend_name}->fallback:{reason}"
+    if stacked:
+        tag += "[stacked]"
+    _DISPATCH_STATS[tag] += 1
 
 
 def count_pallas_calls(fn, *args) -> int:
@@ -94,23 +132,81 @@ def count_pallas_calls(fn, *args) -> int:
     return walk(closed.jaxpr)
 
 
-def dispatch(x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
+def dispatch(x: jax.Array, w, policy: QuantPolicy,
              act_scale: Optional[jax.Array] = None,
              precision=None) -> jax.Array:
     """Execute x (..., K) @ dequant(w) (K, N) on the policy's backend.
 
-    Falls back (one hop) when the requested backend does not support the
-    operand layout — e.g. stacked per-expert weights on the Pallas kernel
-    run on XLA instead of asserting mid-trace.
+    Stacked per-expert weights (3-D `w.data`) take the grouped kernel on
+    backends that support them; a `MixedExpertQuant` (per-expert mixed
+    precision) dispatches each homogeneous group and stitches the outputs
+    back into expert order. Falls back (one hop) when the requested backend
+    declines the operand layout, recording the machine-readable reason in
+    `dispatch_stats()` instead of asserting mid-trace.
     """
+    if isinstance(w, MixedExpertQuant):
+        return _dispatch_mixed_experts(x, w, policy, act_scale, precision)
     backend = get_backend(policy.backend)
-    if not backend.supports(x, w, policy):
+    reason = backend.decline_reason(x, w, policy)
+    stacked = w.data.ndim > 2
+    _record(backend.name, reason, stacked)
+    if reason is not None:
         backend = get_backend(backend.fallback)
     return backend.matmul(x, w, policy, act_scale=act_scale,
                           precision=precision)
 
 
+def _dispatch_mixed_experts(x: jax.Array, w: MixedExpertQuant,
+                            policy: QuantPolicy,
+                            act_scale: Optional[jax.Array],
+                            precision) -> jax.Array:
+    """Per-expert mixed precision: run each homogeneous group through the
+    registry (so W4 groups and W8 groups each hit the grouped kernel) and
+    scatter the group outputs back into the stacked expert order.
+
+    Contract: only the WEIGHT side is per-expert — each group's precision
+    comes from its QuantizedTensor (packed at quantization time under the
+    expert's resolved rule). The A side, backend, and compute dtype come
+    from the call-site `policy`, exactly as for any other dispatch; rule
+    fields beyond weight precision (abits, backend, ...) do not vary
+    within one stacked matmul. fp groups (rules that disable an expert)
+    run a plain matmul with unquantized activations.
+
+    `x` is the grouped lhs (…, E, C, K); expert membership is static
+    (decided at quantization time), so the gathers/permutation lower to
+    static slices under jit.
+    """
+    cdt = jnp.dtype(policy.compute_dtype)
+    outs = []
+    for qt, ids in zip(w.groups, w.expert_ids):
+        idx = np.asarray(ids, dtype=np.int32)
+        xg = jnp.take(x, idx, axis=-3)
+        # per-slot scales carry the expert dim — gather it to match this
+        # group's expert subset ((…, E, C) and (…, E, C, 1) layouts both
+        # accepted; scalars / per-tensor scales pass through)
+        scale = act_scale
+        if scale is not None and getattr(scale, "ndim", 0):
+            scale = jnp.asarray(scale)
+            if scale.ndim >= 3 and scale.shape[-3] == w.n_experts \
+                    and scale.shape[-1] == 1:
+                scale = jnp.take(scale, idx, axis=-3)
+            elif scale.ndim >= 2 and scale.shape[-2:] == x.shape[-3:-1]:
+                scale = jnp.take(scale, idx, axis=-2)
+        if isinstance(qt, QuantizedTensor):
+            outs.append(dispatch(xg, qt, policy, act_scale=scale,
+                                 precision=precision))
+        else:  # fp group — the site policy resolved to "no quantization"
+            outs.append(jnp.matmul(xg.astype(cdt), qt.astype(cdt),
+                                   precision=precision))
+    cat = jnp.concatenate([o.astype(cdt) for o in outs], axis=-3)
+    flat_ids = np.concatenate([np.asarray(ids, dtype=np.int32)
+                               for ids in w.expert_ids])
+    order = np.argsort(flat_ids)
+    return jnp.take(cat, order, axis=-3)
+
+
 __all__ = ["QuantizedMatmulBackend", "register", "get_backend", "available",
-           "dispatch", "count_pallas_calls", "quantize_activation",
+           "dispatch", "dispatch_stats", "reset_dispatch_stats",
+           "count_pallas_calls", "quantize_activation",
            "resolve_act_scale", "act_normal_dtype", "XlaBackend",
            "PallasBackend", "PallasInterpretBackend", "ReferenceBackend"]

@@ -54,10 +54,12 @@ class QuantizedMatmulBackend:
     """One way to execute x @ dequant(w) under a policy.
 
     Subclasses set `name` (the registry key / `policy.backend` value) and
-    implement `matmul`. `supports` gates dispatch: when it returns False
-    the registry falls back to the `fallback` backend (default "xla"), so
-    partial backends (e.g. a kernel without stacked-weight support) degrade
-    gracefully instead of asserting mid-trace.
+    implement `matmul`. `decline_reason` gates dispatch: when it returns a
+    reason code (instead of None) the registry falls back to the `fallback`
+    backend (default "xla"), so partial backends degrade gracefully instead
+    of asserting mid-trace — and the reason is machine-readable, so
+    benchmarks and dispatch stats can report *why* a layout fell back
+    rather than burying it in prose.
     """
 
     name: str = "?"
@@ -70,8 +72,15 @@ class QuantizedMatmulBackend:
     # on: the unfused pipeline is encode + matmul + scale-multiply.
     dispatches_per_matmul: int = 3
 
+    def decline_reason(self, x, w: QuantizedTensor,
+                       policy: QuantPolicy) -> Optional[str]:
+        """None when this backend can execute the operands; otherwise a
+        short stable reason code (e.g. "stacked_rank", "lhs_rank") that
+        dispatch records and `kernels_bench` surfaces."""
+        return None
+
     def supports(self, x, w: QuantizedTensor, policy: QuantPolicy) -> bool:
-        return True
+        return self.decline_reason(x, w, policy) is None
 
     def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
                act_scale: Optional[jax.Array] = None,

@@ -7,12 +7,14 @@ scales apply in the accumulator epilogue. 2-D and 3-D lhs share the kernel
 via its batch grid dim, so serving decode-step GEMMs hit the fused path
 without reshape glue.
 
+Stacked per-expert weights `(E, K, N)` run the grouped kernel: an expert
+grid dim indexes the weight stack, the lhs carries a matching `(…, E, C,
+K)` layout (the MoE dispatch tensor), and per-expert scales apply in the
+epilogue. Layouts the kernels genuinely cannot execute are declined with a
+machine-readable reason (`decline_reason`) and dispatch falls back to XLA.
+
 `pallas_interpret` is the same backend with `interpret=True` — the CPU
 emulation used by tests and this container; numerics are identical.
-
-Stacked (scan/per-expert) weights carry a leading dim the kernel's weight
-operand doesn't model — `supports` returns False there and dispatch falls
-back to the XLA backend.
 """
 from __future__ import annotations
 
@@ -34,10 +36,21 @@ class PallasBackend(QuantizedMatmulBackend):
     fuses_act_encode = True
     dispatches_per_matmul = 1
 
-    def supports(self, x, w: QuantizedTensor, policy: QuantPolicy) -> bool:
-        # 2-D weights only (stacked weights fall back to XLA); pairing must
-        # run along K, which quantize_weight guarantees (pair_axis = -2).
-        return w.data.ndim == 2 and w.pair_axis % 2 == 0 and x.ndim >= 2
+    def decline_reason(self, x, w: QuantizedTensor,
+                       policy: QuantPolicy) -> Optional[str]:
+        if w.pair_axis % 2 != 0:
+            # pairing must run along K (quantize_weight guarantees -2)
+            return "pair_axis_not_reduction"
+        if w.data.ndim == 2:
+            return None if x.ndim >= 2 else "lhs_rank_lt_2"
+        if w.data.ndim == 3:
+            # grouped path: lhs must carry the matching expert dim at -3
+            if x.ndim < 3:
+                return "grouped_lhs_rank_lt_3"
+            if x.shape[-3] != w.data.shape[0]:
+                return "grouped_lhs_expert_mismatch"
+            return None
+        return "stacked_rank_gt_3"
 
     def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
                act_scale: Optional[jax.Array] = None,
@@ -47,6 +60,10 @@ class PallasBackend(QuantizedMatmulBackend):
         scale = None
         if policy.abits:
             scale, a_dtype = resolve_act_scale(x, policy, act_scale)
+        if w.data.ndim == 3:
+            return ops.grouped_ovp_matmul(x, w, a_dtype=a_dtype,
+                                          act_scale=scale, out_dtype=cdt,
+                                          interpret=self.interpret)
         return ops.fused_ovp_matmul(x, w, a_dtype=a_dtype, act_scale=scale,
                                     out_dtype=cdt, interpret=self.interpret)
 

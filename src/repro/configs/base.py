@@ -78,6 +78,12 @@ class ArchConfig:
     def has_decoder(self) -> bool:
         return True  # all assigned archs decode (enc-dec has a decoder)
 
+    def moe_block_count(self) -> int:
+        """Number of MoE blocks in the layer stack."""
+        return sum(1 for i in range(self.n_layers)
+                   if self.block_pattern[i % len(self.block_pattern)]
+                   == "moe")
+
     def param_count(self) -> int:
         """Approximate parameter count (embeddings + blocks)."""
         d, hd = self.d_model, self.head_dim
@@ -114,10 +120,7 @@ class ArchConfig:
             return self.param_count()
         d = self.d_model
         full = self.param_count()
-        moe_blocks = sum(1 for i in range(self.n_layers)
-                         if self.block_pattern[i % len(self.block_pattern)]
-                         == "moe")
-        inactive = moe_blocks * (self.n_experts - self.top_k) \
+        inactive = self.moe_block_count() * (self.n_experts - self.top_k) \
             * 3 * d * self.d_ff
         return full - inactive
 

@@ -156,6 +156,50 @@ class QuantizedTensor:
         return int(np.prod(self.data.shape)) + int(np.prod(self.scale.shape)) * 4
 
 
+# --------------------------------------------------------------------------
+# MixedExpertQuant: one stacked (E, K, N) weight whose experts resolved to
+# DIFFERENT per-site policies (OWQ-style per-expert mixed precision)
+# --------------------------------------------------------------------------
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["groups"],
+         meta_fields=["expert_ids", "n_experts"])
+@dataclasses.dataclass
+class MixedExpertQuant:
+    """Per-expert heterogeneously quantized stack of expert weights.
+
+    `quantize_params` emits this when a policy program addresses individual
+    experts of one stacked `(E, K, N)` weight (sites ``…/experts/wg/<e>``)
+    and the experts resolve to different precisions. Experts are grouped by
+    resolved policy: each group is a homogeneous stacked `QuantizedTensor`
+    (or a raw array for fp groups), so every group still runs the grouped
+    kernel — dispatch stitches the groups back into expert order.
+
+    groups:     one entry per distinct resolved policy — a stacked
+                QuantizedTensor (Ei, K/2|K, N) or a raw (Ei, K, N) array
+    expert_ids: tuple of tuples — expert_ids[g][i] is the original expert
+                index of groups[g]'s i-th slice
+    n_experts:  E, the stacked leading dim the groups partition
+    """
+    groups: tuple
+    expert_ids: tuple
+    n_experts: int
+
+    @property
+    def shape(self):
+        g0 = self.groups[0]
+        inner = g0.shape[1:]
+        return (self.n_experts,) + tuple(inner)
+
+    def nbytes(self) -> int:
+        tot = 0
+        for g in self.groups:
+            if isinstance(g, QuantizedTensor):
+                tot += g.nbytes()
+            else:
+                tot += int(np.prod(g.shape)) * g.dtype.itemsize
+        return tot
+
+
 def ovp_quantize(x: jax.Array, scale: jax.Array, normal_dtype: str = "int4",
                  spec: Optional[AbfloatSpec] = None,
                  pair_axis: int = -1) -> QuantizedTensor:

@@ -15,6 +15,7 @@ scales never split a pair.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Union
 
 import jax
@@ -23,7 +24,7 @@ import jax.numpy as jnp
 from repro import backends
 
 from . import baselines
-from .ovp import QuantizedTensor
+from .ovp import MixedExpertQuant, QuantizedTensor
 from .policy import PolicyLike, QuantPolicy, resolve
 from .quantizer import (QuantSpec, fake_quant_ste, quantize,
                         sigma_init_scale)
@@ -45,7 +46,14 @@ def quantize_weight(w: jax.Array, policy: QuantPolicy) -> Weight:
     nd = policy.normal_dtype_for_bits(policy.wbits)
     if policy.method == "olive":
         if w.ndim > 2:
-            return jax.vmap(lambda ww: quantize_weight(ww, policy))(w)
+            qt = jax.vmap(lambda ww: quantize_weight(ww, policy))(w)
+            if qt.scale.ndim == 1:
+                # per-stack-entry tensor-granularity scales come back (E,);
+                # give them the trailing singletons dequant broadcasting
+                # and the grouped kernel's (E, 1, N) layout both need
+                qt = dataclasses.replace(
+                    qt, scale=qt.scale[:, None, None])
+            return qt
         spec = QuantSpec(normal_dtype=nd,
                          granularity=policy.w_granularity,
                          channel_axis=-1, pair_axis=-2)
@@ -82,7 +90,7 @@ def qmatmul(x: jax.Array, w: Weight, policy: QuantPolicy,
             precision=None) -> jax.Array:
     """x: (..., K) @ w: (K, N) with the policy's quantization applied."""
     cdt = jnp.dtype(policy.compute_dtype)
-    if isinstance(w, QuantizedTensor):
+    if isinstance(w, (QuantizedTensor, MixedExpertQuant)):
         return backends.dispatch(x, w, policy, act_scale=act_scale,
                                  precision=precision)
     # raw weights
@@ -146,9 +154,9 @@ def eligible(path: str, policy: PolicyLike) -> bool:
 
 
 def _qt_leaf(x) -> bool:
-    # QuantizedTensor is a registered pytree; treat it as one leaf so site
-    # addresses stay the weight path, not .../data and .../scale
-    return isinstance(x, QuantizedTensor)
+    # QuantizedTensor / MixedExpertQuant are registered pytrees; treat them
+    # as one leaf so site addresses stay the weight path, not .../data etc.
+    return isinstance(x, (QuantizedTensor, MixedExpertQuant))
 
 
 def tree_paths(params):
@@ -161,13 +169,44 @@ def tree_paths(params):
             for kp, w in flat]
 
 
+def _expert_site_policies(path: str, n_experts: int, policy: PolicyLike):
+    """Resolved policies for the per-expert sub-sites ``<path>/<e>`` of one
+    stacked (E, K, N) weight, or None when the program does not distinguish
+    experts (every sub-site resolves identically — the common case, which
+    keeps the stack a single homogeneous QuantizedTensor)."""
+    pols = [resolve(policy, f"{path}/{e}") for e in range(n_experts)]
+    return pols if len(set(pols)) > 1 else None
+
+
+def _quantize_mixed_experts(w, pols) -> MixedExpertQuant:
+    """Group experts by resolved policy; quantize each group as one stacked
+    homogeneous QuantizedTensor (fp groups stay raw arrays)."""
+    by_pol = {}
+    for e, pol in enumerate(pols):
+        by_pol.setdefault(pol, []).append(e)
+    groups, ids = [], []
+    for pol, idx in by_pol.items():
+        sub = jnp.take(jnp.asarray(w), jnp.asarray(idx), axis=0)
+        if pol.enabled:
+            groups.append(quantize_weight(sub.astype(jnp.float32), pol))
+        else:
+            groups.append(sub)
+        ids.append(tuple(idx))
+    return MixedExpertQuant(groups=tuple(groups), expert_ids=tuple(ids),
+                            n_experts=len(pols))
+
+
 def quantize_params(params, policy: PolicyLike, min_size: int = 4096):
     """Map PTQ over a parameter pytree. Norms/bias/small tensors stay fp.
 
     `policy` is a `QuantPolicy` (uniform, legacy flags) or a
     `PolicyProgram`: each leaf quantizes under the policy its own site
     address resolves to, so one tree can mix W4 and W8 leaves (and leave
-    sites fp) according to the program.
+    sites fp) according to the program. Stacked per-expert weights
+    additionally resolve the per-expert sub-sites ``<site>/<e>``: when a
+    program distinguishes experts (e.g. a rule ``*/experts/wg/3``), the
+    stack quantizes group-wise into a `MixedExpertQuant` so one MoE layer
+    can mix W4 and W8 experts.
 
     Pair axis = -2 (reduction dim), per-output-channel scales. Dims must be
     even along the pair axis — true for every assigned architecture.
@@ -178,10 +217,16 @@ def quantize_params(params, policy: PolicyLike, min_size: int = 4096):
     treedef = jax.tree_util.tree_structure(params, is_leaf=_qt_leaf)
     out = []
     for path, w in tree_paths(params):
+        structural_ok = (hasattr(w, "ndim") and w.ndim >= 2
+                         and w.size >= min_size and w.shape[-2] % 2 == 0
+                         and is_linear_weight(path, w))
+        if structural_ok and w.ndim == 3:
+            pols = _expert_site_policies(path, w.shape[0], policy)
+            if pols is not None:
+                out.append(_quantize_mixed_experts(w, pols))
+                continue
         site_policy = resolve(policy, path)
-        if (site_policy.enabled and hasattr(w, "ndim") and w.ndim >= 2
-                and w.size >= min_size and w.shape[-2] % 2 == 0
-                and is_linear_weight(path, w)):
+        if structural_ok and site_policy.enabled:
             out.append(quantize_weight(jnp.asarray(w, jnp.float32),
                                        site_policy))
         else:

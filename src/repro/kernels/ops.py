@@ -75,6 +75,17 @@ def _as_3d(x: jax.Array):
     return x.reshape(b, x.shape[-2], x.shape[-1]), lead
 
 
+def _as_4d(x: jax.Array):
+    """(…, E, C, K) -> ((B, E, C, K), lead): leading dims fold into B."""
+    if x.ndim < 3:
+        raise ValueError(f"grouped lhs must be at least 3-D, got {x.shape}")
+    lead = x.shape[:-3]
+    b = 1
+    for d in lead:
+        b *= d
+    return x.reshape(b, *x.shape[-3:]), lead
+
+
 def _row_scale(s, x: jax.Array) -> jax.Array:
     """Broadcast a scalar / per-row scale to the kernel's (B, M, 1)."""
     s = jnp.asarray(s, jnp.float32)
@@ -131,6 +142,107 @@ def fused_ovp_matmul(x: Union[jax.Array, QuantizedTensor],
                         interpret=interpret, bm=bm, bn=bn, bk=bk)
     return out.reshape(*lead, out.shape[-2], out.shape[-1]) if lead \
         else out[0]
+
+
+# --------------------------------------------------------------------------
+# Grouped (per-expert) matmul over stacked weights
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("w_dtype", "a_mode", "a_dtype",
+                                             "out_dtype", "interpret",
+                                             "bm", "bn", "bk"))
+def _grouped_padded(a4: jax.Array, sa4: jax.Array, w_data: jax.Array,
+                    sw: jax.Array, *, w_dtype: str, a_mode: str,
+                    a_dtype: str, out_dtype=jnp.float32,
+                    interpret: bool = False, bm: int = 128, bn: int = 128,
+                    bk: int = 256) -> jax.Array:
+    """Pad grouped operands to block multiples, run the kernel, slice back.
+
+    a4 (B, E, M, Ka); sa4 (B, E, M, 1); w_data (E, Kw, N); sw (E, 1, N).
+    The expert dim never pads (block size 1 on the expert grid dim).
+    """
+    b, e, m, ka = a4.shape
+    _, kw, n = w_data.shape
+    k2 = kw if w_dtype != "int8" else kw // 2
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk2 = min(bk // 2, k2)
+    a_mult = bk2 if a_mode == "codes4" else 2 * bk2
+    w_mult = bk2 if w_dtype != "int8" else 2 * bk2
+    ap = _pad_to(a4, (1, 1, bm, a_mult))
+    sap = _pad_to(sa4, (1, 1, bm, 1), value=1.0)
+    wp = _pad_to(w_data, (1, w_mult, bn))
+    swp = _pad_to(sw, (1, 1, bn), value=1.0)
+    out = _mm.grouped_ovp_matmul_kernel(ap, sap, wp, swp, w_dtype=w_dtype,
+                                        a_mode=a_mode, a_dtype=a_dtype,
+                                        bm=bm, bn=bn, bk=2 * bk2,
+                                        interpret=interpret)
+    return out[:, :, :m, :n].astype(out_dtype)
+
+
+def _expert_row_scale(s, x: jax.Array) -> jax.Array:
+    """Broadcast a scalar / per-slot act scale to the kernel's (B,E,M,1)."""
+    s = jnp.asarray(s, jnp.float32)
+    target = x.shape[:-1] + (1,)
+    if s.ndim and s.shape == x.shape[:-1]:
+        s = s[..., None]
+    s4, _ = _as_4d(jnp.broadcast_to(s, target))
+    return s4
+
+
+def _expert_col_scale(s, e: int, n: int) -> jax.Array:
+    """Broadcast per-expert weight scales to the kernel's (E, 1, N) layout.
+
+    Accepts a scalar (shared), (E,) per-expert-tensor scales (vmapped
+    tensor granularity), or (E, 1, N) per-expert-channel scales (vmapped
+    channel granularity)."""
+    s = jnp.asarray(s, jnp.float32)
+    if s.ndim == 0:
+        return jnp.broadcast_to(s, (e, 1, n))
+    if s.ndim == 1:
+        return jnp.broadcast_to(s[:, None, None], (e, 1, n))
+    return jnp.broadcast_to(s.reshape(e, 1, -1), (e, 1, n))
+
+
+def grouped_ovp_matmul(x: Union[jax.Array, QuantizedTensor],
+                       w: QuantizedTensor, *,
+                       a_dtype: Optional[str] = None,
+                       act_scale: Optional[jax.Array] = None,
+                       out_dtype=jnp.float32, interpret: bool = False,
+                       bm: int = 128, bn: int = 128,
+                       bk: int = 256) -> jax.Array:
+    """Single-dispatch grouped matmul: (…, E, C, K) @ (E, K, N) -> (…, E, C, N).
+
+    The per-expert mirror of `fused_ovp_matmul`: stacked packed weights ride
+    an expert grid dim, per-expert scales apply in the accumulator epilogue,
+    and the same activation modes are supported — fp lhs (weight-only, the
+    MoE expert-einsum default), in-kernel OVP quantization when `a_dtype` +
+    `act_scale` are set, or pre-quantized codes. Any dims left of (E, C, K)
+    fold into the batch grid dim.
+    """
+    e, n = w.data.shape[0], w.data.shape[-1]
+    sw = _expert_col_scale(w.scale, e, n)
+    if isinstance(x, QuantizedTensor):
+        a_mode = "codes4" if x.is_packed else "codes8"
+        a4, lead = _as_4d(x.data)
+        sa4 = _expert_row_scale(x.scale, x.data)
+        a_dtype = x.normal_dtype
+    elif a_dtype is not None:
+        if act_scale is None:
+            raise ValueError("in-kernel activation quantization needs an "
+                             "act_scale (per-tensor or per-slot)")
+        a_mode = "quantize"
+        a4, lead = _as_4d(x)
+        sa4 = _expert_row_scale(act_scale, x)
+    else:
+        a_mode = "fp"
+        a4, lead = _as_4d(x)
+        sa4 = jnp.ones(a4.shape[:-1] + (1,), jnp.float32)
+        a_dtype = w.normal_dtype
+    out = _grouped_padded(a4, sa4, w.data, sw, w_dtype=w.normal_dtype,
+                          a_mode=a_mode, a_dtype=a_dtype,
+                          out_dtype=out_dtype, interpret=interpret,
+                          bm=bm, bn=bn, bk=bk)
+    return out.reshape(*lead, *out.shape[-3:]) if lead else out[0]
 
 
 # --------------------------------------------------------------------------

@@ -186,6 +186,34 @@ def quantize_pair_planes(u0: jax.Array, u1: jax.Array, normal_dtype: str,
 
 
 # --------------------------------------------------------------------------
+# Shared tile phases (2-D and grouped kernel bodies both use these)
+# --------------------------------------------------------------------------
+def _weight_tile_planes(wp: jax.Array, w_dtype: str, w_spec: AbfloatSpec):
+    """Packed weight tile -> (even, odd) decoded fp32 half-K planes."""
+    if w_dtype == "int8":
+        return decode_pair_planes(wp[0::2, :], wp[1::2, :], "int8", w_spec)
+    return decode_nibble_planes(wp, w_dtype, w_spec)
+
+
+def _act_tile_planes(a: jax.Array, sa: jax.Array, a_mode: str,
+                     a_dtype: str, a_spec: AbfloatSpec):
+    """Activation prologue: (bm, a_blk) tile -> (even, odd) fp32 planes.
+
+    codes4/codes8 decode packed operands; quantize runs the in-kernel OVP
+    fake-quant at the per-row scale `sa`; fp splits the raw tile.
+    """
+    if a_mode == "codes4":
+        return decode_nibble_planes(a, a_dtype, a_spec)
+    if a_mode == "codes8":
+        return decode_pair_planes(a[:, 0::2], a[:, 1::2], "int8", a_spec)
+    af = a.astype(jnp.float32)
+    if a_mode == "quantize":
+        u = af / sa
+        return quantize_pair_planes(u[:, 0::2], u[:, 1::2], a_dtype, a_spec)
+    return af[:, 0::2], af[:, 1::2]  # fp
+
+
+# --------------------------------------------------------------------------
 # The unified fused kernel body
 # --------------------------------------------------------------------------
 def _fused_mm_kernel(a_ref, sa_ref, wp_ref, sw_ref, o_ref, *,
@@ -204,29 +232,9 @@ def _fused_mm_kernel(a_ref, sa_ref, wp_ref, sw_ref, o_ref, *,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    # -- weight decode ---------------------------------------------------
-    wp = wp_ref[...]
-    if w_dtype == "int8":
-        w_even, w_odd = decode_pair_planes(wp[0::2, :], wp[1::2, :],
-                                           "int8", w_spec)
-    else:
-        w_even, w_odd = decode_nibble_planes(wp, w_dtype, w_spec)
-
-    # -- activation prologue ---------------------------------------------
-    if a_mode == "codes4":
-        a_even, a_odd = decode_nibble_planes(a_ref[0], a_dtype, a_spec)
-    elif a_mode == "codes8":
-        ap = a_ref[0]
-        a_even, a_odd = decode_pair_planes(ap[:, 0::2], ap[:, 1::2],
-                                           "int8", a_spec)
-    else:
-        a = a_ref[0].astype(jnp.float32)
-        if a_mode == "quantize":
-            u = a / sa_ref[0]
-            a_even, a_odd = quantize_pair_planes(u[:, 0::2], u[:, 1::2],
-                                                 a_dtype, a_spec)
-        else:  # fp
-            a_even, a_odd = a[:, 0::2], a[:, 1::2]
+    w_even, w_odd = _weight_tile_planes(wp_ref[...], w_dtype, w_spec)
+    a_even, a_odd = _act_tile_planes(a_ref[0], sa_ref[0], a_mode, a_dtype,
+                                     a_spec)
 
     o_ref[0] += (
         jnp.dot(a_even, w_even, preferred_element_type=jnp.float32)
@@ -236,6 +244,42 @@ def _fused_mm_kernel(a_ref, sa_ref, wp_ref, sw_ref, o_ref, *,
     @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
     def _epilogue():
         o_ref[0] = o_ref[0] * sa_ref[0] * sw_ref[...]
+
+
+# --------------------------------------------------------------------------
+# Grouped (per-expert) kernel body: one expert grid dim over stacked weights
+# --------------------------------------------------------------------------
+def _grouped_mm_kernel(a_ref, sa_ref, wp_ref, sw_ref, o_ref, *,
+                       w_dtype: str, w_spec: AbfloatSpec,
+                       a_mode: str, a_dtype: str, a_spec: AbfloatSpec):
+    """One (batch, expert, M, N, K) grid step.
+
+    The expert grid dim indexes the stacked weight's leading axis, so each
+    (e, m, n) tile streams only expert e's packed bytes — no broadcast of
+    the full (E, K, N) stack, no global coordination between experts
+    (the paper's memory-alignment claim extends to the MoE layout).
+
+    a_ref  (1, 1, bm, a_blk)  one expert's dispatched-slot tile
+    sa_ref (1, 1, bm, 1)      per-slot activation scale
+    wp_ref (1, w_blk, bn)     this expert's packed weight tile
+    sw_ref (1, 1, bn)         this expert's per-output-channel scale
+    o_ref  (1, 1, bm, bn)     fp32 accumulator, scales on the last K step
+    """
+    @pl.when(pl.program_id(4) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w_even, w_odd = _weight_tile_planes(wp_ref[0], w_dtype, w_spec)
+    a_even, a_odd = _act_tile_planes(a_ref[0, 0], sa_ref[0, 0], a_mode,
+                                     a_dtype, a_spec)
+
+    o_ref[0, 0] += (
+        jnp.dot(a_even, w_even, preferred_element_type=jnp.float32)
+        + jnp.dot(a_odd, w_odd, preferred_element_type=jnp.float32))
+
+    @pl.when(pl.program_id(4) == pl.num_programs(4) - 1)
+    def _epilogue():
+        o_ref[0, 0] = o_ref[0, 0] * sa_ref[0, 0] * sw_ref[0]
 
 
 # --------------------------------------------------------------------------
@@ -287,6 +331,64 @@ def fused_ovp_matmul_kernel(a: jax.Array, a_scale: jax.Array,
         out_specs=pl.BlockSpec((1, bm, bn),
                                lambda bb, i, j, kk: (bb, i, j)),
         out_shape=jax.ShapeDtypeStruct((b, m, n), jnp.float32),
+        interpret=interpret,
+    )(a, a_scale, w_data, w_scale)
+
+
+# --------------------------------------------------------------------------
+# Grouped pallas_call builder (stacked per-expert weights)
+# --------------------------------------------------------------------------
+def grouped_ovp_matmul_kernel(a: jax.Array, a_scale: jax.Array,
+                              w_data: jax.Array, w_scale: jax.Array, *,
+                              w_dtype: str = "int4",
+                              a_mode: str = "fp", a_dtype: str = "int4",
+                              w_spec: AbfloatSpec | None = None,
+                              a_spec: AbfloatSpec | None = None,
+                              bm: int = 128, bn: int = 128, bk: int = 256,
+                              interpret: bool = False) -> jax.Array:
+    """a: (B, E, M, Ka); a_scale: (B, E, M, 1); w_data: (E, Kw, N);
+    w_scale: (E, 1, N). Returns (B, E, M, N) fp32 with both scales applied.
+
+    The grid is (B, E, M/bm, N/bn, K2/bk2) with K innermost; the expert dim
+    rides the grid like the batch dim, so per-expert MoE einsums hit one
+    pallas_call with no XLA broadcast of the stacked weights. Shapes must
+    divide the (clamped) blocks — `repro.kernels.ops` owns padding.
+    """
+    assert a_mode in ACT_MODES, a_mode
+    w_spec = ABFLOAT_FOR_NORMAL[w_dtype] if w_spec is None else w_spec
+    a_spec = ABFLOAT_FOR_NORMAL[a_dtype] if a_spec is None else a_spec
+
+    b, e, m, ka = a.shape
+    ew, kw, n = w_data.shape
+    assert ew == e, (a.shape, w_data.shape)
+    k2 = kw if w_dtype != "int8" else kw // 2   # number of pairs along K
+    bm, bn = min(bm, m), min(bn, n)
+    bk2 = min(bk // 2, k2)
+    grid = (b, e, m // bm, n // bn, k2 // bk2)
+
+    a_blk = bk2 if a_mode == "codes4" else 2 * bk2
+    w_blk = bk2 if w_dtype != "int8" else 2 * bk2
+    assert ka % a_blk == 0 and m % bm == 0 and n % bn == 0 \
+        and kw % w_blk == 0, (a.shape, w_data.shape, (bm, bn, bk2))
+
+    kernel = functools.partial(_grouped_mm_kernel, w_dtype=w_dtype,
+                               w_spec=w_spec, a_mode=a_mode,
+                               a_dtype=a_dtype, a_spec=a_spec)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, a_blk),
+                         lambda bb, ee, i, j, kk: (bb, ee, i, kk)),
+            pl.BlockSpec((1, 1, bm, 1),
+                         lambda bb, ee, i, j, kk: (bb, ee, i, 0)),
+            pl.BlockSpec((1, w_blk, bn),
+                         lambda bb, ee, i, j, kk: (ee, kk, j)),
+            pl.BlockSpec((1, 1, bn), lambda bb, ee, i, j, kk: (ee, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm, bn),
+                               lambda bb, ee, i, j, kk: (bb, ee, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, e, m, n), jnp.float32),
         interpret=interpret,
     )(a, a_scale, w_data, w_scale)
 

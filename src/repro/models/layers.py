@@ -677,15 +677,19 @@ def _expert_ein(xg, w, policy: QuantPolicy):
     """([B,] E, C, K) x (E, K, F) -> ([B,] E, C, F) quantized matmul.
 
     Quantized per-expert weights go through the backend registry like every
-    other matmul (stacked weights broadcast on the XLA backend; the Pallas
-    kernel declines them via `supports` and dispatch falls back). Expert
-    GEMMs stay weight-only quantized — activation quantization here would
-    change MoE accuracy baselines and needs its own calibrated scales
-    (dispatched slots are capacity-gathered, so the 3σ rule sees padding).
+    other matmul. On the pallas backends a stacked (E, K, F) weight runs
+    the *grouped* kernel — one pallas_call whose expert grid dim streams
+    each expert's packed tile (no XLA broadcast of the stack); per-expert
+    mixed-precision `MixedExpertQuant` stacks dispatch group-wise through
+    the same kernel. Layouts a backend declines fall back to XLA with the
+    reason recorded in `backends.dispatch_stats()`. Expert GEMMs stay
+    weight-only quantized — activation quantization here would change MoE
+    accuracy baselines and needs its own calibrated scales (dispatched
+    slots are capacity-gathered, so the 3σ rule sees padding).
     """
-    from repro.core.ovp import QuantizedTensor
+    from repro.core.ovp import MixedExpertQuant, QuantizedTensor
     cdt = jnp.dtype(policy.compute_dtype)
-    if isinstance(w, QuantizedTensor):
+    if isinstance(w, (QuantizedTensor, MixedExpertQuant)):
         from repro import backends
         w_only = dataclasses.replace(policy, abits=0)
         return backends.dispatch(xg, w, w_only)
