@@ -15,7 +15,11 @@ emulation — correctness, not speed), so the numbers that matter are:
   5. the grouped MoE path: stacked (E, K, N) expert weights must serve on
      the grouped kernel with ZERO fallbacks to the XLA broadcast — any
      decline is reported with its machine-readable reason from
-     `backends.dispatch_stats()` and fails the benchmark.
+     `backends.dispatch_stats()` and fails the benchmark,
+  6. the static calibrated prologue vs the dynamic 3σ one (2-D and
+     grouped): same kernel count, bit-identical-scale numerics, and the
+     wall-time delta of dropping the per-step std + the per-row scale
+     operand — measured, not asserted (see docs/calibration.md).
 
 ``BENCH_SMOKE=1`` (or ``--smoke``) shrinks every shape so CI can run the
 whole file in interpret mode in seconds; results land in
@@ -163,6 +167,47 @@ def main() -> int:
     ok = ok and err_moe < 1e-5 and moe_fallbacks == 0 \
         and n_moe == pallas.dispatches_per_matmul
 
+    # 6) static calibrated prologue vs dynamic 3σ: the dynamic pipeline
+    #    recomputes a full-tensor std and streams a per-row scale plane
+    #    every step; the static path passes the calibrated scale as one
+    #    (1, 1) scalar operand. At the same scale value the outputs must
+    #    agree to fp32 rounding (per-row divide vs scalar reciprocal
+    #    multiply), and both stay a single pallas_call.
+    s_cal = float(a_scale)
+
+    def dyn_prologue(a):
+        return ops.fused_ovp_matmul(a, wq, a_dtype="int4",
+                                    act_scale=sigma_init_scale(a, "int4"),
+                                    interpret=True)
+
+    def static_prologue(a):
+        return ops.fused_ovp_matmul(a, wq, a_dtype="int4",
+                                    static_act_scale=s_cal, interpret=True)
+
+    err_static = float(jnp.max(jnp.abs(static_prologue(a) - fused(a,
+                                                                  a_scale)))
+                       / (jnp.max(jnp.abs(out_fused)) + 1e-9))
+    n_static = count_pallas_calls(static_prologue, a)
+    us_dynp = common.timer(jax.jit(dyn_prologue), a)
+    us_statp = common.timer(jax.jit(static_prologue), a)
+
+    def grouped_static(xg):
+        return ops.grouped_ovp_matmul(xg, wq_moe, a_dtype="int4",
+                                      static_act_scale=s_cal,
+                                      interpret=True)
+
+    def grouped_dyn(xg):
+        return ops.grouped_ovp_matmul(
+            xg, wq_moe, a_dtype="int4",
+            act_scale=jnp.full(xg.shape[:-1], s_cal), interpret=True)
+
+    err_gstatic = float(jnp.max(jnp.abs(grouped_static(xg)
+                                        - grouped_dyn(xg)))
+                        / (jnp.max(jnp.abs(grouped_dyn(xg))) + 1e-9))
+    us_gdyn = common.timer(jax.jit(grouped_dyn), xg)
+    us_gstat = common.timer(jax.jit(grouped_static), xg)
+    ok = ok and err_static < 1e-5 and err_gstatic < 1e-5 and n_static == 1
+
     print("# kernel correctness: max rel err "
           f"w4a16={err16:.2e} w4a4={err4:.2e}")
     print(f"# xla decode-matmul {us_q:.0f}us vs plain fp32 {us_p:.0f}us "
@@ -181,6 +226,12 @@ def main() -> int:
           f"{us_moe:.0f}us vs xla {us_moe_xla:.0f}us")
     print(f"# dispatch ledger: {stats} (declines carry reason codes — e.g. "
           f"rank-4 stack -> {decline_r4!r}, rank-1 lhs -> {decline_lhs!r})")
+    print(f"# static vs dynamic act prologue: rel err {err_static:.1e} "
+          f"(grouped {err_gstatic:.1e}); {n_static} pallas_call; "
+          f"interpret wall {us_statp:.0f}us vs {us_dynp:.0f}us "
+          f"(grouped {us_gstat:.0f}us vs {us_gdyn:.0f}us) — static drops "
+          f"the per-step std and shrinks the (B, M, 1) scale plane to "
+          f"one (1, 1) word")
 
     us = (time.perf_counter() - t0) * 1e6
     common.save_json("kernels_bench", {
@@ -194,6 +245,14 @@ def main() -> int:
                 "err_vs_xla": err_moe, "dispatch_stats": stats,
                 "decline_rank4": decline_r4, "decline_lhs": decline_lhs,
                 "wall_us": us_moe, "wall_us_xla": us_moe_xla},
+        "static_prologue": {
+            "scale": s_cal, "err_vs_dynamic": err_static,
+            "err_vs_dynamic_grouped": err_gstatic,
+            "pallas_calls": n_static,
+            "wall_us_static": us_statp, "wall_us_dynamic": us_dynp,
+            "wall_us_static_grouped": us_gstat,
+            "wall_us_dynamic_grouped": us_gdyn,
+        },
         "ok": bool(ok),
     })
     common.emit("kernels_bench", us,
@@ -203,6 +262,7 @@ def main() -> int:
                 f"fused_calls={n_fused} unfused_calls={n_unfused} "
                 f"moe_calls={n_moe} moe_fallbacks={moe_fallbacks} "
                 f"fused_us={us_fused:.0f} unfused_us={us_unfused:.0f} "
+                f"static_us={us_statp:.0f} dyn_us={us_dynp:.0f} "
                 f"ok={ok}")
     return 0 if ok else 1
 

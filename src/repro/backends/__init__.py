@@ -18,6 +18,12 @@ Adding a backend: subclass `QuantizedMatmulBackend`, implement `matmul`
 (and `supports` if partial), then `register(MyBackend())` — the name
 becomes a valid `QuantPolicy.backend` value everywhere at once. See
 docs/backends.md.
+
+Observability: `dispatch_stats()` (served / declined-with-reason counts
+per backend) and `act_scale_stats()` (static vs dynamic A-side scale
+resolutions). The key vocabulary for both — and the full
+`decline_reason` code table — lives in `backends/base.py`'s module
+docstring.
 """
 from __future__ import annotations
 
@@ -33,7 +39,8 @@ from repro.core.ovp import MixedExpertQuant, QuantizedTensor
 from repro.core.policy import QuantPolicy
 
 from .base import (QuantizedMatmulBackend, act_normal_dtype,
-                   quantize_activation, resolve_act_scale)
+                   act_scale_stats, quantize_activation,
+                   reset_act_scale_stats, resolve_act_scale)
 from .pallas import PallasBackend, PallasInterpretBackend
 from .reference import ReferenceBackend
 from .xla import XlaBackend
@@ -207,6 +214,7 @@ def _dispatch_mixed_experts(x: jax.Array, w: MixedExpertQuant,
 
 __all__ = ["QuantizedMatmulBackend", "register", "get_backend", "available",
            "dispatch", "dispatch_stats", "reset_dispatch_stats",
+           "act_scale_stats", "reset_act_scale_stats",
            "count_pallas_calls", "quantize_activation",
            "resolve_act_scale", "act_normal_dtype", "XlaBackend",
            "PallasBackend", "PallasInterpretBackend", "ReferenceBackend"]

@@ -8,14 +8,44 @@ nothing above this layer branches on backend names.
 The activation scale rule lives here — NOT per backend — so every backend
 quantizes activations identically and their outputs are comparable
 bit-for-bit up to matmul reassociation. `core.qlinear.quantize_activation`
-delegates to `quantize_activation` below.
+delegates to `quantize_activation` below. Under
+`policy.act_scale_mode == "static"` the calibrated per-site scale (from a
+`CalibrationArtifact`, carried as `policy.static_act_scale` or passed
+explicitly) replaces the dynamic 3σ computation; a static-mode call with
+no scale raises `MissingStaticScaleError` instead of silently recomputing.
+
+Machine-readable dispatch vocabulary (shared by every backend; this table
+is the single source of truth — `pallas.py`/`xla.py`/`reference.py` and
+docs/backends.md point here):
+
+| `decline_reason` code           | meaning                                 |
+|---------------------------------|-----------------------------------------|
+| `None`                          | backend serves this operand layout      |
+| `pair_axis_not_reduction`       | weight pairs not packed along K         |
+| `lhs_rank_lt_2`                 | 2-D weight needs an (…, M, K) lhs       |
+| `grouped_lhs_rank_lt_3`         | stacked weight needs an (…, E, C, K) lhs|
+| `grouped_lhs_expert_mismatch`   | lhs expert dim != weight stack dim      |
+| `stacked_rank_gt_3`             | >3-D weight stacks are not kernelized   |
+
+`dispatch_stats()` counter keys (trace-time, one per traced matmul site):
+
+| key shape                           | meaning                             |
+|-------------------------------------|-------------------------------------|
+| `"<backend>"`                       | served on the requested backend     |
+| `"<backend>->fallback:<reason>"`    | declined; ran on `backend.fallback` |
+| `"...[stacked]"` suffix             | the weight was a 3-D expert stack   |
+
+`act_scale_stats()` counter keys (this module): `"static"` /
+`"dynamic"` — how each traced quantized-activation matmul resolved its
+A-side scale. A static-serving engine must show `dynamic == 0`.
 
 This module must not import `repro.core.qlinear` (qlinear routes through
 the registry; importing it back would be a cycle).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import collections
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,13 +61,44 @@ def act_normal_dtype(policy: QuantPolicy) -> str:
     return policy.a_normal_dtype if policy.abits == 4 else "int8"
 
 
+# -- A-side scale-resolution ledger (see module docstring) ----------------
+_ACT_SCALE_STATS: collections.Counter = collections.Counter()
+
+
+def reset_act_scale_stats() -> None:
+    _ACT_SCALE_STATS.clear()
+
+
+def act_scale_stats() -> Dict[str, int]:
+    """Counter keyed "static" / "dynamic": how each traced quantized
+    matmul resolved its activation scale. The static-serving acceptance
+    tests assert `dynamic == 0` over a whole engine run."""
+    return dict(_ACT_SCALE_STATS)
+
+
+def record_act_scale(kind: str) -> None:
+    _ACT_SCALE_STATS[kind] += 1
+
+
 def resolve_act_scale(x: jax.Array, policy: QuantPolicy,
                       static_scale: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, str]:
-    """Returns (scale, normal_dtype) for the A side of one matmul."""
+    """Returns (scale, normal_dtype) for the A side of one matmul.
+
+    static mode: the caller's `static_scale` (per-tensor or per-row)
+    wins, else the policy's calibrated `static_act_scale`; a miss raises
+    rather than silently paying the dynamic std every step.
+    """
     nd = act_normal_dtype(policy)
-    if policy.act_scale_mode == "static" and static_scale is not None:
+    if policy.act_scale_mode == "static":
+        if static_scale is None:
+            static_scale = policy.static_act_scale
+        if static_scale is None:
+            from repro.core.calibration import MissingStaticScaleError
+            raise MissingStaticScaleError(["<unresolved site>"])
+        record_act_scale("static")
         return jnp.asarray(static_scale, jnp.float32), nd
+    record_act_scale("dynamic")
     return sigma_init_scale(x, nd), nd  # dynamic 3σ rule, cheap (one std)
 
 

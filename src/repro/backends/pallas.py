@@ -13,6 +13,17 @@ K)` layout (the MoE dispatch tensor), and per-expert scales apply in the
 epilogue. Layouts the kernels genuinely cannot execute are declined with a
 machine-readable reason (`decline_reason`) and dispatch falls back to XLA.
 
+Static calibrated activation scales (`policy.act_scale_mode == "static"`
+with a per-site `static_act_scale` attached by
+`calibration.apply_calibration`) skip the per-step scale computation
+entirely: no 3σ std runs, and the kernel takes the calibrated scale as a
+single (1, 1) scalar operand in place of the whole per-row scale plane —
+one compiled kernel serves every calibrated site (see the `*_static`
+kernel bodies in `kernels/ovp_matmul.py`).
+
+Decline-reason codes and the `dispatch_stats()` / `act_scale_stats()` key
+vocabulary are documented once, in `backends/base.py`'s module docstring.
+
 `pallas_interpret` is the same backend with `interpret=True` — the CPU
 emulation used by tests and this container; numerics are identical.
 """
@@ -27,7 +38,21 @@ from repro.core.ovp import QuantizedTensor
 from repro.core.policy import QuantPolicy
 from repro.kernels import ops
 
-from .base import QuantizedMatmulBackend, act_normal_dtype, resolve_act_scale
+from .base import (QuantizedMatmulBackend, act_normal_dtype,
+                   record_act_scale, resolve_act_scale)
+
+
+def _static_const_scale(policy: QuantPolicy, act_scale) -> Optional[float]:
+    """The activation scale as a Python float when it is a calibrated
+    per-site scalar: static mode with the policy's scale (or an explicit
+    Python scalar). Array scales — per-row statics, dynamic 3σ — return
+    None and take the per-row scale-operand path instead."""
+    if policy.act_scale_mode != "static":
+        return None
+    if act_scale is None:
+        return None if policy.static_act_scale is None \
+            else float(policy.static_act_scale)
+    return float(act_scale) if isinstance(act_scale, (int, float)) else None
 
 
 class PallasBackend(QuantizedMatmulBackend):
@@ -58,14 +83,25 @@ class PallasBackend(QuantizedMatmulBackend):
         cdt = jnp.dtype(policy.compute_dtype)
         a_dtype = None
         scale = None
+        static = None
         if policy.abits:
-            scale, a_dtype = resolve_act_scale(x, policy, act_scale)
+            static = _static_const_scale(policy, act_scale)
+            if static is not None:
+                # calibrated scalar: no std, and the kernel reads one
+                # (1, 1) scale word instead of a per-row plane
+                a_dtype = act_normal_dtype(policy)
+                record_act_scale("static")
+            else:
+                scale, a_dtype = resolve_act_scale(x, policy, act_scale)
         if w.data.ndim == 3:
             return ops.grouped_ovp_matmul(x, w, a_dtype=a_dtype,
-                                          act_scale=scale, out_dtype=cdt,
+                                          act_scale=scale,
+                                          static_act_scale=static,
+                                          out_dtype=cdt,
                                           interpret=self.interpret)
         return ops.fused_ovp_matmul(x, w, a_dtype=a_dtype, act_scale=scale,
-                                    out_dtype=cdt, interpret=self.interpret)
+                                    static_act_scale=static, out_dtype=cdt,
+                                    interpret=self.interpret)
 
 
 class PallasInterpretBackend(PallasBackend):

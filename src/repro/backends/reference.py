@@ -1,9 +1,13 @@
 """Pure-jnp fp32 oracle backend.
 
 Same quantization semantics as every other backend (shared activation rule
-from `backends.base`), but everything runs in float32 with no kernel, no
-padding, and no compute-dtype cast. Equivalence tests compare the real
-backends against this one.
+from `backends.base`, including static calibrated scales), but everything
+runs in float32 with no kernel, no padding, and no compute-dtype cast.
+Equivalence tests compare the real backends against this one.
+
+Never declines (`decline_reason` stays `None` for any layout); its
+dispatch/act-scale stats keys follow the vocabulary tabulated in
+`base.py`'s module docstring.
 """
 from __future__ import annotations
 

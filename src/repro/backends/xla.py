@@ -4,7 +4,14 @@ Dequantizes the weight (and, when `policy.abits`, a materialized OVP
 round-trip of the activation) to the compute dtype and lets XLA fuse the
 decode into the GEMM prologue. This is the portable path: it handles any
 lhs rank and stacked (scan/per-expert) weights via broadcasting, so it is
-also the registry's fallback backend.
+also the registry's fallback backend — `decline_reason` is never
+overridden here (always `None`: nothing to decline).
+
+The A side follows the shared rule in `backends/base.py` —
+`quantize_activation` resolves dynamic 3σ or static calibrated scales
+identically to every other backend (and records them in
+`act_scale_stats()`). The decline-reason and dispatch/act-scale stats key
+vocabulary is tabulated once in `base.py`'s module docstring.
 """
 from __future__ import annotations
 

@@ -16,5 +16,9 @@ from .quantizer import (QuantSpec, dequantize, fake_quant_ste,
                         quantization_error, quantize, sigma_init_scale)
 from .qlinear import (linear, qmatmul, quantize_activation, quantize_params,
                       quantize_weight)
-from .calibration import (ActTape, auto_mixed, calibrate_activation_scales,
-                          record_weights, run_calibration, site_sensitivity)
+from .calibration import (ActTape, CalibratedProgram, CalibrationArtifact,
+                          MissingStaticScaleError, apply_calibration,
+                          auto_mixed, calibrate_activation_scales,
+                          calibrate_model, collecting_activations,
+                          record_weights, run_calibration, site_sensitivity,
+                          static_scale_misses, uses_static_scales)

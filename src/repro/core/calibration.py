@@ -3,27 +3,49 @@ plus the per-site sensitivity pass that can *emit* a mixed-precision
 `PolicyProgram` automatically.
 
 The paper uses one batch of *training-set* data to select scale factors.
-Models in `repro.models` support `collect_acts=True`, returning a tape of
-matmul-input activations keyed by site name. We subsample each site, run the
-OVP MSE scale search, and hand the scales back to the serving path
-(`QuantPolicy.act_scale_mode == "static"`).
+The flow is artifact-based (see docs/calibration.md):
 
-Site addressing is shared with the policy program: tape keys, the static
-scale dict returned by `calibrate_activation_scales`, and the rules an
-`auto_mixed` program emits all use the same "/"-joined pytree-path grammar
-that `quantize_params` walks (see docs/policies.md).
+  1. run the un-jitted model forward under `collecting_activations(tape)`
+     — `qlinear.qmatmul` tapes every matmul input under its site address —
+     or feed `run_calibration` an `apply_collect` callback,
+  2. `calibrate_activation_scales` MSE-searches a static scale per site
+     (3σ-seeded) and `CalibrationArtifact` captures the scale dict plus
+     program provenance (`save`/`load` round-trip through JSON),
+  3. `apply_calibration(policy, artifact)` overlays the artifact on the
+     policy program (`CalibratedProgram`): every covered site resolves to
+     a `QuantPolicy` carrying `act_scale_mode="static"` +
+     `static_act_scale`, which every execution backend honors (the fused
+     Pallas kernels take the scale as one (1, 1) scalar operand in place
+     of the per-row scale plane — and skip the per-step 3σ std),
+  4. the serving engine validates up front that every static-mode site has
+     a calibrated scale (`static_scale_misses` — misses raise the
+     machine-readable `MissingStaticScaleError`).
+
+Site addressing is shared with the policy program: tape keys, artifact
+scale keys, and the rules an `auto_mixed` program emits all use the same
+"/"-joined pytree-path grammar that `quantize_params` walks — including
+the unrolled ``layers/<i>/...`` and per-expert ``.../experts/<name>/<e>``
+addresses (see docs/policies.md). Artifact keys may also be `fnmatch`
+globs, so one entry can cover every layer of a scanned stack.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterable, Optional
+import contextlib
+import dataclasses
+import fnmatch
+import functools
+import json
+import os
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .policy import PolicyProgram, QuantPolicy, Rule
+from .ovp import MixedExpertQuant, QuantizedTensor, ovp_fake_quant
+from .policy import (PolicyLike, PolicyProgram, QuantPolicy, Rule,
+                     as_program)
 from .quantizer import ovp_search_scale
-from .ovp import ovp_fake_quant
 
 
 class ActTape:
@@ -51,6 +73,39 @@ class ActTape:
             self.samples[name] = flat
 
 
+# --------------------------------------------------------------------------
+# Activation collection: a process-wide tape that `qlinear.qmatmul` feeds
+# --------------------------------------------------------------------------
+_ACTIVE_TAPE: Optional[ActTape] = None
+
+
+@contextlib.contextmanager
+def collecting_activations(tape: ActTape):
+    """Install `tape` as the process-wide activation tape.
+
+    While active, every `qlinear.qmatmul` records its (un-jitted) matmul
+    input under the call's site address — the same "/"-joined grammar the
+    policy program resolves — so a plain `model.forward(...)` over the
+    calibration batch yields a tape keyed exactly like the quantized tree.
+    Traced calls (under jit) are skipped silently: calibration runs eagerly.
+    """
+    global _ACTIVE_TAPE
+    prev, _ACTIVE_TAPE = _ACTIVE_TAPE, tape
+    try:
+        yield tape
+    finally:
+        _ACTIVE_TAPE = prev
+
+
+def tap(site: str, x) -> None:
+    """Record one matmul input on the active tape (no-op when inactive,
+    when the site is anonymous, or when `x` is a tracer)."""
+    tape = _ACTIVE_TAPE
+    if tape is None or not site or isinstance(x, jax.core.Tracer):
+        return
+    tape.record(site, x)
+
+
 def record_weights(params, tape: Optional[ActTape] = None,
                    min_size: int = 4096) -> ActTape:
     """Tape every linear-weight leaf under its param-tree site address —
@@ -66,16 +121,23 @@ def record_weights(params, tape: Optional[ActTape] = None,
     return tape
 
 
-def calibrate_activation_scales(tape: ActTape, normal_dtype: str = "int4",
+def calibrate_activation_scales(tape: ActTape, normal_dtype="int4",
                                 n_grid: int = 24) -> Dict[str, jax.Array]:
     """Per-site static scales via the OVP MSE search (3σ-seeded), keyed by
-    the tape's site addresses."""
+    the tape's site addresses.
+
+    `normal_dtype` is one dtype string, or a ``site -> dtype`` callable so
+    mixed-precision programs search each site on the grid its activations
+    will actually quantize to (W8A8 sites on int8, W4A4 on int4/flint4).
+    """
+    dtype_for = normal_dtype if callable(normal_dtype) \
+        else (lambda _site: normal_dtype)
     scales = {}
     for name, sample in sorted(tape.samples.items()):
         s = sample
         if s.size % 2 != 0:  # pairing needs even length
             s = s[:-1]
-        scales[name] = ovp_search_scale(jnp.asarray(s), normal_dtype,
+        scales[name] = ovp_search_scale(jnp.asarray(s), dtype_for(name),
                                         n_grid=n_grid)
     return scales
 
@@ -94,6 +156,282 @@ def run_calibration(apply_collect: Callable, params, batches: Iterable,
         for name, x in acts.items():
             tape.record(name, x)
     return calibrate_activation_scales(tape, normal_dtype)
+
+
+# ==========================================================================
+# CalibrationArtifact: the save/load unit between calibration and serving
+# ==========================================================================
+_ARTIFACT_KIND = "olive-calibration"
+_ARTIFACT_VERSION = 1
+
+
+class MissingStaticScaleError(ValueError):
+    """A static-mode site has no calibrated activation scale.
+
+    Machine-readable: `.sites` lists the offending "/"-joined addresses,
+    and the message is a single `missing_static_scale sites=[...]` line so
+    launchers and CI can grep it.
+    """
+
+    def __init__(self, sites):
+        self.sites = sorted(sites)
+        super().__init__(f"missing_static_scale sites={self.sites}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationArtifact:
+    """Per-site static activation scales + the provenance to re-derive them.
+
+    `scales` maps site addresses (or `fnmatch` globs over them — the same
+    grammar as `PolicyProgram` rules) to the calibrated scale. `program`
+    records which policy/program the tape ran under and `normal_dtype` the
+    A-side dtype the MSE search targeted; `meta` is free-form (batch
+    counts, sample caps, ...). The artifact round-trips through JSON via
+    `save`/`load`.
+    """
+
+    scales: Tuple[Tuple[str, float], ...]
+    normal_dtype: str = "int4"
+    program: str = ""
+    meta: Tuple[Tuple[str, str], ...] = ()
+
+    @classmethod
+    def from_scales(cls, scales: Dict[str, jax.Array],
+                    normal_dtype: str = "int4", program: str = "",
+                    **meta) -> "CalibrationArtifact":
+        # keys keep their given order — for overlapping glob keys,
+        # first-match-wins precedence is the author's, like program rules
+        return cls(scales=tuple((k, float(v)) for k, v in scales.items()),
+                   normal_dtype=normal_dtype, program=program,
+                   meta=tuple(sorted((k, str(v)) for k, v in meta.items())))
+
+    def as_dict(self) -> Dict[str, float]:
+        """Keys -> scales, first occurrence winning on duplicates (a
+        re-applied artifact stacks its fresh keys in front)."""
+        d: Dict[str, float] = {}
+        for k, v in self.scales:
+            d.setdefault(k, v)
+        return d
+
+    def sites(self) -> List[str]:
+        return [k for k, _ in self.scales]
+
+    def resolve(self, site: str) -> Optional[float]:
+        """Scale for one site: the FIRST matching key wins — exact match
+        or glob, in author order — the same first-match-wins semantics as
+        program rules (so re-applied artifacts and overlapping globs
+        behave identically to prepended rules)."""
+        low = site.lower()
+        for pattern, s in self.scales:
+            if pattern == site or fnmatch.fnmatchcase(low,
+                                                      pattern.lower()):
+                return s
+        return None
+
+    # ------------------------------------------------------------ save/load
+    def save(self, path: str) -> str:
+        payload = {
+            "kind": _ARTIFACT_KIND, "version": _ARTIFACT_VERSION,
+            "normal_dtype": self.normal_dtype, "program": self.program,
+            "meta": dict(self.meta),
+            "scales": self.as_dict(),  # first duplicate wins, like resolve
+        }
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            # no sort_keys: the scales object must round-trip in author
+            # order (glob-key precedence is positional)
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationArtifact":
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("kind") != _ARTIFACT_KIND:
+            raise ValueError(f"{path}: not a calibration artifact "
+                             f"(kind={payload.get('kind')!r})")
+        if not isinstance(payload.get("scales"), dict):
+            raise ValueError(f"{path}: artifact has no 'scales' dict")
+        return cls(scales=tuple((str(k), float(v)) for k, v
+                                in payload["scales"].items()),
+                   normal_dtype=str(payload.get("normal_dtype", "int4")),
+                   program=str(payload.get("program", "")),
+                   meta=tuple(sorted((str(k), str(v)) for k, v in
+                                     payload.get("meta", {}).items())))
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedProgram(PolicyProgram):
+    """A `PolicyProgram` with a `CalibrationArtifact` overlaid per site.
+
+    `resolve(site)` resolves the *base* program first (rules + default,
+    first match wins as ever), then — when the artifact covers the
+    concrete site (exact key, else its first matching glob key) —
+    replaces `act_scale_mode`/`static_act_scale` on the resolved policy.
+    Overlaying per concrete site, instead of baking pre-resolved rules at
+    apply time, keeps glob artifact keys correct on mixed-precision
+    programs: the base policy under ``layers/*/mlp/w*`` comes from each
+    covered site's own rule (layer 1 may be W8, layer 2 W4), never from
+    resolving the glob string as a pseudo-site.
+
+    Program-surgery methods (`with_rules`, `replace_all`, `off`,
+    `with_backend` — the engine's backend override) preserve the overlay.
+    """
+    artifact: CalibrationArtifact = CalibrationArtifact(scales=())
+
+    def resolve(self, site: str) -> QuantPolicy:
+        return _calibrated_resolve(self, site)
+
+    def with_rules(self, rules, front: bool = True) -> "CalibratedProgram":
+        base = PolicyProgram.with_rules(self, rules, front)
+        return CalibratedProgram(rules=base.rules, default=base.default,
+                                 name=base.name, artifact=self.artifact)
+
+    def replace_all(self, **kw) -> "CalibratedProgram":
+        base = PolicyProgram.replace_all(self, **kw)
+        return CalibratedProgram(rules=base.rules, default=base.default,
+                                 name=base.name, artifact=self.artifact)
+
+    def addresses_layers(self, n_layers: int) -> bool:
+        """Artifact keys participate in layout detection: per-layer scale
+        keys (``layers/<i>/...``) can only match on the unrolled layout,
+        exactly like per-layer rules."""
+        if any("layers/" in k.lower() for k, _ in self.artifact.scales):
+            return True
+        return PolicyProgram.addresses_layers(self, n_layers)
+
+
+@functools.lru_cache(maxsize=65536)
+def _calibrated_resolve(program: CalibratedProgram,
+                        site: str) -> QuantPolicy:
+    pol = PolicyProgram.resolve(program, site)
+    s = program.artifact.resolve(site)
+    if s is None:
+        return pol
+    return dataclasses.replace(pol, act_scale_mode="static",
+                               static_act_scale=float(s))
+
+
+def apply_calibration(policy: PolicyLike,
+                      artifact: CalibrationArtifact) -> CalibratedProgram:
+    """Overlay an artifact on a policy: every site the artifact covers
+    resolves with `act_scale_mode="static"` plus its calibrated
+    `static_act_scale`; everything else keeps the base program's
+    behavior — and the engine's validation pass rejects static-mode sites
+    the artifact missed.
+
+    Keys address sites with the program grammar (literal addresses or
+    globs), so calibrated per-layer scales keep working on the unrolled
+    ``layers/<i>`` layout and per-expert ``experts/<name>/<e>`` sub-sites.
+    Applying a second artifact stacks in front: its keys win where both
+    cover a site.
+    """
+    prog = as_program(policy)
+    if isinstance(prog, CalibratedProgram):
+        artifact = dataclasses.replace(
+            artifact, scales=artifact.scales + prog.artifact.scales)
+    return CalibratedProgram(rules=prog.rules, default=prog.default,
+                             name=prog.name, artifact=artifact)
+
+
+def calibrate_model(model, params, batches: Iterable,
+                    normal_dtype: Optional[str] = None, n_grid: int = 24,
+                    max_per_site: int = 65536) -> CalibrationArtifact:
+    """One-stop PTQ calibration over a model: run the (un-jitted) forward
+    on each batch with the activation tape installed, MSE-search a static
+    scale per taped site, and wrap the result as an artifact.
+
+    `normal_dtype` defaults to resolving the A-side dtype PER SITE from
+    the model's policy (the paper's rule: 8-bit activations always int8,
+    4-bit the policy's `a_normal_dtype`), so on a mixed-precision program
+    every site's MSE search targets the grid its scales will actually be
+    used on; pass a string to force one dtype for every site.
+
+    Run this on the *raw* (pre-`quantize_params`) tree so the taped values
+    are the fp activations the paper calibrates on; the taped site
+    addresses match the quantized tree's, since both walk the same pytree.
+
+    Scanned layer stacks tape through an *unrolled* twin of the model:
+    `lax.scan` traces its body even eagerly (so scanned sites would never
+    reach the tape), and per-layer ``layers/<i>`` scale keys are what the
+    serving path wants anyway — applying the resulting artifact makes the
+    program layer-addressed, which unrolls the serving model to the same
+    layout the scales were measured on.
+    """
+    import copy
+    if normal_dtype is None:
+        from repro.backends.base import act_normal_dtype
+        policy_prog = as_program(model.policy)
+
+        def normal_dtype(site):
+            pol = policy_prog.resolve(site)
+            return act_normal_dtype(pol) if pol.abits \
+                else pol.a_normal_dtype
+    if getattr(model, "n_groups", 0) or getattr(model, "n_tail", 0):
+        from repro.models.model import unroll_params
+        unrolled = copy.copy(model)
+        unrolled.unrolled, unrolled.n_groups, unrolled.n_tail = True, 0, 0
+        model, params = unrolled, unroll_params(model.cfg, params)
+    tape = ActTape(max_per_site=max_per_site)
+    n_batches = 0
+    with collecting_activations(tape):
+        for batch in batches:
+            model.forward(params, batch, mode="train")
+            n_batches += 1
+    scales = calibrate_activation_scales(tape, normal_dtype, n_grid=n_grid)
+    prog = getattr(model.policy, "name", "") or type(model.policy).__name__
+    dtypes = {normal_dtype(s) for s in scales} if callable(normal_dtype) \
+        else {normal_dtype}
+    return CalibrationArtifact.from_scales(
+        scales, normal_dtype=dtypes.pop() if len(dtypes) == 1 else "mixed",
+        program=prog, n_batches=n_batches, max_per_site=max_per_site)
+
+
+def static_scale_misses(params, policy: PolicyLike) -> List[str]:
+    """Quantized-weight sites whose resolved policy wants a static
+    activation scale but has none calibrated.
+
+    Walks the (quantized) param tree exactly like dispatch will: every
+    `QuantizedTensor` leaf resolves its own site, `MixedExpertQuant`
+    leaves resolve each per-expert sub-site. Expert-stack einsums run
+    weight-only (`models.layers._expert_ein` forces `abits=0`), so
+    ``.../experts/...`` stacked sites never need an activation scale and
+    are skipped. The serving engine raises `MissingStaticScaleError` on a
+    non-empty result.
+    """
+    from .qlinear import tree_paths
+    misses = []
+
+    def needs_scale(pol: QuantPolicy) -> bool:
+        return (pol.enabled and pol.abits > 0
+                and pol.act_scale_mode == "static"
+                and pol.static_act_scale is None)
+
+    for path, w in tree_paths(params):
+        if isinstance(w, (QuantizedTensor, MixedExpertQuant)):
+            stacked = getattr(getattr(w, "data", None), "ndim", 2) > 2 \
+                or isinstance(w, MixedExpertQuant)
+            if stacked and "/experts/" in f"/{path}/":
+                continue  # expert einsums execute weight-only
+            sub = [path] if isinstance(w, QuantizedTensor) else \
+                [f"{path}/{e}" for e in range(w.n_experts)]
+            misses += [s for s in sub if needs_scale(policy.resolve(s))]
+    return misses
+
+
+def uses_static_scales(policy: PolicyLike) -> bool:
+    """True when any rule (or the default) quantizes activations under
+    `act_scale_mode="static"` — or a calibration overlay can force sites
+    static. The gate for the engine's validation."""
+    prog = as_program(policy)
+    pols = [prog.default] + [r.policy for r in prog.rules]
+    quantizing = [p for p in pols if p.enabled and p.abits > 0]
+    if any(p.act_scale_mode == "static" for p in quantizing):
+        return True
+    return bool(quantizing) and isinstance(prog, CalibratedProgram) \
+        and bool(prog.artifact.scales)
 
 
 # ==========================================================================

@@ -45,6 +45,14 @@ class QuantPolicy:
     abits: int = 0
     a_normal_dtype: str = "int4"
     act_scale_mode: str = "dynamic"     # dynamic (3σ rule) | static (calibrated)
+    # calibrated per-site activation scale (a plain float, so the resolved
+    # policy stays hashable). Populated per site by
+    # `calibration.apply_calibration`'s resolve-time overlay
+    # (`CalibratedProgram`); consumed by `backends.base.resolve_act_scale`
+    # and the static Pallas prologue (as a (1, 1) scalar kernel operand).
+    # None under act_scale_mode="static" means "not calibrated yet" — the
+    # serving engine rejects such sites up front (MissingStaticScaleError).
+    static_act_scale: Optional[float] = None
 
     # legacy coarse layer selection (compiled into a PolicyProgram by
     # `from_policy`; new code writes site rules instead)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro import backends
 
 from . import baselines
+from . import calibration as _calibration
 from .ovp import MixedExpertQuant, QuantizedTensor
 from .policy import PolicyLike, QuantPolicy, resolve
 from .quantizer import (QuantSpec, fake_quant_ste, quantize,
@@ -85,12 +86,22 @@ def quantize_activation(x: jax.Array, policy: QuantPolicy,
 # --------------------------------------------------------------------------
 # The quantized matmul
 # --------------------------------------------------------------------------
-def qmatmul(x: jax.Array, w: Weight, policy: QuantPolicy,
+def qmatmul(x: jax.Array, w: Weight, policy: QuantPolicy, site: str = "",
             act_scale: Optional[jax.Array] = None,
             precision=None) -> jax.Array:
-    """x: (..., K) @ w: (K, N) with the policy's quantization applied."""
+    """x: (..., K) @ w: (K, N) with the policy's quantization applied.
+
+    `site` is the weight's "/"-joined param-tree address (threaded by the
+    model layers): it feeds the calibration tape when one is active, and
+    names the offending site when a static-scale policy arrives without a
+    calibrated scale.
+    """
+    _calibration.tap(site, x)
     cdt = jnp.dtype(policy.compute_dtype)
     if isinstance(w, (QuantizedTensor, MixedExpertQuant)):
+        if (policy.abits and policy.act_scale_mode == "static"
+                and act_scale is None and policy.static_act_scale is None):
+            raise _calibration.MissingStaticScaleError([site or "<unknown>"])
         return backends.dispatch(x, w, policy, act_scale=act_scale,
                                  precision=precision)
     # raw weights
@@ -119,9 +130,10 @@ def qmatmul(x: jax.Array, w: Weight, policy: QuantPolicy,
 
 
 def linear(x: jax.Array, w: Weight, b: Optional[jax.Array],
-           policy: QuantPolicy, act_scale: Optional[jax.Array] = None,
+           policy: QuantPolicy, site: str = "",
+           act_scale: Optional[jax.Array] = None,
            precision=None) -> jax.Array:
-    y = qmatmul(x, w, policy, act_scale, precision)
+    y = qmatmul(x, w, policy, site, act_scale, precision)
     if b is not None:
         y = y + b.astype(y.dtype)
     return y
@@ -175,7 +187,13 @@ def _expert_site_policies(path: str, n_experts: int, policy: PolicyLike):
     experts (every sub-site resolves identically — the common case, which
     keeps the stack a single homogeneous QuantizedTensor)."""
     pols = [resolve(policy, f"{path}/{e}") for e in range(n_experts)]
-    return pols if len(set(pols)) > 1 else None
+    # activation-scale calibration is an A-side property: two experts
+    # whose policies differ only in static_act_scale must pack as one
+    # homogeneous stack (dispatch takes the A side from the call-site
+    # policy, never per expert) — so the scale is stripped from both the
+    # homogeneity gate AND the returned grouping keys
+    wkey = [dataclasses.replace(p, static_act_scale=None) for p in pols]
+    return wkey if len(set(wkey)) > 1 else None
 
 
 def _quantize_mixed_experts(w, pols) -> MixedExpertQuant:

@@ -6,7 +6,10 @@ layout (per-row activation / per-output-channel weight), QuantizedTensor
 plumbing, and the interpret switch (CPU validation vs TPU execution).
 
 Scales are applied *inside* the kernel epilogue — there is no post-kernel
-XLA multiply; a quantized matmul is exactly one device dispatch.
+XLA multiply; a quantized matmul is exactly one device dispatch. With a
+calibrated `static_act_scale` the activation scale shrinks to a single
+(1, 1) scalar operand — no per-row plane, no per-step scale computation
+(see docs/calibration.md).
 """
 from __future__ import annotations
 
@@ -32,10 +35,11 @@ def _pad_to(x: jax.Array, mults, value=0):
 
 
 @functools.partial(jax.jit, static_argnames=("w_dtype", "a_mode", "a_dtype",
-                                             "out_dtype", "interpret",
-                                             "bm", "bn", "bk"))
-def _fused_padded(a3: jax.Array, sa3: jax.Array, w_data: jax.Array,
-                  sw: jax.Array, *, w_dtype: str, a_mode: str, a_dtype: str,
+                                             "a_static", "out_dtype",
+                                             "interpret", "bm", "bn", "bk"))
+def _fused_padded(a3: jax.Array, sa3: jax.Array,
+                  w_data: jax.Array, sw: jax.Array, *, w_dtype: str,
+                  a_mode: str, a_dtype: str, a_static: bool = False,
                   out_dtype=jnp.float32, interpret: bool = False,
                   bm: int = 128, bn: int = 128, bk: int = 256) -> jax.Array:
     """Pad operands to block multiples, run the fused kernel, slice back.
@@ -43,6 +47,10 @@ def _fused_padded(a3: jax.Array, sa3: jax.Array, w_data: jax.Array,
     a3 (B, M, Ka); sa3 (B, M, 1); w_data (Kw, N); sw (1, N).
     Padded activation rows get scale 1 (prologue divides by the scale) and
     padded codes/values decode to 0, so padding never perturbs the result.
+
+    `a_static` takes the static-prologue kernel: sa3 is the calibrated
+    (1, 1) scalar (a traced operand, so one jit entry and one compiled
+    kernel serve every scale value) and never needs padding.
     """
     b, m, ka = a3.shape
     kw, n = w_data.shape
@@ -54,11 +62,12 @@ def _fused_padded(a3: jax.Array, sa3: jax.Array, w_data: jax.Array,
     a_mult = bk2 if a_mode == "codes4" else 2 * bk2
     w_mult = bk2 if w_dtype != "int8" else 2 * bk2
     ap = _pad_to(a3, (1, bm, a_mult))
-    sap = _pad_to(sa3, (1, bm, 1), value=1.0)
+    sap = sa3 if a_static else _pad_to(sa3, (1, bm, 1), value=1.0)
     wp = _pad_to(w_data, (w_mult, bn))
     swp = _pad_to(sw, (1, bn), value=1.0)
     out = _mm.fused_ovp_matmul_kernel(ap, sap, wp, swp, w_dtype=w_dtype,
                                       a_mode=a_mode, a_dtype=a_dtype,
+                                      a_static=a_static,
                                       bm=bm, bn=bn, bk=2 * bk2,
                                       interpret=interpret)
     return out[:, :m, :n].astype(out_dtype)
@@ -106,6 +115,7 @@ def fused_ovp_matmul(x: Union[jax.Array, QuantizedTensor],
                      w: QuantizedTensor, *,
                      a_dtype: Optional[str] = None,
                      act_scale: Optional[jax.Array] = None,
+                     static_act_scale: Union[float, jax.Array, None] = None,
                      out_dtype=jnp.float32, interpret: bool = False,
                      bm: int = 128, bn: int = 128,
                      bk: int = 256) -> jax.Array:
@@ -117,29 +127,45 @@ def fused_ovp_matmul(x: Union[jax.Array, QuantizedTensor],
     materialized) — or a pre-quantized `QuantizedTensor` whose codes are
     decoded in the prologue. Weight pairs must run along K; any leading lhs
     dims are batch (3-D decode-step GEMMs take the same path as 2-D).
+
+    `static_act_scale` (the calibrated per-site scalar — a Python float
+    or 0-d array) replaces `act_scale`: it reaches the kernel as a single
+    (1, 1) scalar operand instead of the per-row plane, and no per-step
+    scale computation of any kind runs. This is the
+    `act_scale_mode="static"` serving fast path.
     """
     n = w.data.shape[-1]
     sw = _col_scale(w.scale, n)
+    static = False
     if isinstance(x, QuantizedTensor):
         a_mode = "codes4" if x.is_packed else "codes8"
         a3, lead = _as_3d(x.data)
         sa3 = _row_scale(x.scale, x.data)
         a_dtype = x.normal_dtype
     elif a_dtype is not None:
-        if act_scale is None:
+        if static_act_scale is not None:
+            a_mode = "quantize"
+            a3, lead = _as_3d(x)
+            sa3 = jnp.asarray(static_act_scale,
+                              jnp.float32).reshape(1, 1)
+            static = True
+        elif act_scale is None:
             raise ValueError("in-kernel activation quantization needs an "
-                             "act_scale (per-tensor or per-row)")
-        a_mode = "quantize"
-        a3, lead = _as_3d(x)
-        sa3 = _row_scale(act_scale, x)
+                             "act_scale (per-tensor or per-row) or a "
+                             "static_act_scale constant")
+        else:
+            a_mode = "quantize"
+            a3, lead = _as_3d(x)
+            sa3 = _row_scale(act_scale, x)
     else:
         a_mode = "fp"
         a3, lead = _as_3d(x)
         sa3 = jnp.ones((a3.shape[0], a3.shape[1], 1), jnp.float32)
         a_dtype = w.normal_dtype
     out = _fused_padded(a3, sa3, w.data, sw, w_dtype=w.normal_dtype,
-                        a_mode=a_mode, a_dtype=a_dtype, out_dtype=out_dtype,
-                        interpret=interpret, bm=bm, bn=bn, bk=bk)
+                        a_mode=a_mode, a_dtype=a_dtype, a_static=static,
+                        out_dtype=out_dtype, interpret=interpret,
+                        bm=bm, bn=bn, bk=bk)
     return out.reshape(*lead, out.shape[-2], out.shape[-1]) if lead \
         else out[0]
 
@@ -148,17 +174,20 @@ def fused_ovp_matmul(x: Union[jax.Array, QuantizedTensor],
 # Grouped (per-expert) matmul over stacked weights
 # --------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("w_dtype", "a_mode", "a_dtype",
-                                             "out_dtype", "interpret",
-                                             "bm", "bn", "bk"))
-def _grouped_padded(a4: jax.Array, sa4: jax.Array, w_data: jax.Array,
-                    sw: jax.Array, *, w_dtype: str, a_mode: str,
-                    a_dtype: str, out_dtype=jnp.float32,
+                                             "a_static", "out_dtype",
+                                             "interpret", "bm", "bn", "bk"))
+def _grouped_padded(a4: jax.Array, sa4: jax.Array,
+                    w_data: jax.Array, sw: jax.Array, *, w_dtype: str,
+                    a_mode: str, a_dtype: str, a_static: bool = False,
+                    out_dtype=jnp.float32,
                     interpret: bool = False, bm: int = 128, bn: int = 128,
                     bk: int = 256) -> jax.Array:
     """Pad grouped operands to block multiples, run the kernel, slice back.
 
     a4 (B, E, M, Ka); sa4 (B, E, M, 1); w_data (E, Kw, N); sw (E, 1, N).
     The expert dim never pads (block size 1 on the expert grid dim).
+    `a_static` takes the static-prologue kernel (sa4 is the calibrated
+    (1, 1, 1) scalar), exactly as in `_fused_padded`.
     """
     b, e, m, ka = a4.shape
     _, kw, n = w_data.shape
@@ -169,11 +198,12 @@ def _grouped_padded(a4: jax.Array, sa4: jax.Array, w_data: jax.Array,
     a_mult = bk2 if a_mode == "codes4" else 2 * bk2
     w_mult = bk2 if w_dtype != "int8" else 2 * bk2
     ap = _pad_to(a4, (1, 1, bm, a_mult))
-    sap = _pad_to(sa4, (1, 1, bm, 1), value=1.0)
+    sap = sa4 if a_static else _pad_to(sa4, (1, 1, bm, 1), value=1.0)
     wp = _pad_to(w_data, (1, w_mult, bn))
     swp = _pad_to(sw, (1, 1, bn), value=1.0)
     out = _mm.grouped_ovp_matmul_kernel(ap, sap, wp, swp, w_dtype=w_dtype,
                                         a_mode=a_mode, a_dtype=a_dtype,
+                                        a_static=a_static,
                                         bm=bm, bn=bn, bk=2 * bk2,
                                         interpret=interpret)
     return out[:, :, :m, :n].astype(out_dtype)
@@ -207,6 +237,8 @@ def grouped_ovp_matmul(x: Union[jax.Array, QuantizedTensor],
                        w: QuantizedTensor, *,
                        a_dtype: Optional[str] = None,
                        act_scale: Optional[jax.Array] = None,
+                       static_act_scale: Union[float, jax.Array,
+                                               None] = None,
                        out_dtype=jnp.float32, interpret: bool = False,
                        bm: int = 128, bn: int = 128,
                        bk: int = 256) -> jax.Array:
@@ -216,30 +248,40 @@ def grouped_ovp_matmul(x: Union[jax.Array, QuantizedTensor],
     an expert grid dim, per-expert scales apply in the accumulator epilogue,
     and the same activation modes are supported — fp lhs (weight-only, the
     MoE expert-einsum default), in-kernel OVP quantization when `a_dtype` +
-    `act_scale` are set, or pre-quantized codes. Any dims left of (E, C, K)
-    fold into the batch grid dim.
+    `act_scale` (or the constant `static_act_scale`) are set, or
+    pre-quantized codes. Any dims left of (E, C, K) fold into the batch
+    grid dim.
     """
     e, n = w.data.shape[0], w.data.shape[-1]
     sw = _expert_col_scale(w.scale, e, n)
+    static = False
     if isinstance(x, QuantizedTensor):
         a_mode = "codes4" if x.is_packed else "codes8"
         a4, lead = _as_4d(x.data)
         sa4 = _expert_row_scale(x.scale, x.data)
         a_dtype = x.normal_dtype
     elif a_dtype is not None:
-        if act_scale is None:
+        if static_act_scale is not None:
+            a_mode = "quantize"
+            a4, lead = _as_4d(x)
+            sa4 = jnp.asarray(static_act_scale,
+                              jnp.float32).reshape(1, 1, 1)
+            static = True
+        elif act_scale is None:
             raise ValueError("in-kernel activation quantization needs an "
-                             "act_scale (per-tensor or per-slot)")
-        a_mode = "quantize"
-        a4, lead = _as_4d(x)
-        sa4 = _expert_row_scale(act_scale, x)
+                             "act_scale (per-tensor or per-slot) or a "
+                             "static_act_scale constant")
+        else:
+            a_mode = "quantize"
+            a4, lead = _as_4d(x)
+            sa4 = _expert_row_scale(act_scale, x)
     else:
         a_mode = "fp"
         a4, lead = _as_4d(x)
         sa4 = jnp.ones(a4.shape[:-1] + (1,), jnp.float32)
         a_dtype = w.normal_dtype
     out = _grouped_padded(a4, sa4, w.data, sw, w_dtype=w.normal_dtype,
-                          a_mode=a_mode, a_dtype=a_dtype,
+                          a_mode=a_mode, a_dtype=a_dtype, a_static=static,
                           out_dtype=out_dtype, interpret=interpret,
                           bm=bm, bn=bn, bk=bk)
     return out.reshape(*lead, *out.shape[-3:]) if lead else out[0]

@@ -53,6 +53,11 @@ from repro.core.datatypes import (ABFLOAT_FOR_NORMAL, ID4, ID8, NORMAL_MAX,
 #               scale (online W4A4 / W8A8 serving: no packed tensor in HBM)
 #   codes4    — packed nibble codes, decoded in the prologue
 #   codes8    — int8 OVP codes (one per byte), decoded in the prologue
+# "quantize" has a *static-scale* twin (`a_static=True`, the
+# `_*_kernel_static` bodies): the calibrated per-site scale arrives as a
+# single (1, 1) scalar operand instead of the (B, M, 1) per-row stream,
+# so one compiled kernel serves every calibrated site and no per-step 3σ
+# std runs upstream.
 ACT_MODES = ("fp", "quantize", "codes4", "codes8")
 
 
@@ -246,6 +251,49 @@ def _fused_mm_kernel(a_ref, sa_ref, wp_ref, sw_ref, o_ref, *,
         o_ref[0] = o_ref[0] * sa_ref[0] * sw_ref[...]
 
 
+def _act_tile_planes_static(a: jax.Array, a_dtype: str,
+                            a_spec: AbfloatSpec, s: jax.Array):
+    """Static-scale activation prologue: OVP fake-quant at the calibrated
+    scalar `s`. One reciprocal per tile instead of a per-row divide, and
+    no (bm, 1) scale tile is ever streamed."""
+    u = a.astype(jnp.float32) * (1.0 / s)
+    return quantize_pair_planes(u[:, 0::2], u[:, 1::2], a_dtype, a_spec)
+
+
+def _fused_mm_kernel_static(a_ref, sa_ref, wp_ref, sw_ref, o_ref, *,
+                            w_dtype: str, w_spec: AbfloatSpec,
+                            a_dtype: str, a_spec: AbfloatSpec):
+    """Static-scale twin of `_fused_mm_kernel` (a_mode="quantize" only).
+
+    The calibrated activation scale arrives as ONE (1, 1) scalar operand
+    instead of the (B, M, 1) per-row stream: a single word replaces a
+    whole operand plane, one compiled kernel serves every calibrated
+    site/scale, and — upstream — no per-step 3σ std is ever computed.
+    This is the serving fast path for `act_scale_mode="static"`.
+
+    a_ref  (1, bm, bk)   fp tile, quantized in-kernel at the scalar scale
+    sa_ref (1, 1)        the calibrated scale (same word on every tile)
+    wp_ref (bk2, bn)     packed nibbles, or (bk, bn) int8 OVP codes
+    sw_ref (1, bn)       per-output-channel weight scale
+    o_ref  (1, bm, bn)   fp32 accumulator; scales applied on the last K step
+    """
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = sa_ref[0, 0]
+    w_even, w_odd = _weight_tile_planes(wp_ref[...], w_dtype, w_spec)
+    a_even, a_odd = _act_tile_planes_static(a_ref[0], a_dtype, a_spec, s)
+
+    o_ref[0] += (
+        jnp.dot(a_even, w_even, preferred_element_type=jnp.float32)
+        + jnp.dot(a_odd, w_odd, preferred_element_type=jnp.float32))
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _epilogue():
+        o_ref[0] = o_ref[0] * (s * sw_ref[...])
+
+
 # --------------------------------------------------------------------------
 # Grouped (per-expert) kernel body: one expert grid dim over stacked weights
 # --------------------------------------------------------------------------
@@ -282,6 +330,37 @@ def _grouped_mm_kernel(a_ref, sa_ref, wp_ref, sw_ref, o_ref, *,
         o_ref[0, 0] = o_ref[0, 0] * sa_ref[0, 0] * sw_ref[0]
 
 
+def _grouped_mm_kernel_static(a_ref, sa_ref, wp_ref, sw_ref, o_ref, *,
+                              w_dtype: str, w_spec: AbfloatSpec,
+                              a_dtype: str, a_spec: AbfloatSpec):
+    """Static-scale twin of `_grouped_mm_kernel` (a_mode="quantize" only):
+    same scalar-operand prologue/epilogue as `_fused_mm_kernel_static`,
+    on the (batch, expert, M, N, K) grid.
+
+    a_ref  (1, 1, bm, bk)  one expert's dispatched-slot fp tile
+    sa_ref (1, 1, 1)       the calibrated scale (same word on every tile)
+    wp_ref (1, w_blk, bn)  this expert's packed weight tile
+    sw_ref (1, 1, bn)      this expert's per-output-channel scale
+    o_ref  (1, 1, bm, bn)  fp32 accumulator, scales on the last K step
+    """
+    @pl.when(pl.program_id(4) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = sa_ref[0, 0, 0]
+    w_even, w_odd = _weight_tile_planes(wp_ref[0], w_dtype, w_spec)
+    a_even, a_odd = _act_tile_planes_static(a_ref[0, 0], a_dtype, a_spec,
+                                            s)
+
+    o_ref[0, 0] += (
+        jnp.dot(a_even, w_even, preferred_element_type=jnp.float32)
+        + jnp.dot(a_odd, w_odd, preferred_element_type=jnp.float32))
+
+    @pl.when(pl.program_id(4) == pl.num_programs(4) - 1)
+    def _epilogue():
+        o_ref[0, 0] = o_ref[0, 0] * (s * sw_ref[0])
+
+
 # --------------------------------------------------------------------------
 # pallas_call builder
 # --------------------------------------------------------------------------
@@ -291,6 +370,7 @@ def fused_ovp_matmul_kernel(a: jax.Array, a_scale: jax.Array,
                             a_mode: str = "fp", a_dtype: str = "int4",
                             w_spec: AbfloatSpec | None = None,
                             a_spec: AbfloatSpec | None = None,
+                            a_static: bool = False,
                             bm: int = 128, bn: int = 128, bk: int = 256,
                             interpret: bool = False) -> jax.Array:
     """a: (B, M, Ka); a_scale: (B, M, 1); w_data: (Kw, N); w_scale: (1, N).
@@ -299,6 +379,11 @@ def fused_ovp_matmul_kernel(a: jax.Array, a_scale: jax.Array,
     K/2 for packed nibbles and K for int8 codes. Returns (B, M, N) fp32
     with both scales applied. Shapes must divide the (clamped) blocks —
     `repro.kernels.ops` owns padding.
+
+    `a_static` (with a_mode="quantize") switches to the static prologue:
+    `a_scale` is a single (1, 1) calibrated scalar instead of the
+    (B, M, 1) per-row plane, and the kernel reads that one word — one
+    compiled kernel serves every calibrated site/scale.
     """
     assert a_mode in ACT_MODES, a_mode
     w_spec = ABFLOAT_FOR_NORMAL[w_dtype] if w_spec is None else w_spec
@@ -316,15 +401,25 @@ def fused_ovp_matmul_kernel(a: jax.Array, a_scale: jax.Array,
     assert ka % a_blk == 0 and m % bm == 0 and n % bn == 0 \
         and kw % w_blk == 0, (a.shape, w_data.shape, (bm, bn, bk2))
 
-    kernel = functools.partial(_fused_mm_kernel, w_dtype=w_dtype,
-                               w_spec=w_spec, a_mode=a_mode,
-                               a_dtype=a_dtype, a_spec=a_spec)
+    if a_static:
+        assert a_mode == "quantize", \
+            "static activation scales imply the in-kernel quantize prologue"
+        assert a_scale.shape == (1, 1), a_scale.shape
+        kernel = functools.partial(_fused_mm_kernel_static,
+                                   w_dtype=w_dtype, w_spec=w_spec,
+                                   a_dtype=a_dtype, a_spec=a_spec)
+        sa_spec = pl.BlockSpec((1, 1), lambda bb, i, j, kk: (0, 0))
+    else:
+        kernel = functools.partial(_fused_mm_kernel, w_dtype=w_dtype,
+                                   w_spec=w_spec, a_mode=a_mode,
+                                   a_dtype=a_dtype, a_spec=a_spec)
+        sa_spec = pl.BlockSpec((1, bm, 1), lambda bb, i, j, kk: (bb, i, 0))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bm, a_blk), lambda bb, i, j, kk: (bb, i, kk)),
-            pl.BlockSpec((1, bm, 1), lambda bb, i, j, kk: (bb, i, 0)),
+            sa_spec,
             pl.BlockSpec((w_blk, bn), lambda bb, i, j, kk: (kk, j)),
             pl.BlockSpec((1, bn), lambda bb, i, j, kk: (0, j)),
         ],
@@ -344,6 +439,7 @@ def grouped_ovp_matmul_kernel(a: jax.Array, a_scale: jax.Array,
                               a_mode: str = "fp", a_dtype: str = "int4",
                               w_spec: AbfloatSpec | None = None,
                               a_spec: AbfloatSpec | None = None,
+                              a_static: bool = False,
                               bm: int = 128, bn: int = 128, bk: int = 256,
                               interpret: bool = False) -> jax.Array:
     """a: (B, E, M, Ka); a_scale: (B, E, M, 1); w_data: (E, Kw, N);
@@ -353,6 +449,10 @@ def grouped_ovp_matmul_kernel(a: jax.Array, a_scale: jax.Array,
     rides the grid like the batch dim, so per-expert MoE einsums hit one
     pallas_call with no XLA broadcast of the stacked weights. Shapes must
     divide the (clamped) blocks — `repro.kernels.ops` owns padding.
+
+    `a_static` (with a_mode="quantize") takes the static prologue:
+    `a_scale` is a single (1, 1, 1) calibrated scalar instead of the
+    per-slot plane, exactly as in `fused_ovp_matmul_kernel`.
     """
     assert a_mode in ACT_MODES, a_mode
     w_spec = ABFLOAT_FOR_NORMAL[w_dtype] if w_spec is None else w_spec
@@ -371,17 +471,28 @@ def grouped_ovp_matmul_kernel(a: jax.Array, a_scale: jax.Array,
     assert ka % a_blk == 0 and m % bm == 0 and n % bn == 0 \
         and kw % w_blk == 0, (a.shape, w_data.shape, (bm, bn, bk2))
 
-    kernel = functools.partial(_grouped_mm_kernel, w_dtype=w_dtype,
-                               w_spec=w_spec, a_mode=a_mode,
-                               a_dtype=a_dtype, a_spec=a_spec)
+    if a_static:
+        assert a_mode == "quantize", \
+            "static activation scales imply the in-kernel quantize prologue"
+        assert a_scale.shape == (1, 1, 1), a_scale.shape
+        kernel = functools.partial(_grouped_mm_kernel_static,
+                                   w_dtype=w_dtype, w_spec=w_spec,
+                                   a_dtype=a_dtype, a_spec=a_spec)
+        sa_spec = pl.BlockSpec((1, 1, 1),
+                               lambda bb, ee, i, j, kk: (0, 0, 0))
+    else:
+        kernel = functools.partial(_grouped_mm_kernel, w_dtype=w_dtype,
+                                   w_spec=w_spec, a_mode=a_mode,
+                                   a_dtype=a_dtype, a_spec=a_spec)
+        sa_spec = pl.BlockSpec((1, 1, bm, 1),
+                               lambda bb, ee, i, j, kk: (bb, ee, i, 0))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bm, a_blk),
                          lambda bb, ee, i, j, kk: (bb, ee, i, kk)),
-            pl.BlockSpec((1, 1, bm, 1),
-                         lambda bb, ee, i, j, kk: (bb, ee, i, 0)),
+            sa_spec,
             pl.BlockSpec((1, w_blk, bn),
                          lambda bb, ee, i, j, kk: (ee, kk, j)),
             pl.BlockSpec((1, 1, bn), lambda bb, ee, i, j, kk: (ee, 0, j)),

@@ -10,10 +10,23 @@ runs the continuous-batching engine on a synthetic request stream.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
       --quant olive_mixed_w48 \
       --policy-rules "layers/1/mlp/*=olive_w8a8" --requests 16
+
+Static calibrated activation scales (docs/calibration.md) — one command
+calibrates on a synthetic batch, saves the artifact, and serves on it:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
+      --quant olive_w4a4 --calibrate --calibration /tmp/calib.json \
+      --requests 8
+
+Re-serving from a saved artifact skips the calibration pass:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
+      --quant olive_w4a4 --calibration /tmp/calib.json --requests 8
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -22,6 +35,8 @@ import numpy as np
 
 from repro import backends
 from repro.configs import get_config
+from repro.core.calibration import (CalibrationArtifact, apply_calibration,
+                                    calibrate_model)
 from repro.core.policy import (PRESETS, PROGRAM_PRESETS, get_policy,
                                get_program, parse_rules)
 from repro.core.qlinear import quantize_params
@@ -46,12 +61,24 @@ def main():
                     help="quantized-matmul execution backend "
                          "(default: the policy's; CPU smoke runs can use "
                          "pallas_interpret to exercise the fused kernel)")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="CalibrationArtifact JSON: serve with static "
+                         "calibrated activation scales "
+                         "(act_scale_mode='static' on every quantized "
+                         "site; see docs/calibration.md)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="calibrate-then-serve: run the §3.4 calibration "
+                         "pass on a synthetic batch first, save the "
+                         "artifact to --calibration PATH, then serve on "
+                         "it (one command end to end)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.calibrate and not args.calibration:
+        ap.error("--calibrate needs --calibration PATH to save into")
 
     cfg = get_config(args.arch)
     if args.quant in PROGRAM_PRESETS or args.policy_rules:
@@ -61,15 +88,45 @@ def main():
             policy = policy.with_rules(parse_rules(args.policy_rules))
     else:
         policy = get_policy(None if args.quant == "fp" else args.quant)
-    # CPU engine: weight + KV quant only (replace_all rewrites every rule
-    # of a program, or the one flat policy)
-    policy = policy.replace_all(compute_dtype="float32", abits=0)
+    # CPU engine default: weight + KV quant only (replace_all rewrites
+    # every rule of a program, or the one flat policy). A calibration
+    # artifact keeps the preset's abits — static scales exist precisely to
+    # serve quantized activations without per-step scale computation.
+    if args.calibration:
+        policy = policy.replace_all(compute_dtype="float32",
+                                    act_scale_mode="static")
+    else:
+        policy = policy.replace_all(compute_dtype="float32", abits=0)
     if args.backend is not None:
         policy = policy.with_backend(args.backend)
     print(f"[serve] quantized-matmul backend(s): "
           f"{', '.join(sorted(policy.backends()))}")
     model = build_model(cfg, policy, remat=False)
     params = model.init(jax.random.PRNGKey(args.seed), dtype=jnp.float32)
+
+    if args.calibration:
+        if args.calibrate:
+            rng = np.random.default_rng(args.seed)
+            batch = {"tokens": jnp.asarray(rng.integers(
+                0, cfg.vocab, size=(2, 64)).astype(np.int32))}
+            t0 = time.time()
+            artifact = calibrate_model(model, params, [batch])
+            artifact.save(args.calibration)
+            print(f"[serve] calibrated {len(artifact.sites())} sites in "
+                  f"{time.time()-t0:.1f}s -> {args.calibration}")
+        else:
+            if not os.path.exists(args.calibration):
+                ap.error(f"--calibration {args.calibration} does not "
+                         f"exist; pass --calibrate to create it")
+            artifact = CalibrationArtifact.load(args.calibration)
+            print(f"[serve] loaded {len(artifact.sites())} static scales "
+                  f"from {args.calibration}")
+        policy = apply_calibration(policy, artifact)
+        # per-layer scale rules address layers/<i>: rebuild so the model
+        # unrolls to the layout the scales were calibrated on
+        model = build_model(cfg, policy, remat=False)
+        params = model.adapt_params(params)
+
     if policy.enabled:
         t0 = time.time()
         params = quantize_params(params, policy)
@@ -97,6 +154,9 @@ def main():
         print(f"[serve] mean latency {np.mean(lat)*1e3:.0f} ms")
     if ttft:
         print(f"[serve] mean TTFT {np.mean(ttft)*1e3:.0f} ms")
+    if args.calibration:
+        # the whole point of static serving: zero dynamic resolutions
+        print(f"[serve] act-scale resolutions: {backends.act_scale_stats()}")
 
 
 if __name__ == "__main__":

@@ -54,26 +54,42 @@ def microbatches_for(cfg: ArchConfig, shape: ShapeCfg) -> int:
     return 8 if big else 4
 
 
-def serve_policy(quant: str, n_layers: int = 0):
+def serve_policy(quant: str, n_layers: int = 0, calibration=None):
     """Policy (or policy program, for the mixed presets) for one serve
-    cell. Program presets need the layer count to address first/last."""
+    cell. Program presets need the layer count to address first/last.
+
+    `calibration` — a `CalibrationArtifact` or a path to one — switches
+    every rule to `act_scale_mode="static"` and bakes the artifact's
+    per-site scales in (`apply_calibration`), so the cell's quantized
+    matmuls run the static prologue with zero per-step scale computation
+    (see docs/calibration.md).
+    """
     from repro.core.policy import PROGRAM_PRESETS, get_program
     if quant in PROGRAM_PRESETS:
-        return get_program(quant, n_layers=n_layers) \
+        policy = get_program(quant, n_layers=n_layers) \
             .replace_all(compute_dtype="bfloat16")
-    if quant == "none":
-        return QuantPolicy(compute_dtype="bfloat16")
-    if quant == "olive":          # paper-faithful W4A4 serving
-        return QuantPolicy(method="olive", wbits=4, abits=4,
-                           compute_dtype="bfloat16")
-    if quant == "olive_kv":       # beyond-paper: + OVP int4 KV cache
-        return QuantPolicy(method="olive", wbits=4, abits=4, kv_bits=4,
-                           compute_dtype="bfloat16")
-    if quant == "olive_w8":
-        return QuantPolicy(method="olive", wbits=8, abits=8,
-                           w_normal_dtype="int8",
-                           compute_dtype="bfloat16")
-    raise ValueError(quant)
+    elif quant == "none":
+        policy = QuantPolicy(compute_dtype="bfloat16")
+    elif quant == "olive":        # paper-faithful W4A4 serving
+        policy = QuantPolicy(method="olive", wbits=4, abits=4,
+                             compute_dtype="bfloat16")
+    elif quant == "olive_kv":     # beyond-paper: + OVP int4 KV cache
+        policy = QuantPolicy(method="olive", wbits=4, abits=4, kv_bits=4,
+                             compute_dtype="bfloat16")
+    elif quant == "olive_w8":
+        policy = QuantPolicy(method="olive", wbits=8, abits=8,
+                             w_normal_dtype="int8",
+                             compute_dtype="bfloat16")
+    else:
+        raise ValueError(quant)
+    if calibration is not None:
+        from repro.core.calibration import (CalibrationArtifact,
+                                            apply_calibration)
+        if isinstance(calibration, str):
+            calibration = CalibrationArtifact.load(calibration)
+        policy = apply_calibration(
+            policy.replace_all(act_scale_mode="static"), calibration)
+    return policy
 
 
 def _batch_spec(mesh, rules, cfg: ArchConfig, shape: ShapeCfg,
@@ -153,13 +169,14 @@ def build_train_cell(arch: str, shape_name: str, mesh: Mesh, *,
 
 
 def build_serve_cell(arch: str, shape_name: str, mesh: Mesh, *,
-                     quant: str = "none") -> Cell:
+                     quant: str = "none", calibration=None) -> Cell:
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     assert shape.kind in ("prefill", "decode")
     long_ctx = shape.name == "long_500k"
     rules = make_rules(cfg, mesh, long_context=long_ctx)
-    policy = serve_policy(quant, n_layers=cfg.n_layers)
+    policy = serve_policy(quant, n_layers=cfg.n_layers,
+                          calibration=calibration)
     model = build_model(cfg, policy, remat=False)
 
     params_sds = jax.eval_shape(
@@ -209,18 +226,20 @@ def build_serve_cell(arch: str, shape_name: str, mesh: Mesh, *,
         mesh=mesh, rules=rules,
         model_flops=model_flops,
         n_chips=mesh.devices.size,
-        note=f"quant={quant}, kv_bits={policy.kv_bits}",
+        note=f"quant={quant}, kv_bits={policy.kv_bits}"
+             + (", static_act_scales" if calibration is not None else ""),
     )
 
 
 def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
-               quant: str = "none",
+               quant: str = "none", calibration=None,
                n_microbatches: Optional[int] = None) -> Cell:
     shape = get_shape(shape_name)
     if shape.kind == "train":
         return build_train_cell(arch, shape_name, mesh,
                                 n_microbatches=n_microbatches)
-    return build_serve_cell(arch, shape_name, mesh, quant=quant)
+    return build_serve_cell(arch, shape_name, mesh, quant=quant,
+                            calibration=calibration)
 
 
 def lower_cell(cell: Cell):

@@ -32,8 +32,19 @@ def rp(policy: PolicyLike, site: str, leaf: str = "") -> QuantPolicy:
     alone, which the flag-compat program buckets by substring exactly like
     the seed heuristics did.
     """
+    return rps(policy, site, leaf)[0]
+
+
+def rps(policy: PolicyLike, site: str, leaf: str = ""):
+    """(resolved policy, full site address) for one weight site.
+
+    Unpacks straight into `qlinear.linear(x, w, b, *rps(...))`: the site
+    rides along so the calibration tape records matmul inputs under the
+    exact address the program resolves, and so a calibrated static scale
+    (carried by the resolved policy) is attributable on a miss.
+    """
     full = f"{site}/{leaf}" if (site and leaf) else (site or leaf)
-    return policy.resolve(full)
+    return policy.resolve(full), full
 
 
 def _init(key, shape, scale=None, dtype=jnp.float32):
@@ -467,13 +478,13 @@ def attention_forward(p, x, positions, cfg, policy: PolicyLike, *,
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     src = x if kv_x is None else kv_x
 
-    q = qlinear.linear(x, p["wq"], p.get("bq"), rp(policy, site, "wq"))
+    q = qlinear.linear(x, p["wq"], p.get("bq"), *rps(policy, site, "wq"))
     q = q.reshape(b, t, nh, hd)
     if mode == "decode" and kv_x is None:
         k_new = qlinear.linear(x, p["wk"], p.get("bk"),
-                               rp(policy, site, "wk"))
+                               *rps(policy, site, "wk"))
         v_new = qlinear.linear(x, p["wv"], p.get("bv"),
-                               rp(policy, site, "wv"))
+                               *rps(policy, site, "wv"))
         k_new = k_new.reshape(b, t, nkv, hd)
         v_new = v_new.reshape(b, t, nkv, hd)
         if use_rope:
@@ -489,8 +500,8 @@ def attention_forward(p, x, positions, cfg, policy: PolicyLike, *,
         out = decode_attention(q, cache, positions[:, 0] * 0
                                + cache_len(cache) - 1)
     else:
-        k = qlinear.linear(src, p["wk"], p.get("bk"), rp(policy, site, "wk"))
-        v = qlinear.linear(src, p["wv"], p.get("bv"), rp(policy, site, "wv"))
+        k = qlinear.linear(src, p["wk"], p.get("bk"), *rps(policy, site, "wk"))
+        v = qlinear.linear(src, p["wv"], p.get("bv"), *rps(policy, site, "wv"))
         s_len = src.shape[1]
         k = k.reshape(b, s_len, nkv, hd)
         v = v.reshape(b, s_len, nkv, hd)
@@ -519,7 +530,7 @@ def attention_forward(p, x, positions, cfg, policy: PolicyLike, *,
                 cache = cache_write(cache, k, v,
                                     jnp.zeros((b,), jnp.int32))
     out = out.reshape(b, t, nh * hd)
-    out = qlinear.linear(out, p["wo"], None, rp(policy, site, "wo"))
+    out = qlinear.linear(out, p["wo"], None, *rps(policy, site, "wo"))
     return logical(out, "batch", "seq", "embed"), cache
 
 
@@ -541,11 +552,11 @@ def swiglu_params(key, d_model, d_ff, dtype=jnp.float32):
 
 
 def swiglu(p, x, policy: PolicyLike, site="mlp"):
-    g = qlinear.linear(x, p["wg"], None, rp(policy, site, "wg"))
-    u = qlinear.linear(x, p["wu"], None, rp(policy, site, "wu"))
+    g = qlinear.linear(x, p["wg"], None, *rps(policy, site, "wg"))
+    u = qlinear.linear(x, p["wu"], None, *rps(policy, site, "wu"))
     h = jax.nn.silu(g) * u
     h = logical(h, "batch", "seq", "ffn")
-    return logical(qlinear.linear(h, p["wd"], None, rp(policy, site, "wd")),
+    return logical(qlinear.linear(h, p["wd"], None, *rps(policy, site, "wd")),
                    "batch", "seq", "embed")
 
 
@@ -559,9 +570,9 @@ def gelu_mlp_params(key, d_model, d_ff, dtype=jnp.float32):
 
 def gelu_mlp(p, x, policy: PolicyLike, site="mlp"):
     h = jax.nn.gelu(qlinear.linear(x, p["wi"], p["bi"],
-                                   rp(policy, site, "wi")))
+                                   *rps(policy, site, "wi")))
     h = logical(h, "batch", "seq", "ffn")
-    return qlinear.linear(h, p["wd"], p["bd"], rp(policy, site, "wd"))
+    return qlinear.linear(h, p["wd"], p["bd"], *rps(policy, site, "wd"))
 
 
 # ==========================================================================
@@ -743,11 +754,11 @@ def _rglru_core(p, u, h0, policy: PolicyLike, site="rec"):
     associative scan: h_t = a_t ⊙ h_{t-1} + b_t."""
     rt = jax.nn.sigmoid(
         qlinear.linear(u, p["w_rec_gate"], None,
-                       rp(policy, site, "w_rec_gate"))
+                       *rps(policy, site, "w_rec_gate"))
         .astype(jnp.float32))
     it = jax.nn.sigmoid(
         qlinear.linear(u, p["w_inp_gate"], None,
-                       rp(policy, site, "w_inp_gate"))
+                       *rps(policy, site, "w_inp_gate"))
         .astype(jnp.float32))
     log_a = -8.0 * jax.nn.softplus(p["a_param"]) * rt  # log a_t ≤ 0
     a = jnp.exp(log_a)
@@ -769,15 +780,15 @@ def rglru_forward(p, x, cfg, policy, *, state=None, mode="train",
     """Griffin recurrent block. state = {"h": (B,Dr), "conv": (B,3,Dr)}."""
     b, t, _ = x.shape
     gate = jax.nn.gelu(qlinear.linear(x, p["wgate"], None,
-                                      rp(policy, site, "wgate")))
-    u = qlinear.linear(x, p["wx"], None, rp(policy, site, "wx"))
+                                      *rps(policy, site, "wgate")))
+    u = qlinear.linear(x, p["wx"], None, *rps(policy, site, "wx"))
     conv_state = state["conv"] if state is not None else None
     u, new_conv = conv1d_causal(p["conv"], u, conv_state)
     h0 = state["h"] if state is not None else jnp.zeros(
         (b, u.shape[-1]), jnp.float32)
     h = _rglru_core(p, u, h0, policy, site=site)
     y = qlinear.linear((h.astype(x.dtype) * gate), p["wo"], None,
-                       rp(policy, site, "wo"))
+                       *rps(policy, site, "wo"))
     new_state = None
     if state is not None:
         new_state = {"h": h[:, -1].astype(jnp.float32), "conv": new_conv}
@@ -922,18 +933,18 @@ def mlstm_forward(p, x, cfg, policy, *, state=None, mode="train",
                   site="mlstm"):
     b, t, d = x.shape
     nh = cfg.n_heads
-    up = qlinear.linear(x, p["w_up"], None, rp(policy, site, "w_up"))
+    up = qlinear.linear(x, p["w_up"], None, *rps(policy, site, "w_up"))
     xm, z = jnp.split(up, 2, axis=-1)
     conv_state = state["conv"] if state is not None else None
     xc, new_conv = conv1d_causal(p["conv"], jax.nn.silu(xm), conv_state)
     d_inner = xm.shape[-1]
     dh = d_inner // nh
     q = qlinear.linear(xc, p["wq"], None,
-                       rp(policy, site, "wq")).reshape(b, t, nh, dh)
+                       *rps(policy, site, "wq")).reshape(b, t, nh, dh)
     k = qlinear.linear(xc, p["wk"], None,
-                       rp(policy, site, "wk")).reshape(b, t, nh, dh)
+                       *rps(policy, site, "wk")).reshape(b, t, nh, dh)
     v = qlinear.linear(xm, p["wv"], None,
-                       rp(policy, site, "wv")).reshape(b, t, nh, dh)
+                       *rps(policy, site, "wv")).reshape(b, t, nh, dh)
     i_pre = (xc.astype(jnp.float32) @ p["w_igate"].astype(jnp.float32)
              + p["igate_bias"])
     f_pre = jax.nn.log_sigmoid(
@@ -953,7 +964,7 @@ def mlstm_forward(p, x, cfg, policy, *, state=None, mode="train",
     hout = hout.reshape(b, t, d_inner).astype(x.dtype)
     hout = rms_norm(hout, p["outnorm"])
     y = qlinear.linear(hout * jax.nn.silu(z), p["w_down"], None,
-                       rp(policy, site, "w_down"))
+                       *rps(policy, site, "w_down"))
     new_state = None
     if state is not None:
         new_state = {"mem": new_mem, "conv": new_conv}
@@ -1028,11 +1039,11 @@ def _slstm_core(p, zi, ii, fi, oi, n_heads, state):
 def slstm_forward(p, x, cfg, policy, *, state=None, mode="train",
                   site="slstm"):
     b, t, d = x.shape
-    zi = qlinear.linear(x, p["wz"], None, rp(policy, site, "wz"))
-    ii = qlinear.linear(x, p["wi_gate"], None, rp(policy, site, "wi_gate"))
+    zi = qlinear.linear(x, p["wz"], None, *rps(policy, site, "wz"))
+    ii = qlinear.linear(x, p["wi_gate"], None, *rps(policy, site, "wi_gate"))
     fi = qlinear.linear(x, p["wf_gate"], None,
-                        rp(policy, site, "wf_gate")) + p["fgate_bias"]
-    oi = qlinear.linear(x, p["wo_gate"], None, rp(policy, site, "wo_gate"))
+                        *rps(policy, site, "wf_gate")) + p["fgate_bias"]
+    oi = qlinear.linear(x, p["wo_gate"], None, *rps(policy, site, "wo_gate"))
     st = state["mem"] if state is not None else {
         "c": jnp.zeros((b, d), jnp.float32),
         "n": jnp.ones((b, d), jnp.float32),
@@ -1042,8 +1053,8 @@ def slstm_forward(p, x, cfg, policy, *, state=None, mode="train",
     hs = hs.astype(x.dtype)
     # post up-projection MLP (xLSTM sLSTM block, pf = 4/3)
     u = jax.nn.gelu(qlinear.linear(hs, p["mlp"]["wu2"], None,
-                                   rp(policy, site, "mlp/wu2")))
-    y = qlinear.linear(u, p["mlp"]["wd2"], None, rp(policy, site, "mlp/wd2"))
+                                   *rps(policy, site, "mlp/wu2")))
+    y = qlinear.linear(u, p["mlp"]["wd2"], None, *rps(policy, site, "mlp/wd2"))
     new_state = {"mem": new_mem} if state is not None else None
     return logical(y, "batch", "seq", "embed"), new_state
 

@@ -316,7 +316,8 @@ class Model:
             pe = qlinear.linear(batch["patch_embeds"].astype(cdt),
                                 params["frontend_proj"]["w_in"],
                                 params["frontend_proj"]["b_in"],
-                                pol.resolve("frontend_proj/w_in"))
+                                pol.resolve("frontend_proj/w_in"),
+                                site="frontend_proj/w_in")
             x = jnp.concatenate([pe, x], axis=1)
         return logical(x, "batch", "seq", "embed")
 
@@ -328,7 +329,8 @@ class Model:
         x = qlinear.linear(frames.astype(cdt),
                            params["frontend_proj"]["w_in"],
                            params["frontend_proj"]["b_in"],
-                           pol.resolve("frontend_proj/w_in"))
+                           pol.resolve("frontend_proj/w_in"),
+                           site="frontend_proj/w_in")
         b, s, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
 
@@ -442,8 +444,8 @@ class Model:
         head = params["lm_head"]["w_out"]
         if cfg.tie_embeddings:
             head = params["embed"]["table"].T
-        logits = qlinear.qmatmul(x, head, pol.resolve("lm_head/w_out")) \
-            .astype(jnp.float32)
+        logits = qlinear.qmatmul(x, head, pol.resolve("lm_head/w_out"),
+                                 site="lm_head/w_out").astype(jnp.float32)
         if cfg.padded_vocab != cfg.vocab:
             # mask pad columns (elementwise along the sharded vocab dim)
             col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,

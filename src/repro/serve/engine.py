@@ -2,8 +2,11 @@
 
 Requests queue up; free slots take the next request (prefill), all active
 slots step together (one batched decode). Slots free on EOS / max-tokens.
-Weights can be OliVe-PTQ-quantized (`quantize_params`) and the KV cache
-OVP-packed (policy.kv_bits=4) — the paper's serving story end to end.
+Weights can be OliVe-PTQ-quantized (`quantize_params`), the KV cache
+OVP-packed (policy.kv_bits=4), and activation quantization can run on
+calibrated *static* scales (`EngineCfg.calibration`, validated up front —
+zero per-step scale computations; see docs/calibration.md) — the paper's
+serving story end to end.
 """
 from __future__ import annotations
 
@@ -18,6 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import backends
+from repro.core.calibration import (CalibrationArtifact,
+                                    MissingStaticScaleError,
+                                    apply_calibration, static_scale_misses,
+                                    uses_static_scales)
 from repro.models.model import Model
 
 
@@ -42,6 +49,13 @@ class EngineCfg:
     # quantized-matmul execution backend override; None keeps the model
     # policy's backend. Must name a `repro.backends` registry entry.
     backend: Optional[str] = None
+    # calibrated static activation scales (see docs/calibration.md): baked
+    # into the model policy at engine construction via `apply_calibration`.
+    # With `act_scale_mode="static"` anywhere in the policy, construction
+    # validates that EVERY static-mode quantized site has a scale —
+    # misses raise the machine-readable `MissingStaticScaleError` up
+    # front instead of mid-trace on the first prefill.
+    calibration: Optional[CalibrationArtifact] = None
 
 
 class ServingEngine:
@@ -56,10 +70,37 @@ class ServingEngine:
             # rule of a policy program)
             model = copy.copy(model)
             model.policy = model.policy.with_backend(cfg.backend)
+        if cfg.calibration is not None:
+            model = copy.copy(model)
+            model.policy = apply_calibration(model.policy, cfg.calibration)
         # resolve every rule's backend through the registry up front: a
         # typo'd backend name fails here, not mid-trace on first prefill
         for name in model.policy.backends():
             backends.get_backend(name)
+        # static-scale completeness: every quantized site that will
+        # quantize activations at a calibrated scale must actually have
+        # one. Fails at construction with the full site list (the
+        # mid-trace backstop can only name one site at a time).
+        if uses_static_scales(model.policy):
+            misses = static_scale_misses(params, model.policy)
+            if misses and cfg.calibration is not None \
+                    and not getattr(model, "unrolled", False) \
+                    and any(k.lower().startswith("layers/")
+                            for k in cfg.calibration.as_dict()):
+                # the artifact was calibrated on the unrolled layout but
+                # this model (and its quantized tree) is still scanned —
+                # its sites are blocks/<j>, so no layers/<i> key can ever
+                # match. Diagnose the layout, not just the misses.
+                raise ValueError(
+                    "calibration artifact keys address the unrolled "
+                    "layers/<i> layout but this model is scanned "
+                    "(blocks/<j> sites). Apply the artifact with "
+                    "apply_calibration() BEFORE build_model / "
+                    "quantize_params so the program unrolls the model "
+                    "(launch/serve.py does this; see docs/calibration.md)"
+                    ", or key the artifact by blocks/<j>")
+            if misses:
+                raise MissingStaticScaleError(misses)
         self.model = model
         self.params = params
         self.cfg = cfg
