@@ -1,9 +1,11 @@
 """Quantized-execution backend registry.
 
 One entry point — `dispatch(x, w, policy, act_scale)` — executes every
-quantized matmul in the repo. `policy.backend` names a registered
-`QuantizedMatmulBackend`; consumers (qlinear, model layers, the serving
-engine, benchmarks) never branch on backend strings themselves.
+quantized matmul in the repo, and its KV-cache twin
+`decode_attention(q, cache, pos, policy=...)` every serving decode-step
+attention. `policy.backend` names a registered `QuantizedMatmulBackend`;
+consumers (qlinear, model layers, the serving engine, benchmarks) never
+branch on backend strings themselves.
 
 Registered backends:
   xla              — dequantize-to-compute-dtype, XLA fuses decode into the
@@ -98,12 +100,11 @@ def dispatch_stats() -> Dict[str, int]:
     return dict(_DISPATCH_STATS)
 
 
-def _record(backend_name: str, reason: Optional[str], stacked: bool) -> None:
+def _record(backend_name: str, reason: Optional[str],
+            marker: str = "") -> None:
     tag = backend_name if reason is None \
         else f"{backend_name}->fallback:{reason}"
-    if stacked:
-        tag += "[stacked]"
-    _DISPATCH_STATS[tag] += 1
+    _DISPATCH_STATS[tag + marker] += 1
 
 
 def count_pallas_calls(fn, *args) -> int:
@@ -155,12 +156,36 @@ def dispatch(x: jax.Array, w, policy: QuantPolicy,
         return _dispatch_mixed_experts(x, w, policy, act_scale, precision)
     backend = get_backend(policy.backend)
     reason = backend.decline_reason(x, w, policy)
-    stacked = w.data.ndim > 2
-    _record(backend.name, reason, stacked)
+    _record(backend.name, reason, "[stacked]" if w.data.ndim > 2 else "")
     if reason is not None:
         backend = get_backend(backend.fallback)
     return backend.matmul(x, w, policy, act_scale=act_scale,
                           precision=precision)
+
+
+def decode_attention(q: jax.Array, cache, pos: jax.Array, *,
+                     policy: Optional[QuantPolicy] = None,
+                     window: int = 0, ring: int = 0) -> jax.Array:
+    """Execute single-token decode attention over a KV cache on the
+    policy's backend (q: (B, 1, H, D); pos: (B,)).
+
+    The KV-cache twin of `dispatch`: `policy.backend` (resolved per cache
+    site by `models/layers.py::decode_attention`) picks the registered
+    backend; the pallas backends run the fused decode-attention kernel —
+    packed OVP caches unpack/dequantize PER KV TILE inside the kernel, no
+    full-cache dequant ever traces — while `xla`/`reference` serve the
+    dense dequant-then-einsum path. Layouts a kernel backend declines
+    fall back (one hop) with the machine-readable reason recorded under a
+    `"...[decode_attn]"` key in `dispatch_stats()`. `policy=None` is the
+    dense XLA path (training / direct layer calls).
+    """
+    backend = get_backend(policy.backend if policy is not None else "xla")
+    reason = backend.decode_attn_decline_reason(q, cache)
+    _record(backend.name, reason, "[decode_attn]")
+    if reason is not None:
+        backend = get_backend(backend.fallback)
+    return backend.decode_attention(q, cache, pos, window=window,
+                                    ring=ring)
 
 
 def _dispatch_mixed_experts(x: jax.Array, w: MixedExpertQuant,
@@ -213,7 +238,8 @@ def _dispatch_mixed_experts(x: jax.Array, w: MixedExpertQuant,
 
 
 __all__ = ["QuantizedMatmulBackend", "register", "get_backend", "available",
-           "dispatch", "dispatch_stats", "reset_dispatch_stats",
+           "dispatch", "decode_attention", "dispatch_stats",
+           "reset_dispatch_stats",
            "act_scale_stats", "reset_act_scale_stats",
            "count_pallas_calls", "quantize_activation",
            "resolve_act_scale", "act_normal_dtype", "XlaBackend",

@@ -27,6 +27,16 @@ docs/backends.md point here):
 | `grouped_lhs_expert_mismatch`   | lhs expert dim != weight stack dim      |
 | `stacked_rank_gt_3`             | >3-D weight stacks are not kernelized   |
 
+Decode-attention decline codes (`decode_attn_decline_reason`, the fused
+KV-cache kernel — see docs/kv_cache.md):
+
+| code                      | meaning                                     |
+|---------------------------|---------------------------------------------|
+| `decode_q_tokens_gt_1`    | decode kernel serves one query token only   |
+| `decode_no_kv_cache`      | cache dict carries no k / k_data leaf       |
+| `decode_empty_cache`      | zero-length cache (nothing to attend)       |
+| `decode_head_dim_odd`     | even/odd plane split needs an even head dim |
+
 `dispatch_stats()` counter keys (trace-time, one per traced matmul site):
 
 | key shape                           | meaning                             |
@@ -34,6 +44,7 @@ docs/backends.md point here):
 | `"<backend>"`                       | served on the requested backend     |
 | `"<backend>->fallback:<reason>"`    | declined; ran on `backend.fallback` |
 | `"...[stacked]"` suffix             | the weight was a 3-D expert stack   |
+| `"...[decode_attn]"` suffix         | a decode-attention site (not matmul)|
 
 `act_scale_stats()` counter keys (this module): `"static"` /
 `"dynamic"` — how each traced quantized-activation matmul resolved its
@@ -147,6 +158,29 @@ class QuantizedMatmulBackend:
                act_scale: Optional[jax.Array] = None,
                precision=None) -> jax.Array:
         raise NotImplementedError
+
+    # -- decode attention over KV caches ----------------------------------
+    # True when `decode_attention` runs the fused Pallas kernel (packed
+    # nibbles unpacked per tile in VMEM, no full-cache dequant); the base
+    # implementation is the dense XLA path every backend can serve.
+    fuses_decode_attention: bool = False
+
+    def decode_attn_decline_reason(self, q, cache) -> Optional[str]:
+        """None when this backend can execute decode attention over this
+        (q, cache) layout; otherwise a stable reason code from the table
+        in this module's docstring. The dense base path serves anything."""
+        return None
+
+    def decode_attention(self, q: jax.Array, cache, pos: jax.Array, *,
+                         window: int = 0, ring: int = 0) -> jax.Array:
+        """Single-token attention over a KV cache (q: (B, 1, H, D),
+        pos: (B,)). Base = dense XLA path: dequantize/convert the whole
+        cache, then einsum — correct everywhere, but it rematerializes
+        the dense cache every step (the cost `kernels/decode_attn.py`
+        removes on the pallas backends)."""
+        from repro.kernels import decode_attn
+        return decode_attn.xla_decode_attention(q, cache, pos,
+                                                window=window, ring=ring)
 
     def __repr__(self):
         return f"<{type(self).__name__} {self.name!r}>"

@@ -21,6 +21,15 @@ single (1, 1) scalar operand in place of the whole per-row scale plane —
 one compiled kernel serves every calibrated site (see the `*_static`
 kernel bodies in `kernels/ovp_matmul.py`).
 
+Serving decode steps additionally route their ATTENTION through this
+backend: `decode_attention` runs the fused decode-attention kernel
+(`kernels/decode_attn.py`) that unpacks/dequantizes OVP-packed KV caches
+per tile in VMEM — no full-cache dequant, no dense rematerialization —
+with length/ring/window masking in-kernel from the traced position
+(fp caches take the same kernel minus the unpack phase). Unsupported
+(q, cache) layouts decline with a `decode_*` reason code and fall back
+to the dense XLA path (see docs/kv_cache.md).
+
 Decline-reason codes and the `dispatch_stats()` / `act_scale_stats()` key
 vocabulary are documented once, in `backends/base.py`'s module docstring.
 
@@ -36,7 +45,7 @@ import jax.numpy as jnp
 
 from repro.core.ovp import QuantizedTensor
 from repro.core.policy import QuantPolicy
-from repro.kernels import ops
+from repro.kernels import decode_attn, ops
 
 from .base import (QuantizedMatmulBackend, act_normal_dtype,
                    record_act_scale, resolve_act_scale)
@@ -102,6 +111,18 @@ class PallasBackend(QuantizedMatmulBackend):
         return ops.fused_ovp_matmul(x, w, a_dtype=a_dtype, act_scale=scale,
                                     static_act_scale=static, out_dtype=cdt,
                                     interpret=self.interpret)
+
+    # -- fused decode attention (kernels/decode_attn.py) ------------------
+    fuses_decode_attention = True
+
+    def decode_attn_decline_reason(self, q, cache) -> Optional[str]:
+        return decode_attn.decline_reason(q, cache)
+
+    def decode_attention(self, q: jax.Array, cache, pos: jax.Array, *,
+                         window: int = 0, ring: int = 0) -> jax.Array:
+        return decode_attn.fused_decode_attention(
+            q, cache, pos, window=window, ring=ring,
+            interpret=self.interpret)
 
 
 class PallasInterpretBackend(PallasBackend):

@@ -1,16 +1,20 @@
-"""Pallas TPU kernels for OliVe hot spots.
+"""Pallas TPU kernels for OliVe hot spots (inventory: README.md here).
 
-ovp_matmul — the unified fused OVP matmul: activation quantize/decode
-             prologue, split-K decode body, scale epilogue, batched lhs
-             (W4A16 / W4A4 / W8A8 / mixed, one pallas_call each)
-ovp_encode — standalone pairwise OVP encoder (KV packing, tests)
+ovp_matmul  — the unified fused OVP matmul: activation quantize/decode
+              prologue, split-K decode body, scale epilogue, batched lhs
+              (W4A16 / W4A4 / W8A8 / mixed, one pallas_call each)
+decode_attn — fused decode attention over (OVP-packed or fp) KV caches:
+              per-tile unpack in VMEM, online softmax, in-kernel
+              length/ring/window masking from the traced position; plus
+              the dense XLA fallback path (see docs/kv_cache.md)
+ovp_encode  — standalone pairwise OVP encoder (KV packing, tests)
 
 `ops` holds the jit'd wrappers; `ref` the pure-jnp oracles; kernels are
 validated on CPU with interpret=True across shape/dtype sweeps. Execution
 policy lives one level up in `repro.backends` — models never call these
 directly.
 """
-from . import ops, ref
+from . import decode_attn, ops, ref
 from .ovp_matmul import (fused_ovp_matmul_kernel, ovp_matmul_w4a16,
                          ovp_matmul_w4a4)
 from .ovp_encode import ovp_encode_pallas

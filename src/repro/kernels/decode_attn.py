@@ -1,0 +1,401 @@
+"""Fused decode-attention Pallas kernel over (optionally OVP-packed) KV
+caches — the serving decode path that makes the 4-bit cache pay for itself.
+
+The problem it fixes: the seed decode path dequantized the ENTIRE packed
+(B, max_len, Hkv, D) cache to bf16 every step, for every layer, before
+attention ran as a plain XLA einsum — rematerializing exactly the dense
+tensor the 4-bit cache was supposed to eliminate (the decode HBM term came
+back, plus a full-cache decode dispatch per layer per token).
+
+This kernel reads the packed `k_data`/`v_data` nibbles and the
+per-(token, head) scales straight from HBM and unpacks/dequantizes PER KV
+TILE in VMEM, inside the same kernel that consumes them:
+
+  grid      — (batch, kv_head, S/bs) with the kv-tile dim innermost, so
+              the (b, h) output block stays resident in VMEM while tiles
+              stream through; one `pallas_call` per layer per step.
+  prologue  — a packed tile decodes branch-free on the VPU (same
+              nibble-plane trick as `ovp_matmul`: even K-lanes in the high
+              nibbles, odd in the low, so no interleaving relayout is ever
+              needed); fp16/bf16 caches take the same kernel minus the
+              unpack phase (the planes are strided slices of the fp tile).
+  body      — online-softmax accumulation in f32: scores fold the
+              per-token K scale in (s = (q @ k_codes^T) * k_scl), the
+              probabilities fold the V scale (p * v_scl) so decoded code
+              planes feed the MXU directly.
+  masking   — length / ring / sliding-window validity is computed
+              IN-KERNEL from the traced `pos`, so ONE compiled kernel
+              serves every active-length mix in the batch (continuous
+              batching never retraces on request churn).
+  epilogue  — the accumulator normalizes by the softmax denominator on
+              the last tile.
+
+HBM read per decode step for the packed path drops ~4x vs the dequant
+path (1 byte per 2 values + one f32 scale per (token, head) vs 2-4 bytes
+per value), and the full-cache dequant materialization disappears.
+
+Outputs keep the even/odd plane layout (first D/2 lanes = even K-lanes);
+the public wrapper re-interleaves once on the (B, 1, H, D) result.
+
+`xla_decode_attention` below is the dense fallback (full-cache dequant +
+einsum) that non-kernel backends serve and declined layouts fall back to;
+`models/layers.py::decode_attention` routes between them through the
+backend registry (see docs/kv_cache.md for the decline vocabulary).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.datatypes import ABFLOAT_FOR_NORMAL
+from repro.core.ovp import ovp_decode_codes, unpack4
+from .ovp_matmul import decode_nibble_planes
+
+NEG_INF = -1e30
+
+# KV dtype the packed cache encodes with (see layers._quant_kv_token)
+KV_NORMAL_DTYPE = "int4"
+
+
+# --------------------------------------------------------------------------
+# Dense (XLA) path: full-cache dequant + einsum. This is the fallback the
+# paper's critics describe — kept as the reference and the decline target.
+# --------------------------------------------------------------------------
+def dequant_kv(data: jax.Array, scl: jax.Array) -> jax.Array:
+    """Packed (…, T, Hkv, D/2) nibbles + (…, T, Hkv) scales -> f32 values.
+
+    This materializes the WHOLE dense tensor — fine for tests and the XLA
+    fallback, but never traced in a fused-kernel decode step (the
+    zero-dequant acceptance test asserts exactly that)."""
+    vals = ovp_decode_codes(unpack4(data, -1), KV_NORMAL_DTYPE, pair_axis=-1)
+    return vals * scl[..., None]
+
+
+def read_cache_dense(cache, dtype=None):
+    """(k, v) dense views of a KV cache dict (fp or OVP-packed).
+
+    dtype=None keeps fp caches in their native dtype; packed caches decode
+    to bf16 (matching the seed `cache_read` contract)."""
+    if "k" in cache:
+        k, v = cache["k"], cache["v"]
+        if dtype is None:
+            return k, v
+        return k.astype(dtype), v.astype(dtype)
+    kd = dequant_kv(cache["k_data"], cache["k_scl"])
+    vd = dequant_kv(cache["v_data"], cache["v_scl"])
+    if dtype is None:
+        dtype = jnp.bfloat16
+    return kd.astype(dtype), vd.astype(dtype)
+
+
+def slot_validity(pos: jax.Array, slots: jax.Array, *, window: int,
+                  ring: int):
+    """(abs_pos, valid) for cache slots given per-row `pos` (B,).
+
+    Shared by the dense path and the tests; the kernel computes the same
+    arithmetic on its per-tile iota. `ring` > 0 means slot i holds the
+    largest p' <= pos with p' % ring == i; otherwise slot i is position i.
+    """
+    p = pos[:, None]
+    if ring:
+        abs_pos = p - ((p - slots[None, :]) % ring)
+        valid = abs_pos >= 0
+    else:
+        abs_pos = jnp.broadcast_to(slots[None, :],
+                                   (pos.shape[0], slots.shape[0]))
+        valid = abs_pos <= p
+    if window:
+        valid = valid & (abs_pos > p - window) & (abs_pos <= p)
+    return abs_pos, valid
+
+
+def xla_decode_attention(q: jax.Array, cache, pos: jax.Array, *,
+                         window: int = 0, ring: int = 0) -> jax.Array:
+    """Single-token attention over a cache, dense XLA path.
+
+    q: (B, 1, H, D); pos: (B,) current absolute position (token at `pos`
+    already written). Dequantizes the whole cache first — the decode HBM
+    term the fused kernel exists to remove.
+    """
+    k, v = read_cache_dense(cache, dtype=None)
+    b, s_len, hkv, d = k.shape
+    h = q.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, 1, hkv, g, d)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg.astype(k.dtype), k,
+                   preferred_element_type=jnp.float32) * scale
+    _, valid = slot_validity(pos, jnp.arange(s_len), window=window,
+                             ring=ring)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p_att = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p_att.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Decline vocabulary (machine-readable; recorded in dispatch_stats())
+# --------------------------------------------------------------------------
+def decline_reason(q: jax.Array, cache) -> Optional[str]:
+    """None when the fused kernel can serve this (q, cache) layout."""
+    if q.shape[1] != 1:
+        return "decode_q_tokens_gt_1"
+    leaf = cache.get("k", cache.get("k_data"))
+    if leaf is None:
+        return "decode_no_kv_cache"
+    if leaf.shape[1] == 0:
+        return "decode_empty_cache"
+    if "k" in cache and cache["k"].shape[-1] % 2 != 0:
+        # the shared even/odd-plane body needs an even head_dim (packed
+        # caches are guaranteed even at construction)
+        return "decode_head_dim_odd"
+    return None
+
+
+# --------------------------------------------------------------------------
+# Kernel bodies. Blocks carry `bh` kv heads (default 1 — one head per grid
+# step, the TPU-parallel layout; interpret mode folds all heads into one
+# tile to amortize the per-grid-step interpreter overhead — numerics are
+# identical, it is a block-size tunable exactly like bm/bn/bk in the
+# matmul kernel).
+# --------------------------------------------------------------------------
+_BATCHED = (((2,), (2,)), ((0,), (1,)))   # (bh,G,x) @ (bs,bh,x) -> (bh,G,bs)
+_BATCHED_PV = (((2,), (0,)), ((0,), (1,)))  # (bh,G,bs) @ (bs,bh,x)
+
+
+def _online_softmax_step(s, v_even, v_odd, v_scl, o_ref, m_ref, l_ref,
+                         d2: int):
+    """One kv-tile online-softmax update against the (b, h-block) output.
+
+    s: (bh, G, bs) masked scores; v_even/v_odd: (bs, bh, D/2) decoded
+    value planes; v_scl: (bs, bh) per-token V scale or None (fp caches).
+    """
+    m_prev = m_ref[0]                                      # (bh, G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                                 # (bh, G, bs)
+    corr = jnp.exp(m_prev - m_new)                         # (bh, G, 1)
+    l_ref[0] = l_ref[0] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[0] = m_new
+    if v_scl is not None:
+        p = p * jnp.transpose(v_scl)[:, None, :]
+    o_ref[0, :, :, :d2] = o_ref[0, :, :, :d2] * corr + jax.lax.dot_general(
+        p, v_even, _BATCHED_PV, preferred_element_type=jnp.float32)
+    o_ref[0, :, :, d2:] = o_ref[0, :, :, d2:] * corr + jax.lax.dot_general(
+        p, v_odd, _BATCHED_PV, preferred_element_type=jnp.float32)
+
+
+def _tile_mask(pos, bs: int, s_len: int, window: int, ring: int):
+    """(1, 1, bs) validity of this tile's slots at traced position `pos`."""
+    slot = pl.program_id(2) * bs + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, bs), 2)
+    if ring:
+        abs_pos = pos - ((pos - slot) % ring)
+        valid = abs_pos >= 0
+    else:
+        abs_pos = slot
+        valid = slot <= pos
+    valid = valid & (slot < s_len)                 # padded tail slots
+    if window:
+        valid = valid & (abs_pos > pos - window) & (abs_pos <= pos)
+    return valid
+
+
+def _scores(q_tile, k_even, k_odd):
+    """(bh, G, D) query block x (bs, bh, D/2) key planes -> (bh, G, bs)
+    f32 scores (query even lanes live in [..., :D/2], plane layout)."""
+    d2 = k_even.shape[-1]
+    return (jax.lax.dot_general(q_tile[..., :d2], k_even, _BATCHED,
+                                preferred_element_type=jnp.float32)
+            + jax.lax.dot_general(q_tile[..., d2:], k_odd, _BATCHED,
+                                  preferred_element_type=jnp.float32))
+
+
+def _finish(o_ref, l_ref):
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _norm():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)
+
+
+def _init_carry(o_ref, m_ref, l_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+
+def _decode_attn_kernel_packed(q_ref, kd_ref, vd_ref, ks_ref, vs_ref,
+                               pos_ref, o_ref, m_ref, l_ref, *,
+                               bs: int, s_len: int, window: int, ring: int):
+    """One (batch, head_block, kv_tile) grid step over an OVP-packed cache.
+
+    q_ref  (1, bh, G, D)    f32 query block, pre-scaled by 1/sqrt(D), with
+                            even K-lanes in [..., :D/2] (plane layout)
+    kd/vd  (1, bs, bh, D/2) packed nibble tiles (streamed HBM->VMEM)
+    ks/vs  (1, bs, bh)      per-(token, head) 3-sigma scales
+    pos    (1, 1)           this row's current absolute position
+    o_ref  (1, bh, G, D)    f32 accumulator in even/odd plane layout
+    m/l    (1, bh, G, 1)    online-softmax running max / denominator
+    """
+    _init_carry(o_ref, m_ref, l_ref)
+    spec = ABFLOAT_FOR_NORMAL[KV_NORMAL_DTYPE]
+    k_even, k_odd = decode_nibble_planes(kd_ref[0], KV_NORMAL_DTYPE, spec)
+    v_even, v_odd = decode_nibble_planes(vd_ref[0], KV_NORMAL_DTYPE, spec)
+    # fold the per-token K scale into the scores, the V scale into the
+    # probabilities — the decoded code planes feed the MXU directly
+    s = _scores(q_ref[0], k_even, k_odd) \
+        * jnp.transpose(ks_ref[0])[:, None, :]
+    valid = _tile_mask(pos_ref[0, 0], bs, s_len, window, ring)
+    s = jnp.where(valid, s, NEG_INF)
+    _online_softmax_step(s, v_even, v_odd, vs_ref[0], o_ref, m_ref,
+                         l_ref, k_even.shape[-1])
+    _finish(o_ref, l_ref)
+
+
+def _decode_attn_kernel_fp(q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref,
+                           l_ref, *, bs: int, s_len: int, window: int,
+                           ring: int):
+    """fp16/bf16/f32 cache variant: same body minus the unpack phase —
+    the even/odd planes are strided slices of the fp tile."""
+    _init_carry(o_ref, m_ref, l_ref)
+    kt = k_ref[0].astype(jnp.float32)                      # (bs, bh, D)
+    vt = v_ref[0].astype(jnp.float32)
+    s = _scores(q_ref[0], kt[..., 0::2], kt[..., 1::2])
+    valid = _tile_mask(pos_ref[0, 0], bs, s_len, window, ring)
+    s = jnp.where(valid, s, NEG_INF)
+    _online_softmax_step(s, vt[..., 0::2], vt[..., 1::2], None, o_ref,
+                         m_ref, l_ref, kt.shape[-1] // 2)
+    _finish(o_ref, l_ref)
+
+
+# --------------------------------------------------------------------------
+# pallas_call builder + public wrapper
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("packed", "s_len", "window",
+                                             "ring", "bs", "bh",
+                                             "interpret"))
+def _decode_attn_call(q4, kd, vd, ks, vs, pos2, *, packed: bool,
+                      s_len: int, window: int, ring: int, bs: int,
+                      bh: int, interpret: bool):
+    """q4 (B, Hkv, G, D) f32 plane-layout queries; kd/vd the (padded)
+    cache data; ks/vs (B, Sp, Hkv) scales (fp caches pass (1, 1, 1)
+    sentinels — the fp branch never reads them); pos2 (B, 1) int32.
+    Returns (B, Hkv, G, D) f32 in plane layout."""
+    b, hkv, g, d = q4.shape
+    sp = kd.shape[1]
+    grid = (b, hkv // bh, sp // bs)
+    kv_spec = pl.BlockSpec((1, bs, bh, kd.shape[-1]),
+                           lambda bb, hh, ss: (bb, ss, hh, 0))
+    scl_spec = pl.BlockSpec((1, bs, bh), lambda bb, hh, ss: (bb, ss, hh))
+    q_spec = pl.BlockSpec((1, bh, g, d), lambda bb, hh, ss: (bb, hh, 0, 0))
+    pos_spec = pl.BlockSpec((1, 1), lambda bb, hh, ss: (bb, 0))
+    carry_spec = pl.BlockSpec((1, bh, g, 1),
+                              lambda bb, hh, ss: (bb, hh, 0, 0))
+    out_shapes = (jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+                  jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+                  jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32))
+    out_specs = (pl.BlockSpec((1, bh, g, d),
+                              lambda bb, hh, ss: (bb, hh, 0, 0)),
+                 carry_spec, carry_spec)
+    if packed:
+        kernel = functools.partial(_decode_attn_kernel_packed, bs=bs,
+                                   s_len=s_len, window=window, ring=ring)
+        out, _, _ = pl.pallas_call(
+            kernel, grid=grid,
+            in_specs=[q_spec, kv_spec, kv_spec, scl_spec, scl_spec,
+                      pos_spec],
+            out_specs=out_specs, out_shape=out_shapes,
+            interpret=interpret)(q4, kd, vd, ks, vs, pos2)
+    else:
+        kernel = functools.partial(_decode_attn_kernel_fp, bs=bs,
+                                   s_len=s_len, window=window, ring=ring)
+        out, _, _ = pl.pallas_call(
+            kernel, grid=grid,
+            in_specs=[q_spec, kv_spec, kv_spec, pos_spec],
+            out_specs=out_specs, out_shape=out_shapes,
+            interpret=interpret)(q4, kd, vd, pos2)
+    return out
+
+
+def _pad_s(x, mult, value=0):
+    rem = (-x.shape[1]) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[1] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def _pick_bs(s_len: int, block_s: int) -> int:
+    """kv-tile size: the largest divisor of `s_len` <= block_s when a
+    reasonable one exists, else block_s (padding kicks in).
+
+    A non-divisor tile forces `_pad_s` to copy the WHOLE cache every
+    traced decode step — a per-step full-cache HBM round trip that
+    defeats the point of the kernel — so exact tiling wins whenever the
+    divisor keeps the grid sane; in-kernel masking covers the padded
+    remainder for pathological (e.g. prime) cache lengths."""
+    bs = min(block_s, s_len)
+    if s_len % bs == 0:
+        return bs
+    for cand in range(bs, 0, -1):
+        if s_len % cand == 0:
+            return cand if cand >= min(64, s_len) else bs
+    return bs
+
+
+def fused_decode_attention(q: jax.Array, cache, pos: jax.Array, *,
+                           window: int = 0, ring: int = 0,
+                           interpret: bool = False,
+                           block_s: int = 256,
+                           block_h: int = 0) -> jax.Array:
+    """Single-token attention over a KV cache, one pallas_call.
+
+    q: (B, 1, H, D); `cache` an fp ({"k", "v"}) or OVP-packed
+    ({"k_data", "v_data", "k_scl", "v_scl"}) cache dict; pos: (B,)
+    current absolute position (token at `pos` already written). Length,
+    ring and sliding-window masking run in-kernel from the traced `pos`.
+    Layout preconditions are `decline_reason`'s job — callers go through
+    `backends.decode_attention`, which falls back on a reason code.
+
+    `block_s`/`block_h` tile the kv and head dims. block_h=0 picks the
+    default: 1 head per grid step when compiled (TPU-parallel), all heads
+    per step under the interpreter (amortizes per-grid-step emulation
+    overhead; numerics identical).
+    """
+    b, t, h, d = q.shape
+    packed = "k_data" in cache
+    kd = cache["k_data"] if packed else cache["k"]
+    vd = cache["v_data"] if packed else cache["v"]
+    s_len, hkv = kd.shape[1], kd.shape[2]
+    g = h // hkv
+    bs = _pick_bs(s_len, block_s)
+    if block_h == 0:
+        block_h = hkv if interpret else 1
+    bh = min(block_h, hkv)
+    if hkv % bh:
+        bh = 1
+    qf = q.reshape(b, hkv, g, d).astype(jnp.float32) / math.sqrt(d)
+    # even/odd plane layout: q[..., :d/2] multiplies the even K-lanes
+    qf = jnp.concatenate([qf[..., 0::2], qf[..., 1::2]], axis=-1)
+    kd, vd = _pad_s(kd, bs), _pad_s(vd, bs)
+    if packed:
+        ks = _pad_s(cache["k_scl"], bs, value=1.0)
+        vs = _pad_s(cache["v_scl"], bs, value=1.0)
+    else:
+        # the fp kernel takes no scale refs; tiny sentinels keep the
+        # jitted call signature uniform without materializing scale planes
+        ks = vs = jnp.zeros((1, 1, 1), jnp.float32)
+    pos2 = pos.reshape(b, 1).astype(jnp.int32)
+    out = _decode_attn_call(qf, kd, vd, ks, vs, pos2, packed=packed,
+                            s_len=s_len, window=window, ring=ring, bs=bs,
+                            bh=bh, interpret=interpret)
+    d2 = d // 2
+    out = jnp.stack([out[..., :d2], out[..., d2:]], axis=-1)
+    return out.reshape(b, hkv, g, d).reshape(b, t, h, d).astype(q.dtype)

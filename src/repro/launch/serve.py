@@ -154,6 +154,13 @@ def main():
         print(f"[serve] mean latency {np.mean(lat)*1e3:.0f} ms")
     if ttft:
         print(f"[serve] mean TTFT {np.mean(ttft)*1e3:.0f} ms")
+    dec_stats = {k: v for k, v in backends.dispatch_stats().items()
+                 if "[decode_attn]" in k}
+    if dec_stats:
+        # which backend served decode attention per traced site — on the
+        # pallas backends a packed KV cache must show zero fallbacks (no
+        # full-cache dequant per step; see docs/kv_cache.md)
+        print(f"[serve] decode-attention dispatch: {dec_stats}")
     if args.calibration:
         # the whole point of static serving: zero dynamic resolutions
         print(f"[serve] act-scale resolutions: {backends.act_scale_stats()}")

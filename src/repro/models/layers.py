@@ -349,16 +349,29 @@ def local_blockwise_attention(q, k, v, *, window, q_offset=0, chunk=512):
 # KV caches (fp16/bf16 and OVP-quantized beyond-paper variant)
 # ==========================================================================
 def make_kv_cache(batch, length, n_kv, head_dim, dtype=jnp.bfloat16,
-                  kv_bits: int = 0):
+                  kv_bits: int = 0, track_len: bool = False):
+    """KV cache dict. `track_len` adds a per-row `src_len` leaf recording
+    how many rows actually hold data (cross-attention encoder caches: the
+    encoder output can be shorter than the cache, and the zero-initialized
+    tail must never receive softmax mass)."""
+    if head_dim % 2 != 0 and kv_bits == 4:
+        raise ValueError(
+            f"OVP-packed KV cache needs an even head_dim (values pair "
+            f"2-per-byte along it); got head_dim={head_dim}. Use an even "
+            f"head_dim or kv_bits=0 for this site.")
     if kv_bits == 4:
-        return {"k_data": jnp.zeros((batch, length, n_kv, head_dim // 2),
-                                    jnp.uint8),
-                "v_data": jnp.zeros((batch, length, n_kv, head_dim // 2),
-                                    jnp.uint8),
-                "k_scl": jnp.ones((batch, length, n_kv), jnp.float32),
-                "v_scl": jnp.ones((batch, length, n_kv), jnp.float32)}
-    return {"k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
-            "v": jnp.zeros((batch, length, n_kv, head_dim), dtype)}
+        cache = {"k_data": jnp.zeros((batch, length, n_kv, head_dim // 2),
+                                     jnp.uint8),
+                 "v_data": jnp.zeros((batch, length, n_kv, head_dim // 2),
+                                     jnp.uint8),
+                 "k_scl": jnp.ones((batch, length, n_kv), jnp.float32),
+                 "v_scl": jnp.ones((batch, length, n_kv), jnp.float32)}
+    else:
+        cache = {"k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+                 "v": jnp.zeros((batch, length, n_kv, head_dim), dtype)}
+    if track_len:
+        cache["src_len"] = jnp.zeros((batch,), jnp.int32)
+    return cache
 
 
 def _quant_kv_token(x):
@@ -371,82 +384,58 @@ def _quant_kv_token(x):
     return pack4(codes, pair_axis=-1), s
 
 
-def _dequant_kv(data, scl):
-    from repro.core.ovp import ovp_decode_codes, unpack4
-    vals = ovp_decode_codes(unpack4(data, -1), "int4", pair_axis=-1)
-    return vals * scl[..., None]
-
-
 def cache_write(cache, k_new, v_new, pos, ring: int = 0):
     """Write one step (T may be >1 for prefill). pos: (B,) write position of
-    k_new[:, 0]. ring>0 wraps indices modulo the ring size (local attn)."""
+    k_new[:, 0]. ring>0 wraps indices modulo the ring size (local attn).
+    Non-KV leaves (e.g. `src_len`) pass through untouched."""
     b, t = k_new.shape[:2]
     idx = pos[:, None] + jnp.arange(t)[None, :]            # (B, T)
     if ring:
         idx = idx % ring
     bidx = jnp.arange(b)[:, None] + jnp.zeros_like(idx)
+    out = dict(cache)
     if "k" in cache:
-        k = cache["k"].at[bidx, idx].set(k_new.astype(cache["k"].dtype),
-                                         mode="drop")
-        v = cache["v"].at[bidx, idx].set(v_new.astype(cache["v"].dtype),
-                                         mode="drop")
-        return {"k": k, "v": v}
+        out["k"] = cache["k"].at[bidx, idx].set(
+            k_new.astype(cache["k"].dtype), mode="drop")
+        out["v"] = cache["v"].at[bidx, idx].set(
+            v_new.astype(cache["v"].dtype), mode="drop")
+        return out
     kd, ks = _quant_kv_token(k_new)
     vd, vs = _quant_kv_token(v_new)
-    return {"k_data": cache["k_data"].at[bidx, idx].set(kd, mode="drop"),
-            "v_data": cache["v_data"].at[bidx, idx].set(vd, mode="drop"),
-            "k_scl": cache["k_scl"].at[bidx, idx].set(ks, mode="drop"),
-            "v_scl": cache["v_scl"].at[bidx, idx].set(vs, mode="drop")}
+    out["k_data"] = cache["k_data"].at[bidx, idx].set(kd, mode="drop")
+    out["v_data"] = cache["v_data"].at[bidx, idx].set(vd, mode="drop")
+    out["k_scl"] = cache["k_scl"].at[bidx, idx].set(ks, mode="drop")
+    out["v_scl"] = cache["v_scl"].at[bidx, idx].set(vs, mode="drop")
+    return out
 
 
 def cache_read(cache, dtype=jnp.float32):
     """dtype=None: return the cache's native dtype (no full-cache convert
     — materializing an f32 copy of a multi-GB cache per layer was the
-    dominant decode HBM term, §Perf iteration D2)."""
-    if "k" in cache:
-        if dtype is None:
-            return cache["k"], cache["v"]
-        return cache["k"].astype(dtype), cache["v"].astype(dtype)
-    kd = _dequant_kv(cache["k_data"], cache["k_scl"])
-    vd = _dequant_kv(cache["v_data"], cache["v_scl"])
-    if dtype is None:
-        dtype = jnp.bfloat16
-    return kd.astype(dtype), vd.astype(dtype)
+    dominant decode HBM term, §Perf iteration D2). For OVP-packed caches
+    this is a FULL dequant — the serving decode path avoids it entirely
+    via the fused kernel (`decode_attention` below)."""
+    from repro.kernels import decode_attn
+    return decode_attn.read_cache_dense(cache, dtype=dtype)
 
 
-def decode_attention(q, cache, pos, *, window: int = 0, ring: int = 0):
-    """Single-token attention over a cache.
+def decode_attention(q, cache, pos, *, window: int = 0, ring: int = 0,
+                     policy: Optional[QuantPolicy] = None):
+    """Single-token attention over a cache, routed through the backend
+    registry.
 
     q: (B, 1, H, D); pos: (B,) current absolute position (token at `pos` is
     already written). `ring` = physical cache length for ring buffers; slot
-    absolute positions are reconstructed arithmetically.
+    absolute positions are reconstructed arithmetically. `policy` is the
+    RESOLVED policy of this cache's site (`<block>/attn/kv`):
+    `policy.backend` picks the execution path — the pallas backends run
+    the fused decode-attention kernel (OVP-packed caches never dequantize
+    densely; fp caches skip the unpack phase), everything else serves the
+    dense XLA path. None (direct callers, training utilities) = dense XLA.
     """
-    k, v = cache_read(cache, dtype=None)   # native dtype; f32 accumulate
-    b, s_len, hkv, d = k.shape
-    h = q.shape[2]
-    g = h // hkv
-    scale = 1.0 / math.sqrt(d)
-    qg = q.reshape(b, 1, hkv, g, d)
-    s = jnp.einsum("bqhgd,bshd->bhgqs", qg.astype(k.dtype), k,
-                   preferred_element_type=jnp.float32) * scale
-    slots = jnp.arange(s_len)
-    if ring:
-        # slot i holds absolute position p = largest p' <= pos with
-        # p' % ring == i (invalid if negative / outside window)
-        p = pos[:, None]
-        abs_pos = p - ((p - slots[None, :]) % ring)
-        valid = abs_pos >= 0
-    else:
-        abs_pos = jnp.broadcast_to(slots[None, :], (b, s_len))
-        valid = abs_pos <= pos[:, None]
-    if window:
-        valid = valid & (abs_pos > pos[:, None] - window) \
-            & (abs_pos <= pos[:, None])
-    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
-    p_att = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgqs,bshd->bqhgd", p_att.astype(v.dtype), v,
-                     preferred_element_type=jnp.float32)
-    return out.reshape(b, 1, h, d).astype(q.dtype)
+    from repro import backends
+    return backends.decode_attention(q, cache, pos, policy=policy,
+                                     window=window, ring=ring)
 
 
 # ==========================================================================
@@ -493,12 +482,19 @@ def attention_forward(p, x, positions, cfg, policy: PolicyLike, *,
         ring = window if (window and cache_len(cache) == window) else 0
         cache = cache_write(cache, k_new, v_new, positions[:, 0], ring=ring)
         out = decode_attention(q, cache, positions[:, 0], window=window,
-                               ring=ring)
+                               ring=ring, policy=rp(policy, site, "kv"))
     elif mode == "decode":  # cross-attention decode: cache holds enc K/V
         if use_rope:
             q = rope(q, positions, cfg.rope_theta)
-        out = decode_attention(q, cache, positions[:, 0] * 0
-                               + cache_len(cache) - 1)
+        # attend only the rows the encoder actually wrote: `src_len`
+        # (tracked at prefill) caps the softmax, so zero-initialized tail
+        # rows of an oversized cache never steal mass (their logit would
+        # be 0, not -inf)
+        src_len = cache.get("src_len")
+        pos_x = (src_len - 1) if src_len is not None else \
+            positions[:, 0] * 0 + cache_len(cache) - 1
+        out = decode_attention(q, cache, pos_x,
+                               policy=rp(policy, site, "kv"))
     else:
         k = qlinear.linear(src, p["wk"], p.get("bk"), *rps(policy, site, "wk"))
         v = qlinear.linear(src, p["wv"], p.get("bv"), *rps(policy, site, "wv"))
@@ -526,9 +522,12 @@ def attention_forward(p, x, positions, cfg, policy: PolicyLike, *,
                                         positions[:, -keep], ring=ring)
                 else:
                     cache = cache_write(cache, k, v, positions[:, 0])
-            else:  # store encoder K/V once
+            else:  # store encoder K/V once, recording the true length
                 cache = cache_write(cache, k, v,
                                     jnp.zeros((b,), jnp.int32))
+                if "src_len" in cache:
+                    cache["src_len"] = jnp.full((b,), min(
+                        s_len, cache_len(cache)), jnp.int32)
     out = out.reshape(b, t, nh * hd)
     out = qlinear.linear(out, p["wo"], None, *rps(policy, site, "wo"))
     return logical(out, "batch", "seq", "embed"), cache

@@ -90,10 +90,13 @@ def block_cache(cfg: ArchConfig, btype: str, batch: int, max_len: int,
     if btype == "slstm":
         return {"slstm": L.slstm_init_state(batch, d)}
     if btype == "encdec_attn":
+        # xkv tracks the true encoder length: the encoder output may be
+        # shorter than the cache, and decode must mask the unwritten tail
         return {"kv": L.make_kv_cache(batch, max_len, cfg.n_kv_heads,
                                       cfg.head_dim, dtype, kv_bits),
                 "xkv": L.make_kv_cache(batch, enc_len, cfg.n_kv_heads,
-                                       cfg.head_dim, dtype, 0)}
+                                       cfg.head_dim, dtype, 0,
+                                       track_len=True)}
     raise ValueError(btype)
 
 

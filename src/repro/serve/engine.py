@@ -7,6 +7,15 @@ OVP-packed (policy.kv_bits=4), and activation quantization can run on
 calibrated *static* scales (`EngineCfg.calibration`, validated up front —
 zero per-step scale computations; see docs/calibration.md) — the paper's
 serving story end to end.
+
+Decode-step attention routes through the backend registry
+(`backends.decode_attention`, resolved per cache site): on the pallas
+backends the fused decode-attention kernel (`kernels/decode_attn.py`)
+consumes OVP-packed caches IN PLACE — nibbles unpack per KV tile inside
+the kernel, no full-cache dequant ever traces, and in-kernel masking from
+the traced positions means one compiled decode step serves every
+active-length mix in the slots. `EngineCfg.backend` overrides the
+policy's backend for these sites too. See docs/kv_cache.md.
 """
 from __future__ import annotations
 
@@ -163,28 +172,38 @@ class ServingEngine:
         bucket) matches the traced shape: every prompt length in a bucket
         reuses one trace. Next-token logits read at `length - 1`."""
         for s in range(self.cfg.batch_slots):
-            if self.slots[s] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            t = len(req.prompt)
-            bucket = self._bucket(t) if self._bucket_ok else t
-            toks = np.zeros((bucket,), np.int32)
-            toks[:t] = req.prompt  # right-pad; causal mask shields pads
-            key = bucket
-            if key not in self._prefill_cache:
-                self._prefill_cache[key] = jax.jit(self._prefill)
-            # prefill into a fresh single-row cache, then splice into slot s
-            row_cache = self.model.init_caches(1, self.cfg.max_len,
-                                               dtype=jnp.float32)
-            logits, row_cache = self._prefill_cache[key](
-                self.params, row_cache, jnp.asarray(toks[None, :]),
-                jnp.int32(t))
-            self.caches = _splice_slot(self.caches, row_cache, s)
-            self.pos[s] = t
-            nxt = int(jnp.argmax(logits[0]))
-            req.out_tokens.append(nxt)
-            req.t_first = time.monotonic()
-            self.slots[s] = req
+            # loop: a request finished by its own prefill token frees the
+            # slot for the next queued request in the same admit pass
+            while self.slots[s] is None and self.queue:
+                req = self.queue.popleft()
+                t = len(req.prompt)
+                bucket = self._bucket(t) if self._bucket_ok else t
+                toks = np.zeros((bucket,), np.int32)
+                toks[:t] = req.prompt  # right-pad; causal mask shields pads
+                key = bucket
+                if key not in self._prefill_cache:
+                    self._prefill_cache[key] = jax.jit(self._prefill)
+                # prefill into a fresh single-row cache, splice into slot s
+                row_cache = self.model.init_caches(1, self.cfg.max_len,
+                                                   dtype=jnp.float32)
+                logits, row_cache = self._prefill_cache[key](
+                    self.params, row_cache, jnp.asarray(toks[None, :]),
+                    jnp.int32(t))
+                self.caches = _splice_slot(self.caches, row_cache, s)
+                self.pos[s] = t
+                nxt = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(nxt)
+                req.t_first = time.monotonic()
+                if (self.cfg.eos_id >= 0 and nxt == self.cfg.eos_id) or \
+                        len(req.out_tokens) >= req.max_new_tokens:
+                    # the prefill token already satisfies the budget (or
+                    # hit EOS): never enter decode — a max_new_tokens=1
+                    # request must return exactly one token, not two
+                    req.done = True
+                    req.t_done = time.monotonic()
+                    self.completed.append(req)
+                    continue
+                self.slots[s] = req
 
     def _active(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]

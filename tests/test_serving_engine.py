@@ -78,6 +78,51 @@ def test_recurrent_arch_keeps_exact_prefill():
     assert not eng._bucket_ok
 
 
+def test_max_new_tokens_one_returns_exactly_one_token(tiny_model_params):
+    """Regression: the prefill token already satisfies max_new_tokens=1;
+    the request must complete without ever entering decode (the seed
+    appended the prefill token, decoded anyway, and returned 2)."""
+    model, params = tiny_model_params
+    eng = ServingEngine(model, params, EngineCfg(batch_slots=2, max_len=64))
+    rng = np.random.default_rng(3)
+    for n in (5, 9, 7):
+        eng.submit(rng.integers(0, TINY.vocab, size=n).astype(np.int32),
+                   max_new_tokens=1)
+    done = eng.run_until_drained()
+    assert sorted(len(r.out_tokens) for r in done) == [1, 1, 1]
+    assert all(r.done and r.t_done >= r.t_first for r in done)
+    # all three completed at admission: batch_slots=2 must not cap it
+    assert not eng.queue and not eng._active()
+
+
+def test_max_new_tokens_budget_exact(tiny_model_params):
+    """max_new_tokens=n yields exactly n tokens (prefill token included)."""
+    model, params = tiny_model_params
+    for n in (2, 3):
+        eng = ServingEngine(model, params,
+                            EngineCfg(batch_slots=1, max_len=64))
+        eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=n)
+        done = eng.run_until_drained()
+        assert [len(r.out_tokens) for r in done] == [n]
+
+
+def test_eos_on_prefill_token_terminates_at_admit(tiny_model_params):
+    """An EOS produced by prefill must complete the request in _admit."""
+    model, params = tiny_model_params
+    prompt = np.arange(4, dtype=np.int32)
+    probe = ServingEngine(model, params,
+                          EngineCfg(batch_slots=1, max_len=64))
+    probe.submit(prompt, max_new_tokens=8)
+    probe.step()
+    first = probe.completed[0].out_tokens[0] if probe.completed else \
+        probe.slots[0].out_tokens[0]
+    eng = ServingEngine(model, params,
+                        EngineCfg(batch_slots=1, max_len=64, eos_id=first))
+    eng.submit(prompt, max_new_tokens=8)
+    done = eng.run_until_drained()
+    assert [r.out_tokens for r in done] == [[first]]
+
+
 def test_splice_slot_raises_on_shape_mismatch():
     full = {"kv": {"k": jnp.zeros((4, 32, 2, 16))}}
     ok_row = {"kv": {"k": jnp.ones((1, 32, 2, 16))}}
