@@ -25,7 +25,14 @@ emulation — correctness, not speed), so the numbers that matter are:
      path (wall + equivalence + the ~4x HBM read ratio), and a tiny
      quantized-cache ServingEngine run that must show ZERO
      decode-attention fallbacks — any fallback exits nonzero (see
-     docs/kv_cache.md).
+     docs/kv_cache.md),
+  8. the paged KV-cache subsystem: HBM held per request (block-table
+     pages vs the fixed slab row), max concurrent requests at a fixed
+     HBM budget (the paging headline — must be >= 2x with real contexts
+     at a quarter of max_len), the fused cache-write prefill serve wall
+     vs the slab's prefill-then-splice, and a quantized PAGED engine run
+     that must serve decode AND prefill attention fused with zero
+     fallbacks — any paged-path fallback exits nonzero.
 
 ``BENCH_SMOKE=1`` (or ``--smoke``) shrinks every shape so CI can run the
 whole file in interpret mode in seconds; results land in
@@ -290,6 +297,61 @@ def main() -> int:
     ok = ok and err_dec < 1e-5 and n_dec == 1 \
         and dec_fallbacks == 0 and dec_served > 0
 
+    # 8) paged OVP KV cache (serve/paging.py): the block-table pool vs the
+    #    fixed (batch_slots, max_len) slab — HBM held per request, max
+    #    concurrent requests at a FIXED HBM budget (the paging headline:
+    #    must be >= 2x when real contexts run at a quarter of max_len),
+    #    fused cache-write prefill vs the prefill-then-splice slab path,
+    #    and a quantized paged engine run that must serve BOTH attention
+    #    paths fused — any paged-path fallback exits nonzero.
+    from repro.serve.paging import (PagePoolCfg, kv_bytes_per_token_per_site,
+                                    max_concurrent_requests, pages_for,
+                                    pool_pages_for_budget)
+    pg_ps = 16
+    pg_max_len, pg_real = (128, 32) if smoke else (2048, 512)
+    pg_slots = 4 if smoke else 8
+    bpt = kv_bytes_per_token_per_site(eng_cfg.n_kv_heads, eng_cfg.head_dim,
+                                      4) * eng_cfg.n_layers
+    slab_bytes_req = pg_max_len * bpt            # slab reserves max_len
+    paged_bytes_req = pages_for(pg_real, pg_ps) * pg_ps * bpt
+    hbm_budget = pg_slots * slab_bytes_req       # what the slab layout holds
+    pool_pages = pool_pages_for_budget(hbm_budget, pg_ps, bpt)
+    paged_concurrent = max_concurrent_requests(pool_pages, pg_ps,
+                                               tokens_per_request=pg_real)
+    concurrency_gain = paged_concurrent / pg_slots
+
+    pg_prompts = [(5, 4), (40, 3), (24, 2), (9, 4)]
+
+    def run_serve(page_pool=None, prefill_chunk=0):
+        e = ServingEngine(eng_model,
+                          eng_model.init(jax.random.PRNGKey(3)),
+                          EngineCfg(batch_slots=2, max_len=64,
+                                    backend="pallas_interpret",
+                                    page_pool=page_pool,
+                                    prefill_chunk=prefill_chunk))
+        r = _np.random.default_rng(1)
+        for nreq, mn in pg_prompts:
+            e.submit(r.integers(0, 256, size=nreq).astype(_np.int32),
+                     max_new_tokens=mn)
+        t = time.perf_counter()
+        done = e.run_until_drained()
+        return e, (time.perf_counter() - t) * 1e6, \
+            {q.uid: q.out_tokens for q in done}
+
+    _, us_slab_serve, outs_slab = run_serve()        # prefill + splice
+    backends.reset_dispatch_stats()
+    eng_pg, us_paged_serve, outs_paged = run_serve(
+        page_pool=PagePoolCfg(page_size=pg_ps))      # fused cache-write
+    pg_stats = {k: v for k, v in backends.dispatch_stats().items()
+                if "[decode_attn]" in k or "[prefill_attn]" in k}
+    pg_fallbacks = sum(v for tag, v in pg_stats.items()
+                       if "->fallback:" in tag)
+    pg_prefill_served = pg_stats.get("pallas_interpret[prefill_attn]", 0)
+    pg_pool_stats = eng_pg.stats()["page_pool"]
+    ok = ok and pg_fallbacks == 0 and pg_prefill_served > 0 \
+        and outs_paged == outs_slab and concurrency_gain >= 2.0 \
+        and pg_pool_stats["used_pages"] == 0
+
     print("# kernel correctness: max rel err "
           f"w4a16={err16:.2e} w4a4={err4:.2e}")
     print(f"# xla decode-matmul {us_q:.0f}us vs plain fp32 {us_p:.0f}us "
@@ -322,6 +384,17 @@ def main() -> int:
           f"+ no full-cache dequant materialization; engine smoke: "
           f"{dec_served} fused site(s), {dec_fallbacks} fallbacks "
           f"{eng_stats}")
+    print(f"# paged KV (page={pg_ps}, max_len={pg_max_len}, real context "
+          f"{pg_real}): HBM/request slab={slab_bytes_req} B vs "
+          f"paged={paged_bytes_req} B "
+          f"({slab_bytes_req/paged_bytes_req:.2f}x); at the slab's "
+          f"{hbm_budget} B budget ({pool_pages} pages) the pool serves "
+          f"{paged_concurrent} concurrent requests vs {pg_slots} slab "
+          f"slots ({concurrency_gain:.1f}x); fused cache-write prefill "
+          f"serve wall {us_paged_serve:.0f}us vs prefill+splice "
+          f"{us_slab_serve:.0f}us; paged engine: {pg_prefill_served} "
+          f"fused prefill(s), {pg_fallbacks} fallbacks, tokens == slab: "
+          f"{outs_paged == outs_slab} {pg_stats}")
 
     us = (time.perf_counter() - t0) * 1e6
     common.save_json("kernels_bench", {
@@ -357,6 +430,27 @@ def main() -> int:
             "engine_decode_fallbacks": int(dec_fallbacks),
             "engine_dispatch_stats": eng_stats,
         },
+        "paged_kv": {
+            "page_size": pg_ps,
+            "max_len": pg_max_len,
+            "real_context": pg_real,
+            "bytes_per_token_per_layer_stack": int(bpt),
+            "hbm_bytes_per_request_slab": int(slab_bytes_req),
+            "hbm_bytes_per_request_paged": int(paged_bytes_req),
+            "hbm_ratio": slab_bytes_req / paged_bytes_req,
+            "hbm_budget_bytes": int(hbm_budget),
+            "pool_pages_at_budget": int(pool_pages),
+            "max_concurrent_slab": pg_slots,
+            "max_concurrent_paged": int(paged_concurrent),
+            "concurrency_gain": concurrency_gain,
+            "serve_wall_us_slab_splice": us_slab_serve,
+            "serve_wall_us_paged_fused": us_paged_serve,
+            "tokens_match_slab": bool(outs_paged == outs_slab),
+            "prefill_served_fused": int(pg_prefill_served),
+            "paged_fallbacks": int(pg_fallbacks),
+            "dispatch_stats": pg_stats,
+            "pool_stats": pg_pool_stats,
+        },
         "ok": bool(ok),
     })
     common.emit("kernels_bench", us,
@@ -370,6 +464,8 @@ def main() -> int:
                 f"dec_fused_us={us_dec_fused:.0f} "
                 f"dec_dequant_us={us_dec_dequant:.0f} "
                 f"dec_fallbacks={dec_fallbacks} "
+                f"paged_concurrency_gain={concurrency_gain:.1f}x "
+                f"paged_fallbacks={pg_fallbacks} "
                 f"ok={ok}")
     return 0 if ok else 1
 

@@ -188,6 +188,28 @@ def decode_attention(q: jax.Array, cache, pos: jax.Array, *,
                                     ring=ring)
 
 
+def prefill_attention(q: jax.Array, cache, positions: jax.Array, *,
+                      policy: Optional[QuantPolicy] = None):
+    """Execute paged cache-write prefill on the policy's backend
+    (q: (1, C, H, D) chunk queries; cache: paged dict with block_table +
+    raw stage_k/stage_v; positions: (1, C) absolute chunk positions).
+
+    The prefill twin of `decode_attention`: the pallas backends run ONE
+    pallas_call that both attends the chunk causally over the raw stage
+    and OVP-quantizes every stage tile onto its physical page (no
+    prefill-then-splice round trip); `xla`/`reference` serve the dense
+    twin — bit-identical page bytes, attention equal up to softmax
+    reassociation. Declines record a `"...[prefill_attn]"` key in
+    `dispatch_stats()` and fall back one hop. Returns (out, new_cache).
+    """
+    backend = get_backend(policy.backend if policy is not None else "xla")
+    reason = backend.prefill_attn_decline_reason(q, cache)
+    _record(backend.name, reason, "[prefill_attn]")
+    if reason is not None:
+        backend = get_backend(backend.fallback)
+    return backend.prefill_attention(q, cache, positions)
+
+
 def _dispatch_mixed_experts(x: jax.Array, w: MixedExpertQuant,
                             policy: QuantPolicy,
                             act_scale: Optional[jax.Array],
@@ -238,7 +260,8 @@ def _dispatch_mixed_experts(x: jax.Array, w: MixedExpertQuant,
 
 
 __all__ = ["QuantizedMatmulBackend", "register", "get_backend", "available",
-           "dispatch", "decode_attention", "dispatch_stats",
+           "dispatch", "decode_attention", "prefill_attention",
+           "dispatch_stats",
            "reset_dispatch_stats",
            "act_scale_stats", "reset_act_scale_stats",
            "count_pallas_calls", "quantize_activation",

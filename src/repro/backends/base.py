@@ -36,6 +36,22 @@ KV-cache kernel — see docs/kv_cache.md):
 | `decode_no_kv_cache`      | cache dict carries no k / k_data leaf       |
 | `decode_empty_cache`      | zero-length cache (nothing to attend)       |
 | `decode_head_dim_odd`     | even/odd plane split needs an even head dim |
+| `paged_no_pool`           | block_table present but no pool k/k_data    |
+| `paged_table_rank`        | block table is not a 2-D integer array      |
+| `paged_page_misaligned`   | page size not an even int >= 2              |
+
+Prefill-attention decline codes (`prefill_attn_decline_reason`, the fused
+cache-write prefill kernel over PAGED caches — `kernels/prefill_attn.py`;
+the slab engine keeps the blockwise-attention + splice pipeline and never
+reaches this dispatch):
+
+| code                       | meaning                                    |
+|----------------------------|--------------------------------------------|
+| `prefill_not_paged`        | cache carries no block_table (slab layout) |
+| `prefill_no_stage`         | no stage_k/stage_v raw-K/V staging leaves  |
+| `prefill_batch_gt_1`       | kernel serves one request row at a time    |
+| `prefill_stage_misaligned` | stage length not a whole number of pages,  |
+|                            | or the table backs fewer pages than tiles  |
 
 `dispatch_stats()` counter keys (trace-time, one per traced matmul site):
 
@@ -45,6 +61,7 @@ KV-cache kernel — see docs/kv_cache.md):
 | `"<backend>->fallback:<reason>"`    | declined; ran on `backend.fallback` |
 | `"...[stacked]"` suffix             | the weight was a 3-D expert stack   |
 | `"...[decode_attn]"` suffix         | a decode-attention site (not matmul)|
+| `"...[prefill_attn]"` suffix        | a paged prefill site (not matmul)   |
 
 `act_scale_stats()` counter keys (this module): `"static"` /
 `"dynamic"` — how each traced quantized-activation matmul resolved its
@@ -181,6 +198,33 @@ class QuantizedMatmulBackend:
         from repro.kernels import decode_attn
         return decode_attn.xla_decode_attention(q, cache, pos,
                                                 window=window, ring=ring)
+
+    # -- paged cache-write prefill -----------------------------------------
+    # True when `prefill_attention` runs the fused Pallas kernel (one
+    # pallas_call does causal attention over the raw stage AND quantizes
+    # every stage tile onto its physical page); the base implementation is
+    # the dense twin in kernels/prefill_attn.py — bit-identical page bytes,
+    # attention equal up to softmax reassociation.
+    fuses_prefill_attention: bool = False
+
+    def prefill_attn_decline_reason(self, q, cache) -> Optional[str]:
+        """None when this backend can execute paged cache-write prefill
+        over this (q, cache) layout; the dense base path needs only the
+        paged layout itself (block_table + stage leaves)."""
+        if cache is None or "block_table" not in cache:
+            return "prefill_not_paged"
+        if "stage_k" not in cache or "stage_v" not in cache:
+            return "prefill_no_stage"
+        return None
+
+    def prefill_attention(self, q: jax.Array, cache, positions: jax.Array):
+        """Prefill one chunk of one request over a PAGED cache: causal
+        attention of q (1, C, H, D) against the raw stage, plus
+        quantize-and-write of the whole stage onto its block-table pages.
+        Returns (out, new_cache). Base = dense twin (masked einsum +
+        whole-stage quantize + page scatter)."""
+        from repro.kernels import prefill_attn
+        return prefill_attn.xla_prefill_attention(q, cache, positions)
 
     def __repr__(self):
         return f"<{type(self).__name__} {self.name!r}>"

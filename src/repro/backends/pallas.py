@@ -45,7 +45,7 @@ import jax.numpy as jnp
 
 from repro.core.ovp import QuantizedTensor
 from repro.core.policy import QuantPolicy
-from repro.kernels import decode_attn, ops
+from repro.kernels import decode_attn, ops, prefill_attn
 
 from .base import (QuantizedMatmulBackend, act_normal_dtype,
                    record_act_scale, resolve_act_scale)
@@ -123,6 +123,16 @@ class PallasBackend(QuantizedMatmulBackend):
         return decode_attn.fused_decode_attention(
             q, cache, pos, window=window, ring=ring,
             interpret=self.interpret)
+
+    # -- fused cache-write prefill (kernels/prefill_attn.py) ---------------
+    fuses_prefill_attention = True
+
+    def prefill_attn_decline_reason(self, q, cache) -> Optional[str]:
+        return prefill_attn.prefill_decline_reason(q, cache)
+
+    def prefill_attention(self, q: jax.Array, cache, positions: jax.Array):
+        return prefill_attn.fused_prefill_attention(
+            q, cache, positions, interpret=self.interpret)
 
 
 class PallasInterpretBackend(PallasBackend):

@@ -37,8 +37,24 @@ per value), and the full-cache dequant materialization disappears.
 Outputs keep the even/odd plane layout (first D/2 lanes = even K-lanes);
 the public wrapper re-interleaves once on the (B, 1, H, D) result.
 
+PAGED CACHES (serve/paging.py): a paged cache stores its K/V data as a
+global `(n_pages, page_size, Hkv, …)` pool plus a per-row block table
+`(B, pages_per_row)` int32 mapping logical page j (token rows
+[j*page_size, (j+1)*page_size)) to a physical page. Because this kernel
+already streams one kv tile per grid step, paging is ONE INDIRECTION on
+the kv-tile grid dim: the block table rides in as a scalar-prefetch
+operand and the kv BlockSpec index map reads `table[b, ss]` instead of
+`ss` — page size == kv tile size, so each gather is a whole tile and the
+kernel bodies (unpack, scores, online softmax, masking) are shared
+verbatim with the slab path. Logical slot arithmetic is unchanged
+(`program_id(2) * page_size + iota`), so length/ring/window masking and
+bit-for-bit equivalence with the slab kernel at `block_s == page_size`
+come for free.
+
 `xla_decode_attention` below is the dense fallback (full-cache dequant +
-einsum) that non-kernel backends serve and declined layouts fall back to;
+einsum) that non-kernel backends serve and declined layouts fall back to
+— for paged caches it first materializes the pages into a slab
+(`gather_paged_cache`), so every backend serves bit-identical results;
 `models/layers.py::decode_attention` routes between them through the
 backend registry (see docs/kv_cache.md for the decline vocabulary).
 """
@@ -51,6 +67,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.datatypes import ABFLOAT_FOR_NORMAL
 from repro.core.ovp import ovp_decode_codes, unpack4
@@ -76,11 +93,32 @@ def dequant_kv(data: jax.Array, scl: jax.Array) -> jax.Array:
     return vals * scl[..., None]
 
 
+def gather_paged_cache(cache):
+    """Materialize a paged cache into a `(B, pages_per_row * page_size,
+    …)` slab dict — the dense fallback's view of the pool.
+
+    One `jnp.take` per leaf through the block table; this is exactly the
+    per-step HBM rematerialization the paged kernel avoids, kept so
+    non-kernel backends serve bit-identical results on paged caches."""
+    bt = cache["block_table"]                       # (B, pages_per_row)
+    b, n = bt.shape
+    out = {}
+    for key in ("k", "v", "k_data", "v_data", "k_scl", "v_scl"):
+        if key in cache:
+            pool = cache[key]                       # (P, ps, …)
+            flat = jnp.take(pool, bt.reshape(-1), axis=0)
+            out[key] = flat.reshape((b, n * pool.shape[1]) + pool.shape[2:])
+    return out
+
+
 def read_cache_dense(cache, dtype=None):
-    """(k, v) dense views of a KV cache dict (fp or OVP-packed).
+    """(k, v) dense views of a KV cache dict (fp or OVP-packed; paged
+    caches materialize through the block table first).
 
     dtype=None keeps fp caches in their native dtype; packed caches decode
     to bf16 (matching the seed `cache_read` contract)."""
+    if "block_table" in cache:
+        cache = gather_paged_cache(cache)
     if "k" in cache:
         k, v = cache["k"], cache["v"]
         if dtype is None:
@@ -120,8 +158,15 @@ def xla_decode_attention(q: jax.Array, cache, pos: jax.Array, *,
 
     q: (B, 1, H, D); pos: (B,) current absolute position (token at `pos`
     already written). Dequantizes the whole cache first — the decode HBM
-    term the fused kernel exists to remove.
+    term the fused kernel exists to remove. Paged caches materialize into
+    a slab through the block table (and trim to the ring length: the pool
+    rounds a ring up to whole pages, and the modular slot arithmetic must
+    never see the rounding tail).
     """
+    if "block_table" in cache:
+        cache = gather_paged_cache(cache)
+        if ring:
+            cache = {key: leaf[:, :ring] for key, leaf in cache.items()}
     k, v = read_cache_dense(cache, dtype=None)
     b, s_len, hkv, d = k.shape
     h = q.shape[2]
@@ -146,10 +191,25 @@ def decline_reason(q: jax.Array, cache) -> Optional[str]:
     """None when the fused kernel can serve this (q, cache) layout."""
     if q.shape[1] != 1:
         return "decode_q_tokens_gt_1"
+    paged = "block_table" in cache
     leaf = cache.get("k", cache.get("k_data"))
     if leaf is None:
-        return "decode_no_kv_cache"
-    if leaf.shape[1] == 0:
+        # a table with no pool behind it is malformed paging, not a
+        # missing cache — the distinct code routes the caller to the
+        # pool construction, not the cache construction
+        return "paged_no_pool" if paged else "decode_no_kv_cache"
+    if paged:
+        bt = cache["block_table"]
+        if bt.ndim != 2 or not jnp.issubdtype(bt.dtype, jnp.integer):
+            return "paged_table_rank"
+        if leaf.shape[0] == 0 or bt.shape[1] == 0:
+            return "decode_empty_cache"
+        if leaf.shape[1] < 2 or leaf.shape[1] % 2 != 0:
+            # page size IS the kv tile size; odd tiles break the even/odd
+            # lane tiling the TPU layouts want (PagePoolCfg enforces the
+            # same invariant at pool construction)
+            return "paged_page_misaligned"
+    elif leaf.shape[1] == 0:
         return "decode_empty_cache"
     if "k" in cache and cache["k"].shape[-1] % 2 != 0:
         # the shared even/odd-plane body needs an even head_dim (packed
@@ -323,6 +383,63 @@ def _decode_attn_call(q4, kd, vd, ks, vs, pos2, *, packed: bool,
     return out
 
 
+@functools.partial(jax.jit, static_argnames=("packed", "s_len", "window",
+                                             "ring", "ps", "bh",
+                                             "interpret"))
+def _paged_decode_attn_call(bt, q4, kd, vd, ks, vs, pos2, *, packed: bool,
+                            s_len: int, window: int, ring: int, ps: int,
+                            bh: int, interpret: bool):
+    """Paged twin of `_decode_attn_call`: identical kernel bodies, but the
+    kv/scale BlockSpec index maps read the physical page id from the
+    block table (`bt`, a scalar-prefetch operand) instead of using the
+    grid's kv-tile index directly. kd/vd/ks/vs are the `(n_pages,
+    page_size, Hkv, …)` pools; one whole page == one kv tile, so the
+    gather costs nothing beyond the index indirection."""
+    b, hkv, g, d = q4.shape
+    n = bt.shape[1]
+    grid = (b, hkv // bh, n)
+    kv_spec = pl.BlockSpec((1, ps, bh, kd.shape[-1]),
+                           lambda bb, hh, ss, tbl: (tbl[bb, ss], 0, hh, 0))
+    scl_spec = pl.BlockSpec((1, ps, bh),
+                            lambda bb, hh, ss, tbl: (tbl[bb, ss], 0, hh))
+    q_spec = pl.BlockSpec((1, bh, g, d),
+                          lambda bb, hh, ss, tbl: (bb, hh, 0, 0))
+    pos_spec = pl.BlockSpec((1, 1), lambda bb, hh, ss, tbl: (bb, 0))
+    carry_spec = pl.BlockSpec((1, bh, g, 1),
+                              lambda bb, hh, ss, tbl: (bb, hh, 0, 0))
+    out_shapes = (jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+                  jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+                  jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32))
+    out_specs = (pl.BlockSpec((1, bh, g, d),
+                              lambda bb, hh, ss, tbl: (bb, hh, 0, 0)),
+                 carry_spec, carry_spec)
+    if packed:
+        body = functools.partial(_decode_attn_kernel_packed, bs=ps,
+                                 s_len=s_len, window=window, ring=ring)
+
+        def kernel(tbl_ref, *refs):
+            body(*refs)
+
+        in_specs = [q_spec, kv_spec, kv_spec, scl_spec, scl_spec, pos_spec]
+        operands = (bt, q4, kd, vd, ks, vs, pos2)
+    else:
+        body = functools.partial(_decode_attn_kernel_fp, bs=ps,
+                                 s_len=s_len, window=window, ring=ring)
+
+        def kernel(tbl_ref, *refs):
+            body(*refs)
+
+        in_specs = [q_spec, kv_spec, kv_spec, pos_spec]
+        operands = (bt, q4, kd, vd, pos2)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+        out_specs=out_specs)
+    out, _, _ = pl.pallas_call(kernel, grid_spec=grid_spec,
+                               out_shape=out_shapes,
+                               interpret=interpret)(*operands)
+    return out
+
+
 def _pad_s(x, mult, value=0):
     rem = (-x.shape[1]) % mult
     if rem == 0:
@@ -371,11 +488,11 @@ def fused_decode_attention(q: jax.Array, cache, pos: jax.Array, *,
     """
     b, t, h, d = q.shape
     packed = "k_data" in cache
+    paged = "block_table" in cache
     kd = cache["k_data"] if packed else cache["k"]
     vd = cache["v_data"] if packed else cache["v"]
-    s_len, hkv = kd.shape[1], kd.shape[2]
+    hkv = kd.shape[2]
     g = h // hkv
-    bs = _pick_bs(s_len, block_s)
     if block_h == 0:
         block_h = hkv if interpret else 1
     bh = min(block_h, hkv)
@@ -384,18 +501,39 @@ def fused_decode_attention(q: jax.Array, cache, pos: jax.Array, *,
     qf = q.reshape(b, hkv, g, d).astype(jnp.float32) / math.sqrt(d)
     # even/odd plane layout: q[..., :d/2] multiplies the even K-lanes
     qf = jnp.concatenate([qf[..., 0::2], qf[..., 1::2]], axis=-1)
-    kd, vd = _pad_s(kd, bs), _pad_s(vd, bs)
-    if packed:
-        ks = _pad_s(cache["k_scl"], bs, value=1.0)
-        vs = _pad_s(cache["v_scl"], bs, value=1.0)
-    else:
-        # the fp kernel takes no scale refs; tiny sentinels keep the
-        # jitted call signature uniform without materializing scale planes
-        ks = vs = jnp.zeros((1, 1, 1), jnp.float32)
     pos2 = pos.reshape(b, 1).astype(jnp.int32)
-    out = _decode_attn_call(qf, kd, vd, ks, vs, pos2, packed=packed,
-                            s_len=s_len, window=window, ring=ring, bs=bs,
-                            bh=bh, interpret=interpret)
+    if paged:
+        # page size IS the kv tile size: no padding, no _pick_bs — each
+        # grid step gathers one whole physical page through the table.
+        # Logical capacity is pages_per_row * page_size; a ring cache's
+        # true length is the ring (the pool rounds it up to whole pages
+        # and the mask must exclude the rounding tail).
+        bt = cache["block_table"].astype(jnp.int32)
+        ps = kd.shape[1]
+        s_len = ring if ring else bt.shape[1] * ps
+        if packed:
+            ks, vs = cache["k_scl"], cache["v_scl"]
+        else:
+            ks = vs = jnp.zeros((1, 1, 1), jnp.float32)
+        out = _paged_decode_attn_call(bt, qf, kd, vd, ks, vs, pos2,
+                                      packed=packed, s_len=s_len,
+                                      window=window, ring=ring, ps=ps,
+                                      bh=bh, interpret=interpret)
+    else:
+        s_len = kd.shape[1]
+        bs = _pick_bs(s_len, block_s)
+        kd, vd = _pad_s(kd, bs), _pad_s(vd, bs)
+        if packed:
+            ks = _pad_s(cache["k_scl"], bs, value=1.0)
+            vs = _pad_s(cache["v_scl"], bs, value=1.0)
+        else:
+            # the fp kernel takes no scale refs; tiny sentinels keep the
+            # jitted call signature uniform without materializing scale
+            # planes
+            ks = vs = jnp.zeros((1, 1, 1), jnp.float32)
+        out = _decode_attn_call(qf, kd, vd, ks, vs, pos2, packed=packed,
+                                s_len=s_len, window=window, ring=ring,
+                                bs=bs, bh=bh, interpret=interpret)
     d2 = d // 2
     out = jnp.stack([out[..., :d2], out[..., d2:]], axis=-1)
     return out.reshape(b, hkv, g, d).reshape(b, t, h, d).astype(q.dtype)

@@ -22,6 +22,13 @@ Re-serving from a saved artifact skips the calibration pass:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
       --quant olive_w4a4 --calibration /tmp/calib.json --requests 8
+
+Paged KV cache (docs/kv_cache.md) — block-table page pool instead of the
+(slots, max_len) slab, fused cache-write prefill, optional chunked
+prefill interleaved with decode:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
+      --quant olive_serve --paged 16 --prefill-chunk 32 --requests 16
 """
 from __future__ import annotations
 
@@ -42,6 +49,7 @@ from repro.core.policy import (PRESETS, PROGRAM_PRESETS, get_policy,
 from repro.core.qlinear import quantize_params
 from repro.models.model import build_model
 from repro.serve.engine import EngineCfg, Request, ServingEngine
+from repro.serve.paging import PagePoolCfg
 
 
 def main():
@@ -75,10 +83,23 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--paged", type=int, default=0, metavar="PAGE_SIZE",
+                    help="serve on the paged KV cache: a block-table "
+                         "page pool with this page size instead of the "
+                         "(slots, max_len) slab; prefill writes pages "
+                         "through the fused cache-write kernel (see "
+                         "docs/kv_cache.md)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged mode: split long prompts into chunks of "
+                         "this many tokens, interleaved with decode "
+                         "steps (at most one chunk per step)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.calibrate and not args.calibration:
         ap.error("--calibrate needs --calibration PATH to save into")
+    if args.prefill_chunk and not args.paged:
+        ap.error("--prefill-chunk requires --paged (chunked prefill is "
+                 "a paged-cache feature)")
 
     cfg = get_config(args.arch)
     if args.quant in PROGRAM_PRESETS or args.policy_rules:
@@ -132,8 +153,10 @@ def main():
         params = quantize_params(params, policy)
         print(f"[serve] PTQ ({args.quant}) in {time.time()-t0:.1f}s")
 
+    page_pool = PagePoolCfg(page_size=args.paged) if args.paged else None
     eng = ServingEngine(model, params, EngineCfg(
-        batch_slots=args.slots, max_len=args.max_len))
+        batch_slots=args.slots, max_len=args.max_len,
+        page_pool=page_pool, prefill_chunk=args.prefill_chunk))
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(0, cfg.vocab,
@@ -155,12 +178,16 @@ def main():
     if ttft:
         print(f"[serve] mean TTFT {np.mean(ttft)*1e3:.0f} ms")
     dec_stats = {k: v for k, v in backends.dispatch_stats().items()
-                 if "[decode_attn]" in k}
+                 if "[decode_attn]" in k or "[prefill_attn]" in k}
     if dec_stats:
-        # which backend served decode attention per traced site — on the
-        # pallas backends a packed KV cache must show zero fallbacks (no
-        # full-cache dequant per step; see docs/kv_cache.md)
-        print(f"[serve] decode-attention dispatch: {dec_stats}")
+        # which backend served each attention path per traced site — on
+        # the pallas backends a packed KV cache must show zero fallbacks
+        # (no full-cache dequant per step; see docs/kv_cache.md)
+        print(f"[serve] attention dispatch: {dec_stats}")
+    if args.paged:
+        st = eng.stats()
+        print(f"[serve] page pool: {st['page_pool']} "
+              f"(prefill chunks: {st['prefill_chunks_run']})")
     if args.calibration:
         # the whole point of static serving: zero dynamic resolutions
         print(f"[serve] act-scale resolutions: {backends.act_scale_stats()}")

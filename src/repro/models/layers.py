@@ -374,6 +374,49 @@ def make_kv_cache(batch, length, n_kv, head_dim, dtype=jnp.bfloat16,
     return cache
 
 
+def make_paged_kv_cache(n_pages, page_size, batch_slots, pages_per_row,
+                        n_kv, head_dim, dtype=jnp.bfloat16,
+                        kv_bits: int = 0):
+    """PAGED KV cache dict for one cache site: a global pool of
+    `(n_pages, page_size, Hkv, …)` fixed-size pages plus a per-slot
+    `block_table` `(batch_slots, pages_per_row)` int32 mapping logical
+    page j of a slot to its physical page id (`serve/paging.py` owns the
+    id accounting; unset entries default to page 0 — harmless because
+    every read masks by position, exactly like a slab's unwritten rows).
+
+    OVP packing is what makes this layout possible: every quantized token
+    row costs the same bytes (D/2 nibbles + one f32 scale per head), so a
+    page is a dense tile with no sparsity side-tables. Detection is
+    `"block_table" in cache` everywhere (cache_write / cache_len /
+    kernels); page_size is also the fused decode kernel's kv-tile size.
+    """
+    if page_size < 2 or page_size % 2:
+        raise ValueError(
+            f"page_size must be an even int >= 2 (OVP packs value pairs "
+            f"2-per-byte along head_dim); got {page_size}")
+    if head_dim % 2 != 0 and kv_bits == 4:
+        raise ValueError(
+            f"OVP-packed KV cache needs an even head_dim (values pair "
+            f"2-per-byte along it); got head_dim={head_dim}.")
+    if kv_bits == 4:
+        cache = {"k_data": jnp.zeros((n_pages, page_size, n_kv,
+                                      head_dim // 2), jnp.uint8),
+                 "v_data": jnp.zeros((n_pages, page_size, n_kv,
+                                      head_dim // 2), jnp.uint8),
+                 "k_scl": jnp.ones((n_pages, page_size, n_kv),
+                                   jnp.float32),
+                 "v_scl": jnp.ones((n_pages, page_size, n_kv),
+                                   jnp.float32)}
+    else:
+        cache = {"k": jnp.zeros((n_pages, page_size, n_kv, head_dim),
+                                dtype),
+                 "v": jnp.zeros((n_pages, page_size, n_kv, head_dim),
+                                dtype)}
+    cache["block_table"] = jnp.zeros((batch_slots, pages_per_row),
+                                     jnp.int32)
+    return cache
+
+
 def _quant_kv_token(x):
     """x: (B, T, Hkv, D) -> packed nibbles + per-(token, head) 3σ scales."""
     from repro.core.ovp import ovp_encode_codes, pack4
@@ -392,6 +435,8 @@ def cache_write(cache, k_new, v_new, pos, ring: int = 0):
     idx = pos[:, None] + jnp.arange(t)[None, :]            # (B, T)
     if ring:
         idx = idx % ring
+    if "block_table" in cache:
+        return _paged_cache_write(cache, k_new, v_new, idx)
     bidx = jnp.arange(b)[:, None] + jnp.zeros_like(idx)
     out = dict(cache)
     if "k" in cache:
@@ -406,6 +451,34 @@ def cache_write(cache, k_new, v_new, pos, ring: int = 0):
     out["v_data"] = cache["v_data"].at[bidx, idx].set(vd, mode="drop")
     out["k_scl"] = cache["k_scl"].at[bidx, idx].set(ks, mode="drop")
     out["v_scl"] = cache["v_scl"].at[bidx, idx].set(vs, mode="drop")
+    return out
+
+
+def _paged_cache_write(cache, k_new, v_new, idx):
+    """Scatter token rows through the block table: logical row `idx`
+    (B, T) of slot b lands in pool page `block_table[b, idx // ps]` at
+    page row `idx % ps`. Rows past a slot's table capacity drop — same
+    semantics as a slab's `mode="drop"` past max_len."""
+    bt = cache["block_table"]                              # (B, n)
+    pool = cache.get("k", cache.get("k_data"))
+    ps, n = pool.shape[1], bt.shape[1]
+    page = jnp.take_along_axis(bt, jnp.clip(idx // ps, 0, n - 1), axis=1)
+    # pool.shape[0] is one past the last page -> dropped by mode="drop"
+    page = jnp.where((idx >= 0) & (idx < n * ps), page, pool.shape[0])
+    row = idx % ps
+    out = dict(cache)
+    if "k" in cache:
+        out["k"] = cache["k"].at[page, row].set(
+            k_new.astype(cache["k"].dtype), mode="drop")
+        out["v"] = cache["v"].at[page, row].set(
+            v_new.astype(cache["v"].dtype), mode="drop")
+        return out
+    kd, ks = _quant_kv_token(k_new)
+    vd, vs = _quant_kv_token(v_new)
+    out["k_data"] = cache["k_data"].at[page, row].set(kd, mode="drop")
+    out["v_data"] = cache["v_data"].at[page, row].set(vd, mode="drop")
+    out["k_scl"] = cache["k_scl"].at[page, row].set(ks, mode="drop")
+    out["v_scl"] = cache["v_scl"].at[page, row].set(vs, mode="drop")
     return out
 
 
@@ -506,6 +579,30 @@ def attention_forward(p, x, positions, cfg, policy: PolicyLike, *,
             kpos = positions if kv_x is None else \
                 jnp.broadcast_to(jnp.arange(s_len)[None], (b, s_len))
             k = rope(k, kpos, cfg.rope_theta)
+        if (mode == "prefill" and kv_x is None and window == 0
+                and cache is not None and "block_table" in cache
+                and "stage_k" in cache):
+            # paged fused prefill: append the chunk's raw K/V to the
+            # per-request stage, then one registry dispatch both attends
+            # the chunk causally over the stage AND quantize-writes every
+            # stage tile onto its block-table pages (no splice round
+            # trip). Chunk offset = positions[0, 0] (traced: one jit
+            # trace per stage length serves every chunk index).
+            off = positions[0, 0]
+            st_k = jax.lax.dynamic_update_slice(
+                cache["stage_k"], k.astype(cache["stage_k"].dtype),
+                (0, off, 0, 0))
+            st_v = jax.lax.dynamic_update_slice(
+                cache["stage_v"], v.astype(cache["stage_v"].dtype),
+                (0, off, 0, 0))
+            cache = dict(cache, stage_k=st_k, stage_v=st_v)
+            from repro import backends
+            out, cache = backends.prefill_attention(
+                q, cache, positions, policy=rp(policy, site, "kv"))
+            out = out.reshape(b, t, nh * hd)
+            out = qlinear.linear(out, p["wo"], None,
+                                 *rps(policy, site, "wo"))
+            return logical(out, "batch", "seq", "embed"), cache
         q = logical(q, "batch", "seq", "heads", None)
         k = logical(k, "batch", "seq", "kv_heads", None)
         if window and causal:
@@ -537,6 +634,9 @@ def cache_len(cache) -> int:
     if cache is None:
         return 0
     leaf = cache.get("k", cache.get("k_data"))
+    if "block_table" in cache:
+        # paged: logical capacity of one slot = table width * page size
+        return cache["block_table"].shape[1] * leaf.shape[1]
     return leaf.shape[1]
 
 

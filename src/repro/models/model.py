@@ -307,6 +307,46 @@ class Model:
         }
         return caches
 
+    def init_paged_caches(self, n_pages: int, page_size: int,
+                          batch_slots: int, pages_per_row: int,
+                          dtype=jnp.bfloat16):
+        """PAGED KV caches: every cache site holds a `(n_pages, page_size,
+        …)` pool plus a `(batch_slots, pages_per_row)` block table (see
+        `layers.make_paged_kv_cache` / `serve/paging.py`). Page ids are
+        shared across sites — one allocator row backs the same token rows
+        in every layer. Only pure attention patterns page (local_attn ring
+        buffers, recurrent state, and enc-dec caches keep the slab
+        layout); mixed patterns raise rather than silently paging half
+        the stack."""
+        cfg = self.cfg
+        pol = self.policy
+        bad = sorted({bt for bt in cfg.block_pattern
+                      if bt not in ("attn", "moe")})
+        if bad:
+            raise ValueError(
+                f"paged KV caches support pure attn/moe block patterns; "
+                f"pattern {cfg.block_pattern} has {bad}")
+        period = len(cfg.block_pattern)
+
+        def one(addr):
+            kv_bits = pol.resolve(addr).kv_bits
+            return {"kv": L.make_paged_kv_cache(
+                n_pages, page_size, batch_slots, pages_per_row,
+                cfg.n_kv_heads, cfg.head_dim, dtype, kv_bits)}
+
+        if self.unrolled:
+            return {"layers": [one(f"layers/{i}/attn/kv")
+                               for i in range(cfg.n_layers)]}
+
+        def one_group(_):
+            return {str(j): one(f"blocks/{j}/attn/kv")
+                    for j in range(period)}
+
+        return {"blocks": (jax.vmap(one_group)(jnp.arange(self.n_groups))
+                           if self.n_groups else {}),
+                "tail": [one(f"tail/{j}/attn/kv")
+                         for j in range(self.n_tail)]}
+
     # ----------------------------------------------------------- forward
     def _embed_inputs(self, params, batch: Dict[str, jax.Array]):
         cfg = self.cfg

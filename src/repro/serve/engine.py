@@ -16,6 +16,21 @@ the kernel, no full-cache dequant ever traces, and in-kernel masking from
 the traced positions means one compiled decode step serves every
 active-length mix in the slots. `EngineCfg.backend` overrides the
 policy's backend for these sites too. See docs/kv_cache.md.
+
+PAGED mode (`EngineCfg.page_pool`): instead of one dense
+`(batch_slots, max_len)` slab per cache site, every site shares a global
+pool of fixed-size OVP-packed pages (`serve/paging.py`); a per-slot block
+table maps logical token rows to physical pages and admission reserves a
+request's WORST-CASE pages up front (`PagePool.can_alloc`), so a request
+never OOMs mid-decode — it queues instead. Prefill runs CHUNKED: `_admit`
+stages the prompt and `step()` interleaves at most ONE fixed-size prefill
+chunk per engine step into the running decode batch (a long prompt never
+stalls decode for more than one chunk), each chunk one fused
+cache-write-prefill dispatch (`backends.prefill_attention`) that attends
+the raw staged prompt AND quantizes every stage tile onto its pages —
+no `_splice_slot` round trip. Decode gathers K/V tiles through the block
+table inside the same fused decode kernel (page size == kv tile size).
+Slots free their pages on completion; `defrag()` compacts the pool.
 """
 from __future__ import annotations
 
@@ -35,6 +50,7 @@ from repro.core.calibration import (CalibrationArtifact,
                                     apply_calibration, static_scale_misses,
                                     uses_static_scales)
 from repro.models.model import Model
+from repro.serve.paging import PagePool, PagePoolCfg, pages_for
 
 
 @dataclasses.dataclass
@@ -44,9 +60,32 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # why the request stopped: "eos" | "max_new_tokens" | "length_cap"
+    # (hit cfg.max_len - 1 — previously a silent truncation)
+    finish_reason: Optional[str] = None
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class _Prefilling:
+    """One request mid-chunked-prefill (paged mode): pages are already
+    reserved, the raw prompt K/V accumulates in per-site stage buffers,
+    and `step()` feeds one chunk per engine step until `written` covers
+    the prompt."""
+    req: Request
+    slot: int
+    toks: np.ndarray        # (stage_len,) right-padded prompt
+    t: int                  # true prompt length
+    chunk: int              # tokens per chunk (page-size multiple)
+    stage_len: int          # staged rows (trace key; page-size multiple)
+    stage_tiles: int        # stage_len // page_size
+    pages: List[int]        # physical pages, logical order
+    gen_pages: int          # pages kept after prefill (decode horizon)
+    target: int             # chunked tokens to process: ceil(t/chunk)*chunk
+    written: int            # tokens already prefilled
+    stage: object           # per-site {"stage_k","stage_v"} pytree
 
 
 @dataclasses.dataclass
@@ -65,6 +104,19 @@ class EngineCfg:
     # misses raise the machine-readable `MissingStaticScaleError` up
     # front instead of mid-trace on the first prefill.
     calibration: Optional[CalibrationArtifact] = None
+    # paged KV cache (serve/paging.py): replaces the per-site
+    # (batch_slots, max_len) slab with a global page pool + block tables,
+    # chunked prefill, and page-level admission control. Needs a pure
+    # attn/moe block pattern. None = slab mode (unchanged).
+    page_pool: Optional[PagePoolCfg] = None
+    # chunked-prefill chunk size in tokens (paged mode; rounded up to a
+    # page multiple). 0 = whole prompt in one chunk. Either way at most
+    # ONE chunk runs per engine step, interleaved with decode.
+    prefill_chunk: int = 0
+    # LRU cap on the per-bucket jitted-prefill cache: with exact-length
+    # prefill (non-bucketable block patterns) the cache previously grew
+    # one entry per distinct prompt length, without bound.
+    prefill_cache_cap: int = 8
 
 
 class ServingEngine:
@@ -116,8 +168,6 @@ class ServingEngine:
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * cfg.batch_slots
         self.pos = np.zeros((cfg.batch_slots,), np.int32)
-        self.caches = model.init_caches(cfg.batch_slots, cfg.max_len,
-                                        dtype=jnp.float32)
         self.completed: List[Request] = []
         self._uid = 0
         # Bucketed prefill right-pads the prompt so the trace is keyed by
@@ -130,6 +180,40 @@ class ServingEngine:
         self._bucket_ok = all(bt in ("attn", "moe")
                               for bt in model.cfg.block_pattern)
         self.prefill_traces = 0  # trace counter (tests assert bucket reuse)
+        self.prefill_cache_evictions = 0
+        self.prefill_chunks_run = 0
+
+        self.paged = cfg.page_pool is not None
+        if self.paged:
+            if not self._bucket_ok:
+                raise ValueError(
+                    f"page_pool needs a pure attn/moe block pattern "
+                    f"(ring/recurrent state does not page); got "
+                    f"{model.cfg.block_pattern}")
+            pp = cfg.page_pool
+            # table width covers the BUCKETED stage of the longest prompt,
+            # not just max_len (buckets round up to powers of two)
+            self.pages_per_row = pages_for(self._bucket(cfg.max_len),
+                                           pp.page_size)
+            n_pages = pp.n_pages or cfg.batch_slots * self.pages_per_row
+            self.pool = PagePool(n_pages, pp.page_size)
+            self._bt = np.zeros((cfg.batch_slots, self.pages_per_row),
+                                np.int32)
+            self.caches = model.init_paged_caches(
+                n_pages, pp.page_size, cfg.batch_slots, self.pages_per_row,
+                dtype=jnp.float32)
+            self._prefilling: collections.deque = collections.deque()
+            self._prefill_slots: set = set()
+            # inactive slots decode in the batch like everyone else (the
+            # batched step has no per-row gating); park their write index
+            # past the table capacity so the scatter DROPS instead of
+            # landing on page 0, which a live request may own
+            self._pos_parked = self.pages_per_row * pp.page_size
+            self.pos[:] = self._pos_parked
+            self._sync_tables()
+        else:
+            self.caches = model.init_caches(cfg.batch_slots, cfg.max_len,
+                                            dtype=jnp.float32)
 
         def prefill_one(params, caches, tokens, length):
             """Prefill one slot row; `tokens` (1, bucket) right-padded,
@@ -146,9 +230,26 @@ class ServingEngine:
                 caches=caches)
             return logits[:, 0], new_caches
 
+        def prefill_chunk(params, caches, tokens, positions, len_m1):
+            """One chunked-prefill dispatch (paged mode): tokens (1, C) of
+            one request, positions (1, C) absolute, `len_m1` the prompt's
+            last index (traced — the chunk offset and the logit read both
+            trace, so ONE jit trace per stage length serves every chunk of
+            every prompt in the bucket)."""
+            self.prefill_traces += 1
+            logits, new_caches, _ = self.model.forward(
+                params, {"tokens": tokens}, mode="prefill", caches=caches,
+                positions=positions)
+            idx = jnp.clip(len_m1 - positions[0, 0], 0,
+                           tokens.shape[1] - 1)
+            return jnp.take(logits, idx, axis=1), new_caches
+
         self._decode = jax.jit(decode_step)
         self._prefill = prefill_one  # jit per prompt-length bucket below
-        self._prefill_cache: Dict[int, Callable] = {}
+        self._prefill_chunk = prefill_chunk
+        # LRU over jitted prefill entries (keyed by bucket / stage length)
+        self._prefill_cache: "collections.OrderedDict[object, Callable]" \
+            = collections.OrderedDict()
 
     # -------------------------------------------------------------- API
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
@@ -165,7 +266,79 @@ class ServingEngine:
             b *= 2
         return b
 
+    def _jit_prefill(self, key, fn) -> Callable:
+        """Jitted-prefill cache with an LRU cap: exact-length prefill
+        (non-bucketable patterns) keys on the raw prompt length, which is
+        unbounded over a long-running serve."""
+        cache = self._prefill_cache
+        if key in cache:
+            cache.move_to_end(key)
+            return cache[key]
+        jitted = jax.jit(fn)
+        cache[key] = jitted
+        while len(cache) > max(1, self.cfg.prefill_cache_cap):
+            cache.popitem(last=False)
+            self.prefill_cache_evictions += 1
+        return jitted
+
+    # ------------------------------------------------- paged-cache helpers
+    @staticmethod
+    def _map_sites(tree, fn):
+        """Apply fn to every paged cache-site dict (detected by its
+        "block_table" key) in a cache pytree."""
+        if isinstance(tree, dict):
+            if "block_table" in tree:
+                return fn(tree)
+            return {k: ServingEngine._map_sites(v, fn)
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(ServingEngine._map_sites(v, fn)
+                              for v in tree)
+        return tree
+
+    @staticmethod
+    def _pair_sites(a, b, fn):
+        """Zip two cache pytrees (a drives the structure) and apply fn at
+        each paged site pair."""
+        if isinstance(a, dict):
+            if "block_table" in a:
+                return fn(a, b)
+            return {k: ServingEngine._pair_sites(a[k], b[k], fn)
+                    for k in a}
+        if isinstance(a, (list, tuple)):
+            return type(a)(ServingEngine._pair_sites(x, y, fn)
+                           for x, y in zip(a, b))
+        return a
+
+    def _sync_tables(self):
+        """Push the host block table into every cache site (scan-stacked
+        sites broadcast the same table across groups — page ids back the
+        same token rows in every layer)."""
+        bt = jnp.asarray(self._bt)
+
+        def set_bt(site):
+            cur = site["block_table"]
+            new = bt if cur.ndim == 2 else \
+                jnp.broadcast_to(bt[None], cur.shape)
+            return dict(site, block_table=new)
+
+        self.caches = self._map_sites(self.caches, set_bt)
+
+    def _fresh_stage(self, site, stage_len: int):
+        cfg = self.model.cfg
+        shape = (1, stage_len, cfg.n_kv_heads, cfg.head_dim)
+        if site["block_table"].ndim == 3:
+            shape = (site["block_table"].shape[0],) + shape
+        z = jnp.zeros(shape, jnp.float32)
+        return {"stage_k": z, "stage_v": z}
+
     def _admit(self):
+        if self.paged:
+            self._admit_paged()
+            return
+        self._admit_slab()
+
+    def _admit_slab(self):
         """Fill free slots from the queue (prefill batched per request).
 
         Prompts right-pad to the bucket length so the jit cache key (the
@@ -180,13 +353,11 @@ class ServingEngine:
                 bucket = self._bucket(t) if self._bucket_ok else t
                 toks = np.zeros((bucket,), np.int32)
                 toks[:t] = req.prompt  # right-pad; causal mask shields pads
-                key = bucket
-                if key not in self._prefill_cache:
-                    self._prefill_cache[key] = jax.jit(self._prefill)
+                fn = self._jit_prefill(bucket, self._prefill)
                 # prefill into a fresh single-row cache, splice into slot s
                 row_cache = self.model.init_caches(1, self.cfg.max_len,
                                                    dtype=jnp.float32)
-                logits, row_cache = self._prefill_cache[key](
+                logits, row_cache = fn(
                     self.params, row_cache, jnp.asarray(toks[None, :]),
                     jnp.int32(t))
                 self.caches = _splice_slot(self.caches, row_cache, s)
@@ -194,23 +365,142 @@ class ServingEngine:
                 nxt = int(jnp.argmax(logits[0]))
                 req.out_tokens.append(nxt)
                 req.t_first = time.monotonic()
-                if (self.cfg.eos_id >= 0 and nxt == self.cfg.eos_id) or \
-                        len(req.out_tokens) >= req.max_new_tokens:
-                    # the prefill token already satisfies the budget (or
-                    # hit EOS): never enter decode — a max_new_tokens=1
-                    # request must return exactly one token, not two
-                    req.done = True
-                    req.t_done = time.monotonic()
-                    self.completed.append(req)
-                    continue
-                self.slots[s] = req
+                if not self._finish_at_admit(req, nxt):
+                    self.slots[s] = req
+
+    def _finish_at_admit(self, req: Request, nxt: int) -> bool:
+        """The prefill token already satisfies the budget (or hit EOS):
+        never enter decode — a max_new_tokens=1 request must return
+        exactly one token, not two."""
+        if self.cfg.eos_id >= 0 and nxt == self.cfg.eos_id:
+            req.finish_reason = "eos"
+        elif len(req.out_tokens) >= req.max_new_tokens:
+            req.finish_reason = "max_new_tokens"
+        else:
+            return False
+        req.done = True
+        req.t_done = time.monotonic()
+        self.completed.append(req)
+        return True
+
+    def _admit_paged(self):
+        """Reserve pages + a slot for queued requests and move them into
+        the chunked-prefill pipeline. Admission is all-or-nothing on the
+        request's WORST-CASE page budget (prompt stage + full decode
+        horizon), so a running request can never OOM the pool mid-decode;
+        FIFO order holds — a head-of-line request that doesn't fit blocks
+        the queue until frees make room."""
+        ps = self.pool.page_size
+        for s in range(self.cfg.batch_slots):
+            if not self.queue:
+                return
+            if self.slots[s] is not None or s in self._prefill_slots:
+                continue
+            req = self.queue[0]
+            t = len(req.prompt)
+            chunk = self.cfg.prefill_chunk
+            chunk = -(-chunk // ps) * ps if chunk else 0
+            stage_len = -(-self._bucket(t) // (chunk or ps)) * (chunk or ps)
+            chunk = chunk or stage_len
+            stage_tiles = stage_len // ps
+            horizon = min(t + req.max_new_tokens, self.cfg.max_len)
+            gen_pages = pages_for(horizon, ps)
+            need = max(gen_pages, stage_tiles)
+            got = self.pool.alloc(need, req.uid)
+            if got is None:
+                return
+            self.queue.popleft()
+            toks = np.zeros((stage_len,), np.int32)
+            toks[:t] = req.prompt
+            self._bt[s, :] = 0
+            self._bt[s, :need] = got
+            self._sync_tables()
+            stage = self._map_sites(
+                self.caches, lambda site: self._fresh_stage(site,
+                                                            stage_len))
+            self._prefilling.append(_Prefilling(
+                req=req, slot=s, toks=toks, t=t, chunk=chunk,
+                stage_len=stage_len, stage_tiles=stage_tiles, pages=got,
+                gen_pages=gen_pages, target=-(-t // chunk) * chunk,
+                written=0, stage=stage))
+            self._prefill_slots.add(s)
+
+    def _run_prefill_chunk(self):
+        """Feed ONE chunk of the oldest mid-prefill request through the
+        fused cache-write prefill — the per-step prefill budget that keeps
+        long prompts from stalling the decode batch."""
+        if not self._prefilling:
+            return
+        pf = self._prefilling[0]
+        off = pf.written
+        toks = pf.toks[off:off + pf.chunk]
+        positions = np.arange(off, off + pf.chunk, dtype=np.int32)
+        bt_row = jnp.asarray(np.asarray(pf.pages[:pf.stage_tiles],
+                                        np.int32)[None])
+
+        def view(site, stage):
+            btv = bt_row if site["block_table"].ndim == 2 else \
+                jnp.broadcast_to(bt_row[None],
+                                 (site["block_table"].shape[0],)
+                                 + bt_row.shape)
+            return dict(site, block_table=btv, **stage)
+
+        caches_view = self._pair_sites(self.caches, pf.stage, view)
+        fn = self._jit_prefill(("paged", pf.stage_len),
+                               self._prefill_chunk)
+        logits, new_view = fn(self.params, caches_view,
+                              jnp.asarray(toks[None]),
+                              jnp.asarray(positions[None]),
+                              jnp.int32(pf.t - 1))
+        self.prefill_chunks_run += 1
+        # pool leaves mutated by the chunk write back into the live
+        # caches NOW (decode steps of other slots interleave between
+        # chunks); the raw stage persists on the request
+        self.caches = self._pair_sites(
+            self.caches, new_view,
+            lambda site, new: dict(site, **{k: new[k] for k in site
+                                            if k != "block_table"}))
+        pf.stage = self._pair_sites(
+            self.caches, new_view,
+            lambda site, new: {"stage_k": new["stage_k"],
+                               "stage_v": new["stage_v"]})
+        pf.written += pf.chunk
+        if pf.written < pf.target:
+            return
+        # prompt fully prefilled: release the stage-only page surplus
+        # (stage tiles past the decode horizon) and activate the slot
+        req, s = pf.req, pf.slot
+        self._prefilling.popleft()
+        self._prefill_slots.discard(s)
+        if len(pf.pages) > pf.gen_pages:
+            self.pool.free(req.uid, pf.pages[pf.gen_pages:])
+        self._bt[s, :] = 0
+        self._bt[s, :pf.gen_pages] = pf.pages[:pf.gen_pages]
+        self._sync_tables()
+        nxt = int(jnp.argmax(logits[0]))
+        req.out_tokens.append(nxt)
+        req.t_first = time.monotonic()
+        if self._finish_at_admit(req, nxt):
+            self._free_slot_pages(s, req)
+            return
+        self.pos[s] = pf.t
+        self.slots[s] = req
+
+    def _free_slot_pages(self, s: int, req: Request):
+        self.pool.free(req.uid)
+        self._bt[s, :] = 0
+        self.pos[s] = self._pos_parked
+        self._sync_tables()
 
     def _active(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
 
     def step(self):
-        """One engine iteration: admit + one batched decode step."""
+        """One engine iteration: admit, at most one prefill chunk (paged
+        mode), then one batched decode step for every active slot."""
         self._admit()
+        if self.paged:
+            self._run_prefill_chunk()
         act = self._active()
         if not act:
             return
@@ -226,20 +516,79 @@ class ServingEngine:
             self.pos[i] += 1
             tok = int(nxt[i])
             req.out_tokens.append(tok)
-            if (self.cfg.eos_id >= 0 and tok == self.cfg.eos_id) or \
-                    len(req.out_tokens) >= req.max_new_tokens or \
-                    int(self.pos[i]) >= self.cfg.max_len - 1:
-                req.done = True
-                req.t_done = time.monotonic()
-                self.completed.append(req)
-                self.slots[i] = None
+            if self.cfg.eos_id >= 0 and tok == self.cfg.eos_id:
+                reason = "eos"
+            elif len(req.out_tokens) >= req.max_new_tokens:
+                reason = "max_new_tokens"
+            elif int(self.pos[i]) >= self.cfg.max_len - 1:
+                # out of cache rows before the token budget: surface the
+                # truncation instead of silently stopping early
+                reason = "length_cap"
+            else:
+                continue
+            req.done = True
+            req.finish_reason = reason
+            req.t_done = time.monotonic()
+            self.completed.append(req)
+            self.slots[i] = None
+            if self.paged:
+                self._free_slot_pages(i, req)
 
     def run_until_drained(self, max_steps: int = 10000):
         steps = 0
-        while (self.queue or self._active()) and steps < max_steps:
+        while (self.queue or self._active()
+               or (self.paged and self._prefilling)) and steps < max_steps:
             self.step()
             steps += 1
         return self.completed
+
+    # ------------------------------------------------------ observability
+    def stats(self) -> Dict[str, object]:
+        """Engine counters: prefill trace/cache behaviour, chunk counts,
+        and (paged mode) the page pool's occupancy/failure stats."""
+        st: Dict[str, object] = {
+            "prefill_traces": self.prefill_traces,
+            "prefill_cache_size": len(self._prefill_cache),
+            "prefill_cache_evictions": self.prefill_cache_evictions,
+            "prefill_chunks_run": self.prefill_chunks_run,
+        }
+        if self.paged:
+            st["page_pool"] = self.pool.stats()
+        return st
+
+    def defrag(self):
+        """Compact live pages onto the low end of the pool (paged mode):
+        gathers every site's pool arrays by the compaction source map and
+        rebuilds the block tables. Serving results are unchanged — pages
+        are position-independent — so this exists for pool elasticity
+        (the free tail can be released), not correctness."""
+        if not self.paged:
+            return None
+        src, remap = self.pool.compact()
+        srcj = jnp.asarray(src)
+
+        def gather(site):
+            out = {}
+            for k, v in site.items():
+                if k == "block_table":
+                    out[k] = v
+                else:
+                    out[k] = v[srcj] if site["block_table"].ndim == 2 \
+                        else v[:, srcj]
+            return out
+
+        self.caches = self._map_sites(self.caches, gather)
+        self._bt[:] = 0
+        owners = {r.uid: (s, r) for s, r in enumerate(self.slots)
+                  if r is not None}
+        for pf in self._prefilling:
+            pf.pages = self.pool.pages_of(pf.req.uid)
+            self._bt[pf.slot, :len(pf.pages)] = pf.pages
+        for uid, (s, _r) in owners.items():
+            pages = self.pool.pages_of(uid)
+            self._bt[s, :len(pages)] = pages
+        self._sync_tables()
+        return remap
 
 
 def _splice_slot(full_caches, row_caches, slot: int):

@@ -1,0 +1,21 @@
+"""Shared pytest fixtures.
+
+The tier-1 suite runs every module in one process; on JAX-CPU each
+module's jitted programs stay resident in XLA's executable cache for the
+life of the process. With the full suite that accumulation segfaults the
+CPU compiler late in the run (deep inside `backend_compile`, while
+compiling an unrelated fresh trace) even though every module passes in
+isolation. Dropping the caches at module boundaries bounds the resident
+executable set; modules re-jit their own programs anyway, so the only
+cost is a handful of recompiles.
+"""
+from __future__ import annotations
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_xla_executable_cache():
+    yield
+    jax.clear_caches()

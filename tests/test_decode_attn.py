@@ -287,6 +287,130 @@ def test_engine_quantized_decode_zero_full_dequant(monkeypatch):
     assert not any("->fallback:" in k for k in decode_keys)
 
 
+# ----------------------------------------------------- paged == slab
+def _paged_from_slab(slab, ps, bt_rows, n_pages):
+    """Scatter a slab cache's rows into a page pool through a block
+    table: paged view of the exact same bytes. Unowned pages are filled
+    with garbage to prove the table (not page order) selects the data."""
+    rng = np.random.default_rng(99)
+    bt = np.asarray(bt_rows, np.int32)
+    paged = {"block_table": jnp.asarray(bt)}
+    for key, leaf in slab.items():
+        if key not in ("k", "v", "k_data", "v_data", "k_scl", "v_scl"):
+            continue
+        arr = np.asarray(leaf)
+        b, s = arr.shape[:2]
+        tiles = arr.reshape((b, s // ps, ps) + arr.shape[2:])
+        if arr.dtype == np.uint8:
+            pool = rng.integers(0, 255, (n_pages, ps) + arr.shape[2:],
+                                dtype=np.uint8)
+        else:
+            pool = rng.standard_normal(
+                (n_pages, ps) + arr.shape[2:]).astype(arr.dtype)
+        for i in range(b):
+            for j in range(s // ps):
+                pool[bt[i, j]] = tiles[i, j]
+        paged[key] = jnp.asarray(pool)
+    return paged
+
+
+@pytest.mark.parametrize("kv_bits,dtype", [(4, jnp.float32),
+                                           (0, jnp.bfloat16)])
+@pytest.mark.parametrize("g", [1, 2, 4])
+def test_paged_matches_slab_bit_for_bit(kv_bits, dtype, g):
+    """The paged kernel is the slab kernel plus one block-table
+    indirection on the kv-tile grid dim — with slab block_s = page_size
+    the tile arithmetic is identical, so outputs match bit-for-bit even
+    on permuted, fragmented page layouts and non-divisible lengths."""
+    rng = np.random.default_rng(10)
+    b, s, ps, hkv, d = 2, 24, 8, 2, 16
+    slab = _mk_cache(rng, b, s, hkv, d, kv_bits, dtype=dtype, n_tok=19)
+    paged = _paged_from_slab(slab, ps, [[5, 2, 9], [0, 7, 3]], 12)
+    q = jnp.asarray(rng.standard_normal((b, 1, hkv * g, d)), jnp.float32)
+    for pos in ([5, 18], [18, 0]):          # non-divisible active lengths
+        pos = jnp.asarray(pos, jnp.int32)
+        got = DA.fused_decode_attention(q, paged, pos, interpret=True)
+        want = DA.fused_decode_attention(q, slab, pos, interpret=True,
+                                         block_s=ps)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # dense fallback materializes through the same table: also exact
+        np.testing.assert_array_equal(
+            np.asarray(DA.xla_decode_attention(q, paged, pos)),
+            np.asarray(DA.xla_decode_attention(q, slab, pos)))
+
+
+@pytest.mark.parametrize("kv_bits", [0, 4])
+def test_paged_ring_window_matches_slab(kv_bits):
+    rng = np.random.default_rng(11)
+    b, ring, ps, hkv, d, window = 2, 16, 8, 2, 8, 8
+    slab = _mk_cache(rng, b, ring, hkv, d, kv_bits, ring=ring)
+    paged = _paged_from_slab(slab, ps, [[3, 1], [6, 0]], 8)
+    q = jnp.asarray(rng.standard_normal((b, 1, 4, d)), jnp.float32)
+    for pos in ([13, 21], [7, 40]):
+        pos = jnp.asarray(pos, jnp.int32)
+        got = DA.fused_decode_attention(q, paged, pos, interpret=True,
+                                        window=window, ring=ring)
+        want = DA.fused_decode_attention(q, slab, pos, interpret=True,
+                                         block_s=ps, window=window,
+                                         ring=ring)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_fragmented_pool_matches_slab():
+    """Alloc/free interleaving leaves a request's pages scattered across
+    the pool; attention through the resulting block table must still be
+    bit-identical to the contiguous slab."""
+    from repro.serve.paging import PagePool
+    rng = np.random.default_rng(12)
+    b, s, ps, hkv, d = 2, 32, 8, 2, 16
+    pool = PagePool(16, ps)
+    pool.alloc(3, owner=100)                   # churn: stagger the frees
+    row0 = pool.alloc(4, owner=1)
+    pool.free(100)
+    row1 = pool.alloc(4, owner=2)              # lands in the freed holes
+    assert row1 != sorted(row1) or row1[0] < row0[-1]  # truly fragmented
+    slab = _mk_cache(rng, b, s, hkv, d, 4)
+    paged = _paged_from_slab(slab, ps, [row0, row1], 16)
+    q = jnp.asarray(rng.standard_normal((b, 1, 4, d)), jnp.float32)
+    pos = jnp.asarray([31, 11], jnp.int32)
+    got = DA.fused_decode_attention(q, paged, pos, interpret=True)
+    want = DA.fused_decode_attention(q, slab, pos, interpret=True,
+                                     block_s=ps)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_single_pallas_call():
+    rng = np.random.default_rng(13)
+    slab = _mk_cache(rng, 2, 16, 2, 8, 4)
+    paged = _paged_from_slab(slab, 8, [[1, 4], [2, 5]], 8)
+    q = jnp.asarray(rng.standard_normal((2, 1, 4, 8)), jnp.float32)
+    pos = jnp.asarray([3, 15], jnp.int32)
+    n = backends.count_pallas_calls(
+        lambda q, p: DA.fused_decode_attention(q, paged, p,
+                                               interpret=True), q, pos)
+    assert n == 1
+
+
+def test_paged_decline_reasons():
+    rng = np.random.default_rng(14)
+    slab = _mk_cache(rng, 2, 16, 2, 8, 4)
+    paged = _paged_from_slab(slab, 8, [[1, 4], [2, 5]], 8)
+    q = jnp.zeros((2, 1, 4, 8))
+    assert DA.decline_reason(q, paged) is None
+    assert DA.decline_reason(q, {"block_table": paged["block_table"]}) \
+        == "paged_no_pool"
+    bad_rank = dict(paged, block_table=paged["block_table"][..., None])
+    assert DA.decline_reason(q, bad_rank) == "paged_table_rank"
+    bad_dtype = dict(paged,
+                     block_table=paged["block_table"].astype(jnp.float32))
+    assert DA.decline_reason(q, bad_dtype) == "paged_table_rank"
+    odd = {key: (leaf[:, :7] if key != "block_table" else leaf)
+           for key, leaf in paged.items()}
+    assert DA.decline_reason(q, odd) == "paged_page_misaligned"
+    empty = dict(paged, block_table=paged["block_table"][:, :0])
+    assert DA.decline_reason(q, empty) == "decode_empty_cache"
+
+
 def test_engine_backend_override_reaches_decode_attention():
     """EngineCfg.backend rewrites the policy backend for decode-attention
     sites too: an xla-policy model overridden to the kernel backend must

@@ -1,0 +1,109 @@
+"""PagePool allocator suite: reserve-before-admit accounting, all-or-
+nothing grants, double-free detection, compaction, and the pool-sizing
+helpers the paged benchmarks build on (serve/paging.py)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serve.paging import (PagePool, PagePoolCfg,
+                                kv_bytes_per_token_per_site,
+                                max_concurrent_requests, pages_for,
+                                pool_pages_for_budget)
+
+
+def test_cfg_validates_page_size():
+    assert PagePoolCfg().page_size == 16
+    with pytest.raises(ValueError, match="even int"):
+        PagePoolCfg(page_size=7)
+    with pytest.raises(ValueError, match="even int"):
+        PagePoolCfg(page_size=0)
+    with pytest.raises(ValueError, match="n_pages"):
+        PagePoolCfg(n_pages=-1)
+
+
+def test_pages_for():
+    assert pages_for(1, 16) == 1
+    assert pages_for(16, 16) == 1
+    assert pages_for(17, 16) == 2
+    assert pages_for(0, 16) == 1   # even an empty request holds one page
+
+
+def test_alloc_free_roundtrip():
+    pool = PagePool(8, 16)
+    a = pool.alloc(3, owner=1)
+    b = pool.alloc(2, owner=2)
+    assert sorted(a + b) == list(range(5))  # low ids first
+    assert pool.used_pages == 5 and pool.free_pages == 3
+    assert pool.pages_of(1) == a and pool.owners() == [1, 2]
+    assert pool.free(1) == 3
+    assert pool.used_pages == 2
+    # freed pages are reusable
+    c = pool.alloc(3, owner=3)
+    assert len(c) == 3 and not set(c) & set(b)
+    st = pool.stats()
+    assert st["allocs"] == 8 and st["frees"] == 3
+    assert st["peak_used"] == 5 and st["owners"] == 2
+
+
+def test_alloc_is_all_or_nothing():
+    pool = PagePool(4, 16)
+    assert pool.alloc(3, owner=1) is not None
+    assert not pool.can_alloc(2)
+    assert pool.alloc(2, owner=2) is None       # no partial grant
+    assert pool.used_pages == 3                 # nothing leaked
+    assert pool.stats()["alloc_failures"] == 1
+    assert pool.can_alloc(1) and pool.alloc(1, owner=2) is not None
+
+
+def test_partial_free_and_double_free_raise():
+    pool = PagePool(8, 16)
+    got = pool.alloc(4, owner=7)
+    assert pool.free(7, got[2:]) == 2           # trim the logical tail
+    assert pool.pages_of(7) == got[:2]
+    with pytest.raises(KeyError, match="double free"):
+        pool.free(7, [got[3]])
+    with pytest.raises(KeyError, match="holds no pages"):
+        pool.free(99, [0])
+    assert pool.free(99) == 0                   # free-all of a non-owner: noop
+
+
+def test_occupancy():
+    pool = PagePool(10, 16)
+    assert pool.occupancy() == 0.0
+    pool.alloc(5, owner=1)
+    assert pool.occupancy() == 0.5
+
+
+def test_compact_renumbers_onto_low_end():
+    pool = PagePool(10, 16)
+    a = pool.alloc(3, owner=1)
+    b = pool.alloc(3, owner=2)
+    pool.free(1)                                # holes at the low end
+    src, remap = pool.compact()
+    # live pages renumbered to [0, used); ownership order preserved
+    assert pool.pages_of(2) == [remap[p] for p in b]
+    assert sorted(pool.pages_of(2)) == [0, 1, 2]
+    assert pool.free_pages == 7
+    # src gathers pool data: new page i holds old page src[i]'s rows
+    old = np.arange(10)
+    new = old[np.asarray(src)]
+    for p_old, p_new in remap.items():
+        assert new[p_new] == p_old
+    assert sorted(src.tolist()) == list(range(10))  # a permutation
+    # pool still allocates correctly after compaction
+    c = pool.alloc(7, owner=3)
+    assert sorted(pool.pages_of(2) + c) == list(range(10))
+    del a
+
+
+def test_sizing_helpers():
+    # packed OVP: D/2 nibble bytes + 4 scale bytes, x2 for K and V, per head
+    assert kv_bytes_per_token_per_site(2, 16, 4) == 2 * (8 + 4) * 2
+    assert kv_bytes_per_token_per_site(2, 16, 0) == 2 * 16 * 4 * 2
+    bpt = kv_bytes_per_token_per_site(2, 16, 4)
+    n = pool_pages_for_budget(100 * 16 * bpt, 16, bpt)
+    assert n == 100
+    assert max_concurrent_requests(n, 16, tokens_per_request=160) == 10
+    # paging headline: same HBM, shorter real contexts -> more requests
+    assert max_concurrent_requests(n, 16, tokens_per_request=32) == 50

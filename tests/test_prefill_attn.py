@@ -1,0 +1,198 @@
+"""Fused cache-write prefill suite (kernels/prefill_attn.py).
+
+One pallas_call must both causally attend the chunk over the raw stage
+and OVP-quantize every stage tile onto its block-table pages: parity
+against the dense twin (page nibbles bit-identical, scales to 1 ULP,
+attention to reassociation tolerance), chunked == one-shot prefill,
+untouched pages preserved through the input/output alias, and the
+decline vocabulary through the registry."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.kernels.prefill_attn import (fused_prefill_attention,
+                                        prefill_decline_reason,
+                                        xla_prefill_attention)
+
+KB = "pallas_interpret"
+
+
+def _mk_paged(rng, packed, n_pages, ps, hkv, d, stage_len, bt_row):
+    """Paged cache dict with random pre-existing pool content, a one-row
+    block table, and a random raw stage (prompt K/V already staged)."""
+    if packed:
+        cache = {
+            "k_data": jnp.asarray(rng.integers(
+                0, 255, (n_pages, ps, hkv, d // 2), dtype=np.uint8)),
+            "v_data": jnp.asarray(rng.integers(
+                0, 255, (n_pages, ps, hkv, d // 2), dtype=np.uint8)),
+            "k_scl": jnp.asarray(rng.normal(
+                size=(n_pages, ps, hkv)).astype(np.float32)),
+            "v_scl": jnp.asarray(rng.normal(
+                size=(n_pages, ps, hkv)).astype(np.float32)),
+        }
+    else:
+        cache = {
+            "k": jnp.asarray(rng.normal(
+                size=(n_pages, ps, hkv, d)).astype(np.float32)),
+            "v": jnp.asarray(rng.normal(
+                size=(n_pages, ps, hkv, d)).astype(np.float32)),
+        }
+    cache["block_table"] = jnp.asarray(np.asarray(bt_row, np.int32)[None])
+    cache["stage_k"] = jnp.asarray(rng.normal(
+        size=(1, stage_len, hkv, d)).astype(np.float32))
+    cache["stage_v"] = jnp.asarray(rng.normal(
+        size=(1, stage_len, hkv, d)).astype(np.float32))
+    return cache
+
+
+def _pool_keys(packed):
+    return ("k_data", "v_data", "k_scl", "v_scl") if packed else ("k", "v")
+
+
+def _assert_pools_match(a, b, packed):
+    for key in _pool_keys(packed):
+        x, y = np.asarray(a[key]), np.asarray(b[key])
+        if x.dtype == np.uint8:
+            np.testing.assert_array_equal(x, y)   # nibbles bit-identical
+        else:
+            # f32 scales: jnp.std reassociates differently between the
+            # interpreted kernel and eager XLA — 1-ULP agreement
+            np.testing.assert_allclose(x, y, atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("packed", [True, False])
+@pytest.mark.parametrize("hkv,g", [(2, 2), (1, 4), (4, 1)])
+def test_fused_matches_dense_twin(packed, hkv, g):
+    rng = np.random.default_rng(0)
+    ps, n_pages, d, s, c = 8, 12, 16, 24, 8
+    bt_row = [5, 2, 9]                  # permuted physical pages
+    cache = _mk_paged(rng, packed, n_pages, ps, hkv, d, s, bt_row)
+    q = jnp.asarray(rng.normal(size=(1, c, hkv * g, d)).astype(np.float32))
+    positions = jnp.asarray(np.arange(s - c, s, dtype=np.int32)[None])
+    assert prefill_decline_reason(q, cache) is None
+
+    out_f, cache_f = fused_prefill_attention(q, cache, positions,
+                                             interpret=True)
+    out_x, cache_x = xla_prefill_attention(q, cache, positions)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_x),
+                               atol=2e-5, rtol=2e-5)
+    _assert_pools_match(cache_f, cache_x, packed)
+    # pages no stage tile maps to keep their bytes (aliased pool output)
+    visited = set(bt_row)
+    for key in _pool_keys(packed):
+        orig, new = np.asarray(cache[key]), np.asarray(cache_f[key])
+        for p in range(n_pages):
+            if p not in visited:
+                np.testing.assert_array_equal(new[p], orig[p])
+
+
+def test_chunked_equals_one_shot():
+    """Prefilling in chunks == whole-prompt prefill: same attention (the
+    kernel attends the RAW stage, so chunk boundaries add no quantization
+    noise) and byte-identical pages (history tiles rewrite idempotently
+    every chunk)."""
+    rng = np.random.default_rng(1)
+    ps, n_pages, d, hkv, g, s = 8, 10, 16, 2, 2, 16
+    bt_row = [7, 3]
+    full = _mk_paged(rng, True, n_pages, ps, hkv, d, s, bt_row)
+    q_all = jnp.asarray(rng.normal(size=(1, s, hkv * g, d))
+                        .astype(np.float32))
+    pos_all = jnp.asarray(np.arange(s, dtype=np.int32)[None])
+    o1, c1 = fused_prefill_attention(q_all, full, pos_all, interpret=True)
+
+    # two chunks of 8: stage grows, history pages rewritten each chunk
+    chunked = dict(full,
+                   stage_k=jnp.zeros_like(full["stage_k"]),
+                   stage_v=jnp.zeros_like(full["stage_v"]))
+    outs = []
+    for ci in range(2):
+        lo, hi = ci * 8, (ci + 1) * 8
+        chunked = dict(
+            chunked,
+            stage_k=chunked["stage_k"].at[:, lo:hi].set(
+                full["stage_k"][:, lo:hi]),
+            stage_v=chunked["stage_v"].at[:, lo:hi].set(
+                full["stage_v"][:, lo:hi]))
+        o, chunked = fused_prefill_attention(
+            q_all[:, lo:hi], chunked,
+            jnp.asarray(np.arange(lo, hi, dtype=np.int32)[None]),
+            interpret=True)
+        outs.append(np.asarray(o))
+    np.testing.assert_allclose(np.asarray(o1),
+                               np.concatenate(outs, axis=1),
+                               atol=2e-5, rtol=2e-5)
+    for key in _pool_keys(True):   # same kernel both paths -> exact
+        np.testing.assert_array_equal(np.asarray(c1[key]),
+                                      np.asarray(chunked[key]))
+
+
+def test_single_pallas_call():
+    rng = np.random.default_rng(2)
+    cache = _mk_paged(rng, True, 6, 8, 2, 16, 16, [1, 4])
+    q = jnp.asarray(rng.normal(size=(1, 8, 4, 16)).astype(np.float32))
+    positions = jnp.asarray(np.arange(8, 16, dtype=np.int32)[None])
+    n = backends.count_pallas_calls(
+        lambda q, p: fused_prefill_attention(q, cache, p,
+                                             interpret=True)[0],
+        q, positions)
+    assert n == 1
+
+
+def test_decline_reasons():
+    rng = np.random.default_rng(3)
+    cache = _mk_paged(rng, True, 6, 8, 2, 16, 16, [1, 4])
+    q = jnp.zeros((1, 8, 4, 16))
+    assert prefill_decline_reason(q, cache) is None
+    assert prefill_decline_reason(jnp.zeros((2, 8, 4, 16)), cache) \
+        == "prefill_batch_gt_1"
+    slab = {"k": jnp.zeros((1, 16, 2, 16)), "v": jnp.zeros((1, 16, 2, 16))}
+    assert prefill_decline_reason(q, slab) == "prefill_not_paged"
+    no_stage = {k: v for k, v in cache.items()
+                if not k.startswith("stage")}
+    assert prefill_decline_reason(q, no_stage) == "prefill_no_stage"
+    short_table = dict(cache, block_table=cache["block_table"][:, :1])
+    assert prefill_decline_reason(q, short_table) \
+        == "prefill_stage_misaligned"
+    no_pool = {k: v for k, v in cache.items()
+               if k in ("block_table", "stage_k", "stage_v")}
+    assert prefill_decline_reason(q, no_pool) == "paged_no_pool"
+    # registry: kernel backends expose the vocabulary, dense backends
+    # serve any paged stage layout
+    kb = backends.get_backend(KB)
+    assert kb.fuses_prefill_attention
+    assert kb.prefill_attn_decline_reason(q, slab) == "prefill_not_paged"
+    assert backends.get_backend("xla").prefill_attn_decline_reason(
+        q, cache) is None
+
+
+def test_registry_dispatch_and_fallback_stats():
+    from repro.core.policy import QuantPolicy
+    rng = np.random.default_rng(4)
+    cache = _mk_paged(rng, True, 6, 8, 2, 16, 16, [1, 4])
+    q = jnp.asarray(rng.normal(size=(1, 8, 4, 16)).astype(np.float32))
+    positions = jnp.asarray(np.arange(8, 16, dtype=np.int32)[None])
+    pol = QuantPolicy(compute_dtype="float32", backend=KB)
+    backends.reset_dispatch_stats()
+    out, new_cache = backends.prefill_attention(q, cache, positions,
+                                                policy=pol)
+    assert backends.dispatch_stats() == {f"{KB}[prefill_attn]": 1}
+    out_x, cache_x = xla_prefill_attention(q, cache, positions)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_x),
+                               atol=2e-5, rtol=2e-5)
+    _assert_pools_match(new_cache, cache_x, True)
+
+    # declined layout (batch > 1) falls back to the dense twin with the
+    # machine-readable reason recorded
+    q2 = jnp.asarray(rng.normal(size=(2, 8, 4, 16)).astype(np.float32))
+    cache2 = {k: (jnp.concatenate([v, v]) if k.startswith(("stage",
+                                                          "block"))
+                  else v) for k, v in cache.items()}
+    backends.reset_dispatch_stats()
+    backends.prefill_attention(
+        q2, cache2, jnp.broadcast_to(positions, (2, 8)), policy=pol)
+    assert backends.dispatch_stats() == {
+        f"{KB}->fallback:prefill_batch_gt_1[prefill_attn]": 1}

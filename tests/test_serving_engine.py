@@ -13,6 +13,7 @@ from repro.configs.base import ArchConfig
 from repro.core.policy import QuantPolicy
 from repro.models.model import build_model
 from repro.serve.engine import EngineCfg, ServingEngine, _splice_slot
+from repro.serve.paging import PagePoolCfg
 
 TINY = ArchConfig(name="se-tiny", family="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
@@ -121,6 +122,198 @@ def test_eos_on_prefill_token_terminates_at_admit(tiny_model_params):
     eng.submit(prompt, max_new_tokens=8)
     done = eng.run_until_drained()
     assert [r.out_tokens for r in done] == [[first]]
+
+
+# ------------------------------------------------------------ paged mode
+def _run_paged(model, params, prompts, max_news, *, backend=None,
+               page_pool=None, prefill_chunk=0, max_len=128, eos_id=-1):
+    eng = ServingEngine(model, params, EngineCfg(
+        batch_slots=2, max_len=max_len, backend=backend, eos_id=eos_id,
+        page_pool=page_pool, prefill_chunk=prefill_chunk))
+    for p, mn in zip(prompts, max_news):
+        eng.submit(p, max_new_tokens=mn)
+    done = eng.run_until_drained()
+    return eng, {r.uid: r.out_tokens for r in done}
+
+
+def _mixed_prompts(rng):
+    # short prompts + one 4x-bucket-length (64 = 4x16), max_new spread
+    prompts = [rng.integers(0, TINY.vocab, size=n).astype(np.int32)
+               for n in (5, 9, 64, 13, 40)]
+    return prompts, [4, 7, 5, 1, 3]
+
+
+def test_paged_engine_matches_slab_tokens(tiny_model_params):
+    """Headline acceptance: a paged engine serves a mixed batch token-
+    for-token identically to the slab engine, and every page returns to
+    the pool when the batch drains."""
+    model, params = tiny_model_params
+    prompts, max_news = _mixed_prompts(np.random.default_rng(0))
+    _, outs_slab = _run_paged(model, params, prompts, max_news)
+    eng, outs = _run_paged(model, params, prompts, max_news,
+                           page_pool=PagePoolCfg(page_size=16))
+    assert outs == outs_slab
+    st = eng.stats()["page_pool"]
+    assert st["used_pages"] == 0 and st["frees"] == st["allocs"] > 0
+    assert all(r.finish_reason == "max_new_tokens" for r in eng.completed)
+
+
+def test_paged_engine_quantized_zero_fallbacks():
+    """Quantized paged path: prefill and decode both serve fused (no
+    dense fallback anywhere), tokens identical to the quantized slab."""
+    from repro import backends
+    KB = "pallas_interpret"
+    pol = QuantPolicy(method="olive", kv_bits=4, compute_dtype="float32",
+                      backend=KB)
+    model = build_model(TINY, pol, remat=False)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, TINY.vocab, size=n).astype(np.int32)
+               for n in (5, 9, 40)]
+    max_news = [4, 3, 5]
+    _, outs_slab = _run_paged(model, params, prompts, max_news, backend=KB)
+    backends.reset_dispatch_stats()
+    eng, outs = _run_paged(model, params, prompts, max_news, backend=KB,
+                           page_pool=PagePoolCfg(page_size=16))
+    assert outs == outs_slab
+    stats = backends.dispatch_stats()
+    attn = {k: v for k, v in stats.items()
+            if "[decode_attn]" in k or "[prefill_attn]" in k}
+    assert attn.get(f"{KB}[prefill_attn]", 0) >= 1
+    assert attn.get(f"{KB}[decode_attn]", 0) >= 1
+    assert not any("->fallback" in k for k in attn), attn
+
+
+def test_chunked_prefill_matches_and_never_stalls_decode(
+        tiny_model_params):
+    """prefill_chunk splits long prompts across steps: tokens stay
+    identical, at most one chunk runs per step, and an already-active
+    request keeps decoding every step of a neighbour's chunked prefill."""
+    model, params = tiny_model_params
+    prompts, max_news = _mixed_prompts(np.random.default_rng(0))
+    _, outs_slab = _run_paged(model, params, prompts, max_news)
+    eng, outs = _run_paged(model, params, prompts, max_news,
+                           page_pool=PagePoolCfg(page_size=16),
+                           prefill_chunk=16)
+    assert outs == outs_slab
+    assert eng.prefill_chunks_run > len(prompts)  # 64-token prompt split
+
+    # step-by-step: decode progress during a 4-chunk prefill
+    eng2 = ServingEngine(model, params, EngineCfg(
+        batch_slots=2, max_len=128,
+        page_pool=PagePoolCfg(page_size=16), prefill_chunk=16))
+    rng = np.random.default_rng(3)
+    uid = eng2.submit(rng.integers(0, TINY.vocab, size=5)
+                      .astype(np.int32), max_new_tokens=16)
+    eng2.submit(rng.integers(0, TINY.vocab, size=64).astype(np.int32),
+                max_new_tokens=4)
+    decoded = []
+    while eng2._prefilling or eng2.queue:
+        before = eng2.prefill_chunks_run
+        short = next((r for r in eng2.slots if r is not None
+                      and r.uid == uid), None)
+        n_before = len(short.out_tokens) if short else 0
+        eng2.step()
+        assert eng2.prefill_chunks_run - before <= 1  # stall bound
+        if short is not None and not short.done:
+            decoded.append(len(short.out_tokens) - n_before)
+    assert decoded and all(d == 1 for d in decoded)  # never stalled
+    eng2.run_until_drained()
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_finish_reason_length_cap(tiny_model_params, paged):
+    """A request whose budget exceeds the cache rows must surface the
+    truncation as finish_reason="length_cap", in both cache layouts."""
+    model, params = tiny_model_params
+    pool = PagePoolCfg(page_size=16) if paged else None
+    eng = ServingEngine(model, params, EngineCfg(
+        batch_slots=1, max_len=32, page_pool=pool))
+    eng.submit(np.arange(20, dtype=np.int32), max_new_tokens=64)
+    done = eng.run_until_drained()
+    assert done[0].finish_reason == "length_cap"
+    assert len(done[0].out_tokens) < 64
+    # the cap is max_len rows: prompt (20) + generated fit inside 32
+    assert 20 + len(done[0].out_tokens) <= 32
+    if paged:
+        assert eng.stats()["page_pool"]["used_pages"] == 0
+
+
+def test_prefill_cache_lru_eviction(tiny_model_params):
+    """_prefill_cache holds at most prefill_cache_cap jitted entries and
+    reports evictions: cap=1 with alternating buckets evicts twice.
+    (Tokens are unaffected — jax keeps its own trace cache keyed on the
+    underlying function, the LRU bounds the wrapper dict, whose keys are
+    unbounded raw lengths on the exact-length path.)"""
+    model, params = tiny_model_params
+    eng = ServingEngine(model, params, EngineCfg(
+        batch_slots=1, max_len=64, prefill_cache_cap=1))
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, TINY.vocab, size=n).astype(np.int32)
+               for n in (5, 20, 9)]         # buckets 16, 32, 16
+    for p in prompts:
+        eng.submit(p, max_new_tokens=2)
+    done = eng.run_until_drained()
+    st = eng.stats()
+    assert st["prefill_cache_size"] == 1    # capped
+    assert st["prefill_cache_evictions"] == 2
+
+    # same workload at the default cap: both buckets stay resident, no
+    # evictions, identical tokens
+    eng2 = ServingEngine(model, params,
+                         EngineCfg(batch_slots=1, max_len=64))
+    for p in prompts:
+        eng2.submit(p, max_new_tokens=2)
+    done2 = eng2.run_until_drained()
+    st2 = eng2.stats()
+    assert st2["prefill_cache_size"] == 2
+    assert st2["prefill_cache_evictions"] == 0
+    assert [r.out_tokens for r in done] == [r.out_tokens for r in done2]
+
+
+def test_paged_pool_exhaustion_queues_head_of_line(tiny_model_params):
+    """Admission reserves the full decode horizon, so a pool too small
+    for two long requests serializes them (alloc failure -> head-of-line
+    wait) instead of OOMing mid-decode — and still drains completely."""
+    model, params = tiny_model_params
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, TINY.vocab, size=40).astype(np.int32)
+               for _ in range(3)]
+    # each request: stage bucket 64 -> 4 tiles of 16, horizon 43 -> 3
+    # gen pages; need = 4; a 4-page pool serves exactly one at a time
+    eng, outs = _run_paged(model, params, prompts, [3, 3, 3],
+                           page_pool=PagePoolCfg(page_size=16, n_pages=4))
+    assert sorted(len(v) for v in outs.values()) == [3, 3, 3]
+    st = eng.stats()["page_pool"]
+    assert st["alloc_failures"] >= 1 and st["peak_used"] <= 4
+    assert st["used_pages"] == 0
+    # same workload, unconstrained pool: tokens unchanged
+    _, outs_big = _run_paged(model, params, prompts, [3, 3, 3],
+                             page_pool=PagePoolCfg(page_size=16))
+    assert outs == outs_big
+
+
+def test_defrag_mid_serve_preserves_tokens(tiny_model_params):
+    """Compacting the pool mid-serve (pages move, tables rebuilt) must
+    not change a single token of any in-flight request."""
+    model, params = tiny_model_params
+    prompts, max_news = _mixed_prompts(np.random.default_rng(0))
+    _, outs_ref = _run_paged(model, params, prompts, max_news,
+                             page_pool=PagePoolCfg(page_size=16))
+
+    eng = ServingEngine(model, params, EngineCfg(
+        batch_slots=2, max_len=128, page_pool=PagePoolCfg(page_size=16)))
+    for p, mn in zip(prompts, max_news):
+        eng.submit(p, max_new_tokens=mn)
+    steps = 0
+    while eng.queue or eng._active() or eng._prefilling:
+        eng.step()
+        steps += 1
+        if steps % 2 == 0:                  # churn the layout mid-flight
+            remap = eng.defrag()
+            assert remap is not None
+    assert {r.uid: r.out_tokens for r in eng.completed} == outs_ref
+    assert eng.stats()["page_pool"]["used_pages"] == 0
 
 
 def test_splice_slot_raises_on_shape_mismatch():
