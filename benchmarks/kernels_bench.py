@@ -32,7 +32,13 @@ emulation — correctness, not speed), so the numbers that matter are:
      at a quarter of max_len), the fused cache-write prefill serve wall
      vs the slab's prefill-then-splice, and a quantized PAGED engine run
      that must serve decode AND prefill attention fused with zero
-     fallbacks — any paged-path fallback exits nonzero.
+     fallbacks — any paged-path fallback exits nonzero,
+  9. async streaming serve latency: the paged+chunked quantized engine
+     driven through the asyncio front end (serve/frontend.py) with a
+     MetricsLedger — per-request TTFT/TPOT distributions land in
+     ``EXPERIMENTS/bench_cache/serve_trace.jsonl`` (the JSONL trace
+     speedup.py reads back); the run must be token-for-token identical
+     to the drained loop and show zero quantized-path fallbacks.
 
 ``BENCH_SMOKE=1`` (or ``--smoke``) shrinks every shape so CI can run the
 whole file in interpret mode in seconds; results land in
@@ -352,6 +358,48 @@ def main() -> int:
         and outs_paged == outs_slab and concurrency_gain >= 2.0 \
         and pg_pool_stats["used_pages"] == 0
 
+    # 9) async streaming serve latency (serve/frontend.py + metrics.py):
+    #    the same quantized paged+chunked engine driven through the
+    #    asyncio front end with a MetricsLedger; the JSONL trace written
+    #    to EXPERIMENTS/bench_cache/serve_trace.jsonl is the artifact
+    #    speedup.py's serve section reads back. Gates: token-for-token
+    #    identical output to the drained loop at the identical config,
+    #    zero quantized-path fallbacks in the trace, and a TTFT recorded
+    #    for every request.
+    import asyncio
+    from repro.serve.frontend import AsyncFrontend
+    from repro.serve.metrics import MetricsLedger, load_trace
+
+    sl_chunk = pg_ps     # chunked prefill on, one chunk per step
+    _, _, outs_drained = run_serve(page_pool=PagePoolCfg(page_size=pg_ps),
+                                   prefill_chunk=sl_chunk)
+
+    async def run_async_serve():
+        e = ServingEngine(eng_model, eng_model.init(jax.random.PRNGKey(3)),
+                          EngineCfg(batch_slots=2, max_len=64,
+                                    backend="pallas_interpret",
+                                    page_pool=PagePoolCfg(page_size=pg_ps),
+                                    prefill_chunk=sl_chunk))
+        ledger = MetricsLedger()
+        r = _np.random.default_rng(1)
+        async with AsyncFrontend(e, metrics=ledger) as fe:
+            streams = [fe.submit(r.integers(0, 256, size=nreq)
+                                 .astype(_np.int32), max_new_tokens=mn)
+                       for nreq, mn in pg_prompts]
+            await fe.drain()
+        return ledger, {s.uid: s.tokens for s in streams}
+
+    sl_ledger, outs_async = asyncio.run(run_async_serve())
+    sl_trace_path = os.path.join(common.CACHE, "serve_trace.jsonl")
+    os.makedirs(common.CACHE, exist_ok=True)
+    sl_ledger.write_jsonl(sl_trace_path)
+    sl = load_trace(sl_trace_path)["summary"]
+    sl_tokens_match = outs_async == outs_drained
+    sl_ttft, sl_tpot = sl["ttft_s"], sl["tpot_s"]
+    ok = ok and sl_tokens_match and sl["fallbacks"] == 0 \
+        and sl_ttft["n"] == len(pg_prompts) \
+        and sl["requests"] == len(pg_prompts)
+
     print("# kernel correctness: max rel err "
           f"w4a16={err16:.2e} w4a4={err4:.2e}")
     print(f"# xla decode-matmul {us_q:.0f}us vs plain fp32 {us_p:.0f}us "
@@ -395,6 +443,14 @@ def main() -> int:
           f"{us_slab_serve:.0f}us; paged engine: {pg_prefill_served} "
           f"fused prefill(s), {pg_fallbacks} fallbacks, tokens == slab: "
           f"{outs_paged == outs_slab} {pg_stats}")
+    print(f"# async serve (paged+chunked, {len(pg_prompts)} requests): "
+          f"TTFT p50={sl_ttft.get('p50', 0)*1e3:.1f}ms "
+          f"p95={sl_ttft.get('p95', 0)*1e3:.1f}ms, "
+          f"TPOT p50={sl_tpot.get('p50', 0)*1e3:.1f}ms (n={sl_tpot['n']}), "
+          f"{sl['steps']} steps, interleave="
+          f"{sl['prefill_interleave_ratio']}, "
+          f"fallbacks={sl['fallbacks']}, tokens == drained loop: "
+          f"{sl_tokens_match}; trace -> {sl_trace_path}")
 
     us = (time.perf_counter() - t0) * 1e6
     common.save_json("kernels_bench", {
@@ -451,6 +507,21 @@ def main() -> int:
             "dispatch_stats": pg_stats,
             "pool_stats": pg_pool_stats,
         },
+        "serve_latency": {
+            "requests": len(pg_prompts),
+            "prefill_chunk": sl_chunk,
+            "steps": sl["steps"],
+            "wall_s": sl["wall_s"],
+            "ttft_s": sl_ttft,
+            "tpot_s": sl_tpot,
+            "latency_s": sl["latency_s"],
+            "queue_depth": sl["queue_depth"],
+            "batch_occupancy": sl["batch_occupancy"],
+            "prefill_interleave_ratio": sl["prefill_interleave_ratio"],
+            "fallbacks": sl["fallbacks"],
+            "tokens_match_drained": bool(sl_tokens_match),
+            "trace": "serve_trace.jsonl",
+        },
         "ok": bool(ok),
     })
     common.emit("kernels_bench", us,
@@ -466,6 +537,9 @@ def main() -> int:
                 f"dec_fallbacks={dec_fallbacks} "
                 f"paged_concurrency_gain={concurrency_gain:.1f}x "
                 f"paged_fallbacks={pg_fallbacks} "
+                f"serve_ttft_p50_ms={sl_ttft.get('p50', 0)*1e3:.1f} "
+                f"serve_tpot_p50_ms={sl_tpot.get('p50', 0)*1e3:.1f} "
+                f"serve_fallbacks={sl['fallbacks']} "
                 f"ok={ok}")
     return 0 if ok else 1
 

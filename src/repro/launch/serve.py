@@ -29,10 +29,20 @@ prefill interleaved with decode:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
       --quant olive_serve --paged 16 --prefill-chunk 32 --requests 16
+
+Async streaming serve (docs/serving.md) — the asyncio front end drives
+the same engine step: per-request token streams (`--stream` prints each
+token the step it is sampled), TTFT/TPOT SLO metrics per step, and a
+JSONL metrics trace the benchmarks consume:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
+      --quant olive_serve --paged 16 --prefill-chunk 32 --requests 16 \
+      --async --stream --metrics-out /tmp/serve_trace.jsonl
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import os
 import time
 
@@ -49,7 +59,32 @@ from repro.core.policy import (PRESETS, PROGRAM_PRESETS, get_policy,
 from repro.core.qlinear import quantize_params
 from repro.models.model import build_model
 from repro.serve.engine import EngineCfg, Request, ServingEngine
+from repro.serve.frontend import AsyncFrontend
+from repro.serve.metrics import MetricsLedger
 from repro.serve.paging import PagePoolCfg
+
+
+async def _serve_async(eng, prompts, max_new, metrics, stream_tokens):
+    """Drive the engine through the asyncio streaming front end: submit
+    every prompt, consume each token stream as tokens arrive (printing
+    per token when --stream), drain, and return the completed requests
+    in the same token-for-token order the drained loop would produce."""
+
+    async def consume(stream):
+        seen = 0
+        async for tok in stream:
+            if stream_tokens:
+                tag = "first" if seen == 0 else f"+{seen}"
+                print(f"[stream] uid={stream.uid} {tag} token={tok}")
+            seen += 1
+        if stream_tokens:
+            print(f"[stream] uid={stream.uid} done "
+                  f"({len(stream.tokens)} tokens, {stream.finish_reason})")
+
+    async with AsyncFrontend(eng, metrics=metrics) as fe:
+        streams = [fe.submit(p, max_new_tokens=max_new) for p in prompts]
+        await asyncio.gather(*(consume(s) for s in streams))
+    return list(eng.completed)
 
 
 def main():
@@ -93,6 +128,18 @@ def main():
                     help="paged mode: split long prompts into chunks of "
                          "this many tokens, interleaved with decode "
                          "steps (at most one chunk per step)")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve through the asyncio streaming front end "
+                         "(serve/frontend.py): continuous intake, "
+                         "per-request token streams, step-level TTFT/"
+                         "TPOT SLO metrics (see docs/serving.md)")
+    ap.add_argument("--stream", action="store_true",
+                    help="async mode: print every token the step it is "
+                         "sampled (one line per request completion too)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the step/request JSONL metrics trace "
+                         "(serve/metrics.py vocabulary) to PATH; works "
+                         "in both the drained loop and --async mode")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.calibrate and not args.calibration:
@@ -100,6 +147,9 @@ def main():
     if args.prefill_chunk and not args.paged:
         ap.error("--prefill-chunk requires --paged (chunked prefill is "
                  "a paged-cache feature)")
+    if args.stream and not args.use_async:
+        ap.error("--stream requires --async (the drained loop has no "
+                 "token streams)")
 
     cfg = get_config(args.arch)
     if args.quant in PROGRAM_PRESETS or args.policy_rules:
@@ -158,12 +208,19 @@ def main():
         batch_slots=args.slots, max_len=args.max_len,
         page_pool=page_pool, prefill_chunk=args.prefill_chunk))
     rng = np.random.default_rng(args.seed)
-    for _ in range(args.requests):
-        eng.submit(rng.integers(0, cfg.vocab,
-                                size=int(rng.integers(4, 32)))
-                   .astype(np.int32), max_new_tokens=args.max_new)
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=int(rng.integers(4, 32)))
+               .astype(np.int32) for _ in range(args.requests)]
+    metrics = MetricsLedger() if (args.metrics_out or args.use_async) \
+        else None
     t0 = time.time()
-    done = eng.run_until_drained()
+    if args.use_async:
+        done = asyncio.run(_serve_async(eng, prompts, args.max_new,
+                                        metrics, args.stream))
+    else:
+        for p in prompts:
+            eng.submit(p, max_new_tokens=args.max_new)
+        done = eng.run_until_drained(metrics=metrics)
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
     lat = [r.t_done - r.t_submit for r in done]
@@ -191,6 +248,23 @@ def main():
     if args.calibration:
         # the whole point of static serving: zero dynamic resolutions
         print(f"[serve] act-scale resolutions: {backends.act_scale_stats()}")
+    if metrics is not None:
+        snap = metrics.snapshot()
+
+        def _fmt(d):
+            if not d.get("n"):
+                return "n=0"
+            return (f"n={d['n']} mean={d['mean']*1e3:.1f}ms "
+                    f"p50={d['p50']*1e3:.1f}ms p95={d['p95']*1e3:.1f}ms")
+
+        print(f"[serve] SLO: TTFT {_fmt(snap['ttft_s'])} | "
+              f"TPOT {_fmt(snap['tpot_s'])}")
+        print(f"[serve] {snap['steps']} steps, fallbacks={snap['fallbacks']}"
+              + (f", interleave={snap['prefill_interleave_ratio']:.2f}"
+                 if snap["prefill_interleave_ratio"] is not None else ""))
+        if args.metrics_out:
+            metrics.write_jsonl(args.metrics_out)
+            print(f"[serve] metrics trace -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

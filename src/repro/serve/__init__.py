@@ -1,1 +1,4 @@
-from .engine import EngineCfg, Request, ServingEngine
+from .engine import (EngineCfg, Request, ServingEngine, StepEvents,
+                     TokenEvent)
+from .frontend import AsyncFrontend, TokenStream
+from .metrics import MetricsLedger, load_trace

@@ -2,6 +2,12 @@
 
 Requests queue up; free slots take the next request (prefill), all active
 slots step together (one batched decode). Slots free on EOS / max-tokens.
+`step()` is the ONE step API — it returns `StepEvents` (every token
+sampled this step, attributed to its request) and both serve loops build
+on it: the synchronous `run_until_drained` batch loop here, and the
+asyncio streaming front end in `serve/frontend.py` (per-request token
+streams + TTFT/TPOT SLO metrics via `serve/metrics.py`; see
+docs/serving.md).
 Weights can be OliVe-PTQ-quantized (`quantize_params`), the KV cache
 OVP-packed (policy.kv_bits=4), and activation quantization can run on
 calibrated *static* scales (`EngineCfg.calibration`, validated up front —
@@ -66,6 +72,43 @@ class Request:
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class TokenEvent:
+    """One sampled token, attributed to its request — the unit both the
+    async streaming front end (`serve/frontend.py`) and the metrics
+    ledger (`serve/metrics.py`) consume. Emitted the same engine step the
+    token is sampled: prefill tokens carry `first=True` (the TTFT token),
+    and the request's terminal token carries `done`/`finish_reason`."""
+    uid: int
+    token: int
+    index: int                  # 0-based position in Request.out_tokens
+    first: bool                 # True for the prefill (TTFT) token
+    done: bool
+    finish_reason: Optional[str] = None
+
+
+@dataclasses.dataclass
+class StepEvents:
+    """What one `ServingEngine.step()` did, in consumable form.
+
+    This is the step API both serve loops share: `run_until_drained`
+    (batch/benchmark mode) and the asyncio front end both just call
+    `step()` and read the returned events — neither reaches into slots
+    or diffs `out_tokens`. All counts are PER STEP; lifetime counters
+    live in `ServingEngine.stats()`.
+    """
+    step: int                   # 0-based engine step index
+    t_start: float              # time.monotonic() at step entry / exit
+    t_end: float
+    admitted: List[int]         # uids leaving the queue this step
+    prefill_chunks: int         # chunked-prefill dispatches run (0 or 1)
+    decode_batch: int           # active slots in this step's batched decode
+    tokens: List[TokenEvent]    # every token sampled this step
+    queue_depth: int            # queued requests AFTER the step
+    active: int                 # occupied decode slots after the step
+    prefilling: int             # requests mid-chunked-prefill after the step
 
 
 @dataclasses.dataclass
@@ -182,6 +225,11 @@ class ServingEngine:
         self.prefill_traces = 0  # trace counter (tests assert bucket reuse)
         self.prefill_cache_evictions = 0
         self.prefill_chunks_run = 0
+        self.steps_run = 0
+        # per-step event buffers, drained into the StepEvents that
+        # `step()` returns (see the StepEvents docstring)
+        self._token_events: List[TokenEvent] = []
+        self._admitted_uids: List[int] = []
 
         self.paged = cfg.page_pool is not None
         if self.paged:
@@ -332,6 +380,13 @@ class ServingEngine:
         z = jnp.zeros(shape, jnp.float32)
         return {"stage_k": z, "stage_v": z}
 
+    def _emit_token(self, req: Request, tok: int, first: bool):
+        """Record one sampled token into the current step's event buffer
+        (call AFTER the request's done/finish_reason are settled)."""
+        self._token_events.append(TokenEvent(
+            uid=req.uid, token=tok, index=len(req.out_tokens) - 1,
+            first=first, done=req.done, finish_reason=req.finish_reason))
+
     def _admit(self):
         if self.paged:
             self._admit_paged()
@@ -349,6 +404,7 @@ class ServingEngine:
             # slot for the next queued request in the same admit pass
             while self.slots[s] is None and self.queue:
                 req = self.queue.popleft()
+                self._admitted_uids.append(req.uid)
                 t = len(req.prompt)
                 bucket = self._bucket(t) if self._bucket_ok else t
                 toks = np.zeros((bucket,), np.int32)
@@ -365,7 +421,9 @@ class ServingEngine:
                 nxt = int(jnp.argmax(logits[0]))
                 req.out_tokens.append(nxt)
                 req.t_first = time.monotonic()
-                if not self._finish_at_admit(req, nxt):
+                finished = self._finish_at_admit(req, nxt)
+                self._emit_token(req, nxt, first=True)
+                if not finished:
                     self.slots[s] = req
 
     def _finish_at_admit(self, req: Request, nxt: int) -> bool:
@@ -410,6 +468,7 @@ class ServingEngine:
             if got is None:
                 return
             self.queue.popleft()
+            self._admitted_uids.append(req.uid)
             toks = np.zeros((stage_len,), np.int32)
             toks[:t] = req.prompt
             self._bt[s, :] = 0
@@ -480,7 +539,9 @@ class ServingEngine:
         nxt = int(jnp.argmax(logits[0]))
         req.out_tokens.append(nxt)
         req.t_first = time.monotonic()
-        if self._finish_at_admit(req, nxt):
+        finished = self._finish_at_admit(req, nxt)
+        self._emit_token(req, nxt, first=True)
+        if finished:
             self._free_slot_pages(s, req)
             return
         self.pos[s] = pf.t
@@ -495,58 +556,106 @@ class ServingEngine:
     def _active(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
 
-    def step(self):
+    def step(self) -> StepEvents:
         """One engine iteration: admit, at most one prefill chunk (paged
-        mode), then one batched decode step for every active slot."""
+        mode), then one batched decode step for every active slot.
+
+        Returns the step's `StepEvents` — every token sampled this step
+        (with its request attribution), admissions, and post-step
+        queue/slot occupancy. Both serve loops (`run_until_drained` and
+        the asyncio front end in `serve/frontend.py`) drive this one
+        method and consume the events; nothing else mutates the engine.
+        """
+        t_start = time.monotonic()
+        self._token_events = []
+        self._admitted_uids = []
+        chunks_before = self.prefill_chunks_run
         self._admit()
         if self.paged:
             self._run_prefill_chunk()
         act = self._active()
-        if not act:
-            return
-        tokens = np.zeros((self.cfg.batch_slots, 1), np.int32)
-        for i in act:
-            tokens[i, 0] = self.slots[i].out_tokens[-1]
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(self.pos))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for i in act:
-            req = self.slots[i]
-            self.pos[i] += 1
-            tok = int(nxt[i])
-            req.out_tokens.append(tok)
-            if self.cfg.eos_id >= 0 and tok == self.cfg.eos_id:
-                reason = "eos"
-            elif len(req.out_tokens) >= req.max_new_tokens:
-                reason = "max_new_tokens"
-            elif int(self.pos[i]) >= self.cfg.max_len - 1:
-                # out of cache rows before the token budget: surface the
-                # truncation instead of silently stopping early
-                reason = "length_cap"
-            else:
-                continue
-            req.done = True
-            req.finish_reason = reason
-            req.t_done = time.monotonic()
-            self.completed.append(req)
-            self.slots[i] = None
-            if self.paged:
-                self._free_slot_pages(i, req)
+        decode_batch = len(act)
+        if act:
+            tokens = np.zeros((self.cfg.batch_slots, 1), np.int32)
+            for i in act:
+                tokens[i, 0] = self.slots[i].out_tokens[-1]
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(tokens),
+                jnp.asarray(self.pos))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for i in act:
+                req = self.slots[i]
+                self.pos[i] += 1
+                tok = int(nxt[i])
+                req.out_tokens.append(tok)
+                if self.cfg.eos_id >= 0 and tok == self.cfg.eos_id:
+                    reason = "eos"
+                elif len(req.out_tokens) >= req.max_new_tokens:
+                    reason = "max_new_tokens"
+                elif int(self.pos[i]) >= self.cfg.max_len - 1:
+                    # out of cache rows before the token budget: surface
+                    # the truncation instead of silently stopping early
+                    reason = "length_cap"
+                else:
+                    self._emit_token(req, tok, first=False)
+                    continue
+                req.done = True
+                req.finish_reason = reason
+                req.t_done = time.monotonic()
+                self.completed.append(req)
+                self.slots[i] = None
+                if self.paged:
+                    self._free_slot_pages(i, req)
+                self._emit_token(req, tok, first=False)
+        ev = StepEvents(
+            step=self.steps_run, t_start=t_start, t_end=time.monotonic(),
+            admitted=self._admitted_uids, prefill_chunks=(
+                self.prefill_chunks_run - chunks_before),
+            decode_batch=decode_batch, tokens=self._token_events,
+            queue_depth=len(self.queue), active=len(self._active()),
+            prefilling=len(self._prefilling) if self.paged else 0)
+        self.steps_run += 1
+        return ev
 
-    def run_until_drained(self, max_steps: int = 10000):
+    def has_work(self) -> bool:
+        """True while a `step()` could make progress: requests queued,
+        decoding, or mid-chunked-prefill. Both serve loops poll this."""
+        return bool(self.queue or self._active()
+                    or (self.paged and self._prefilling))
+
+    def run_until_drained(self, max_steps: int = 10000, metrics=None):
+        """Synchronous batch loop: step until no request is queued,
+        prefilling, or decoding. `metrics` (a
+        `serve.metrics.MetricsLedger`) records every step's events —
+        the same ledger the async front end feeds, so drained-loop
+        benchmarks and async serves produce comparable traces."""
         steps = 0
-        while (self.queue or self._active()
-               or (self.paged and self._prefilling)) and steps < max_steps:
-            self.step()
+        while self.has_work() and steps < max_steps:
+            ev = self.step()
+            if metrics is not None:
+                metrics.on_step(ev, self)
             steps += 1
         return self.completed
 
     # ------------------------------------------------------ observability
     def stats(self) -> Dict[str, object]:
         """Engine counters: prefill trace/cache behaviour, chunk counts,
-        and (paged mode) the page pool's occupancy/failure stats."""
+        steps run, and (paged mode) the page pool's occupancy/failure
+        stats.
+
+        COUNTER SEMANTICS — every scalar here is a LIFETIME counter:
+        monotone non-decreasing since engine construction, never reset by
+        `step()` or `run_until_drained()` (two drained runs on one engine
+        accumulate). Per-step numbers come from the `StepEvents` that
+        `step()` returns, or from a `serve.metrics.MetricsLedger` fed
+        with them; `prefill_cache_size` and the pool's
+        `used_pages`/`free_pages`/`occupancy` are instantaneous gauges,
+        while the pool's `allocs`/`frees`/`alloc_failures`/`peak_used`
+        are lifetime too. `tests/test_serve_frontend.py` pins this
+        contract.
+        """
         st: Dict[str, object] = {
+            "steps_run": self.steps_run,
             "prefill_traces": self.prefill_traces,
             "prefill_cache_size": len(self._prefill_cache),
             "prefill_cache_evictions": self.prefill_cache_evictions,

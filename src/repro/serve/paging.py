@@ -146,11 +146,34 @@ class PagePool:
     def owners(self) -> List[int]:
         return sorted(self._owned)
 
+    def high_watermark(self) -> int:
+        """Highest live physical page id + 1 — the pool prefix an elastic
+        deployment must keep resident. 0 when no page is held. After
+        `compact()` this equals `used_pages` (no holes)."""
+        live = [p for pages in self._owned.values() for p in pages]
+        return max(live) + 1 if live else 0
+
+    def fragmentation(self) -> float:
+        """Free fraction of the live span [0, high_watermark): the holes
+        `compact()` would squeeze out. 0.0 for an empty or perfectly
+        packed pool; never affects correctness (pages are
+        position-independent), only pool elasticity."""
+        hw = self.high_watermark()
+        return 0.0 if hw == 0 else 1.0 - self.used_pages / hw
+
     def stats(self) -> Dict[str, float]:
+        """Pool ledger. `used_pages`/`free_pages`/`occupancy`/
+        `high_watermark`/`fragmentation`/`owners` are instantaneous
+        gauges; `allocs`/`frees`/`alloc_failures`/`peak_used` are
+        lifetime counters (see `ServingEngine.stats()` for the shared
+        semantics). The serve metrics ledger (`serve/metrics.py`)
+        samples the gauges every step."""
         return {"n_pages": self.n_pages, "page_size": self.page_size,
                 "used_pages": self.used_pages,
                 "free_pages": self.free_pages,
                 "occupancy": self.occupancy(),
+                "high_watermark": self.high_watermark(),
+                "fragmentation": self.fragmentation(),
                 "allocs": self.allocs, "frees": self.frees,
                 "alloc_failures": self.alloc_failures,
                 "peak_used": self.peak_used,

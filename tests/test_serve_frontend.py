@@ -1,0 +1,303 @@
+"""Async streaming front end + serve metrics regressions.
+
+Pins the serving contracts docs/serving.md documents:
+
+- streaming: each request's tokens arrive through its `TokenStream`
+  in sampling order, incrementally DURING the run (not in one burst at
+  drain), and a stream finishes strictly after its last token;
+- golden parity: an async streaming run is token-for-token identical
+  to `run_until_drained` at the same config — fp slab AND the
+  quantized paged+chunked path;
+- TTFT is monotone in queue position when admission is serialized
+  (batch_slots=1);
+- COUNTER SEMANTICS: every scalar in `ServingEngine.stats()` /
+  `PagePool.stats()` counters is a lifetime counter (never reset by a
+  drain); per-step numbers come from `StepEvents` / the ledger;
+- the metrics snapshot and its JSONL trace round-trip losslessly.
+"""
+from __future__ import annotations
+
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.configs.base import ArchConfig
+from repro.core.policy import QuantPolicy
+from repro.models.model import build_model
+from repro.serve import (AsyncFrontend, EngineCfg, MetricsLedger,
+                         ServingEngine, load_trace)
+from repro.serve.paging import PagePoolCfg
+
+TINY = ArchConfig(name="fe-tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                  head_dim=16, block_pattern=("attn",))
+
+
+@pytest.fixture(scope="module")
+def tiny_model_params():
+    model = build_model(TINY, QuantPolicy(compute_dtype="float32"),
+                        remat=False)
+    return model, model.init(jax.random.PRNGKey(1))
+
+
+def _prompts(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, TINY.vocab, size=n).astype(np.int32)
+            for n in sizes]
+
+
+def _engine(model, params, page_pool=None, prefill_chunk=0,
+            batch_slots=2, max_len=128, backend=None):
+    return ServingEngine(model, params, EngineCfg(
+        batch_slots=batch_slots, max_len=max_len, backend=backend,
+        page_pool=page_pool, prefill_chunk=prefill_chunk))
+
+
+def _drained(eng, prompts, max_news, metrics=None):
+    for p, mn in zip(prompts, max_news):
+        eng.submit(p, max_new_tokens=mn)
+    done = eng.run_until_drained(metrics=metrics)
+    return {r.uid: r.out_tokens for r in done}
+
+
+def _async(eng, prompts, max_news, metrics=None, consume=True):
+    """Run the async front end over `prompts`; returns (token dict,
+    per-stream consumption records [(token, steps_run_at_consume)])."""
+
+    async def go():
+        records = {}
+
+        async def consumer(stream):
+            recs = []
+            async for tok in stream:
+                recs.append((tok, eng.steps_run, stream.done))
+            records[stream.uid] = recs
+
+        async with AsyncFrontend(eng, metrics=metrics) as fe:
+            streams = [fe.submit(p, max_new_tokens=mn)
+                       for p, mn in zip(prompts, max_news)]
+            if consume:
+                await asyncio.gather(*(consumer(s) for s in streams))
+            else:
+                await fe.drain()
+        outs = {s.uid: list(s.tokens) for s in streams}
+        reasons = {s.uid: s.finish_reason for s in streams}
+        return outs, records, reasons
+
+    return asyncio.run(go())
+
+
+# ------------------------------------------------------------- streaming
+def test_stream_order_and_incremental_arrival(tiny_model_params):
+    """Mixed admission (queueing, chunked prefill, interleaved decode):
+    every stream yields its tokens in sampling order, incrementally
+    across the run — tokens of early requests are consumed strictly
+    before the engine finishes, not in a burst at drain."""
+    model, params = tiny_model_params
+    prompts = _prompts((5, 9, 64, 13, 40), seed=3)
+    max_news = [4, 7, 5, 1, 3]
+    eng = _engine(model, params, page_pool=PagePoolCfg(page_size=16),
+                  prefill_chunk=16)
+    outs, records, reasons = _async(eng, prompts, max_news)
+
+    total_steps = eng.steps_run
+    by_uid = {r.uid: r for r in eng.completed}
+    assert sorted(outs) == sorted(by_uid)
+    for uid, toks in outs.items():
+        req = by_uid[uid]
+        # sampling order, token-for-token
+        assert toks == req.out_tokens
+        assert [t for t, _, _ in records[uid]] == req.out_tokens
+        assert reasons[uid] == req.finish_reason
+        # a stream finishes strictly after its last token: every token
+        # was consumed while the stream was not yet marked done
+        assert all(not done for _, _, done in records[uid])
+        assert len(toks) <= max_news[uid - 1]
+    # incremental delivery: consumption spans multiple engine steps and
+    # the earliest tokens land while the engine still has work
+    seen_steps = sorted({s for recs in records.values()
+                         for _, s, _ in recs})
+    assert len(seen_steps) >= 3, seen_steps
+    assert seen_steps[0] < total_steps
+
+
+def test_submit_while_running(tiny_model_params):
+    """Continuous intake: a request submitted mid-run (from a stream
+    consumer) is admitted and completes in the same front-end session."""
+    model, params = tiny_model_params
+    eng = _engine(model, params)
+
+    async def go():
+        async with AsyncFrontend(eng) as fe:
+            first = fe.submit(_prompts((6,))[0], max_new_tokens=3)
+            late = []
+            async for _ in first:
+                if not late:
+                    late.append(fe.submit(_prompts((9,), seed=5)[0],
+                                          max_new_tokens=2))
+            toks = [t async for t in late[0]]
+            return first.tokens, toks, late[0].finish_reason
+
+    first_toks, late_toks, late_reason = asyncio.run(go())
+    assert len(first_toks) == 3 and len(late_toks) == 2
+    assert late_reason == "max_new_tokens"
+    assert len(eng.completed) == 2
+
+
+# ---------------------------------------------------------- golden parity
+def test_async_matches_drained_fp_slab(tiny_model_params):
+    model, params = tiny_model_params
+    prompts = _prompts((5, 9, 13, 20), seed=1)
+    max_news = [4, 4, 4, 4]
+    outs_drained = _drained(_engine(model, params), prompts, max_news)
+    outs_async, _, _ = _async(_engine(model, params), prompts, max_news,
+                              consume=False)
+    assert outs_async == outs_drained
+
+
+def test_async_matches_drained_quantized_paged():
+    """The acceptance path: OVP-quantized KV on the paged+chunked engine
+    through the fused interpret kernels — async == drained
+    token-for-token, with zero quantized-path fallbacks recorded by the
+    ledger."""
+    KB = "pallas_interpret"
+    pol = QuantPolicy(method="olive", kv_bits=4, compute_dtype="float32",
+                      backend=KB)
+    model = build_model(TINY, pol, remat=False)
+    params = model.init(jax.random.PRNGKey(1))
+    prompts = _prompts((5, 9, 40), seed=2)
+    max_news = [4, 3, 5]
+
+    def eng():
+        return _engine(model, params, page_pool=PagePoolCfg(page_size=16),
+                       prefill_chunk=16, max_len=64, backend=KB)
+
+    outs_drained = _drained(eng(), prompts, max_news)
+    ledger = MetricsLedger()
+    outs_async, _, _ = _async(eng(), prompts, max_news, metrics=ledger)
+    assert outs_async == outs_drained
+    snap = ledger.snapshot()
+    assert snap["fallbacks"] == 0, snap["dispatch"]
+    assert snap["requests"] == len(prompts)
+
+
+# ------------------------------------------------------------------ TTFT
+def test_ttft_monotone_in_queue_position(tiny_model_params):
+    """batch_slots=1 serializes admission, so TTFT must be monotone in
+    queue position (uids are sequential == submission order)."""
+    model, params = tiny_model_params
+    prompts = _prompts((5, 6, 7, 8), seed=4)
+    max_news = [2, 2, 2, 2]
+    ledger = MetricsLedger()
+    eng = _engine(model, params, batch_slots=1)
+    _async(eng, prompts, max_news, metrics=ledger, consume=False)
+    recs = sorted(ledger.request_records, key=lambda r: r["uid"])
+    assert len(recs) == len(prompts)
+    ttfts = [r["ttft_s"] for r in recs]
+    assert all(a <= b for a, b in zip(ttfts, ttfts[1:])), ttfts
+    assert all(t > 0 for t in ttfts)
+
+
+# ------------------------------------------------------ counter semantics
+def test_stats_counters_are_lifetime(tiny_model_params):
+    """`stats()` scalars are LIFETIME counters: a drain does not reset
+    them, and a second run on the same engine strictly grows them.
+    Per-step numbers live in StepEvents / the ledger instead."""
+    model, params = tiny_model_params
+    eng = _engine(model, params, page_pool=PagePoolCfg(page_size=16))
+    _drained(eng, _prompts((5, 9), seed=6), [3, 3])
+    st1 = eng.stats()
+    pool1 = st1["page_pool"]
+    assert st1["steps_run"] > 0 and st1["prefill_chunks_run"] > 0
+    assert pool1["allocs"] > 0 and pool1["frees"] == pool1["allocs"]
+    assert pool1["used_pages"] == 0          # gauge: drained pool is empty
+
+    _drained(eng, _prompts((6, 7), seed=7), [2, 2])
+    st2 = eng.stats()
+    pool2 = st2["page_pool"]
+    assert st2["steps_run"] > st1["steps_run"]
+    assert st2["prefill_chunks_run"] > st1["prefill_chunks_run"]
+    assert len(eng.completed) == 4           # completion log accumulates
+    assert pool2["allocs"] > pool1["allocs"]
+    assert pool2["peak_used"] >= pool1["peak_used"]
+
+
+def test_pool_gauges_sampled_per_step(tiny_model_params):
+    """The ledger samples the pool gauges every step: occupancy rises
+    while requests hold pages and the last record returns to 0."""
+    model, params = tiny_model_params
+    ledger = MetricsLedger()
+    eng = _engine(model, params, page_pool=PagePoolCfg(page_size=16))
+    _drained(eng, _prompts((20, 30), seed=8), [3, 3], metrics=ledger)
+    occ = [r["pool_occupancy"] for r in ledger.step_records]
+    assert max(occ) > 0.0
+    assert occ[-1] == 0.0
+    frag = [r["pool_fragmentation"] for r in ledger.step_records]
+    assert all(0.0 <= f < 1.0 for f in frag)
+
+
+# --------------------------------------------------------- trace round trip
+def test_metrics_snapshot_and_jsonl_roundtrip(tiny_model_params, tmp_path):
+    model, params = tiny_model_params
+    prompts = _prompts((5, 9, 64), seed=9)
+    max_news = [3, 4, 2]
+    ledger = MetricsLedger()
+    eng = _engine(model, params, page_pool=PagePoolCfg(page_size=16),
+                  prefill_chunk=16)
+    outs, _, _ = _async(eng, prompts, max_news, metrics=ledger)
+
+    snap = ledger.snapshot()
+    assert snap["steps"] == len(ledger.step_records) == eng.steps_run
+    assert snap["requests"] == len(prompts)
+    assert snap["tokens"] == sum(len(v) for v in outs.values())
+    assert snap["ttft_s"]["n"] == len(prompts)
+    # tpot is None for single-token requests, present otherwise
+    assert snap["tpot_s"]["n"] == sum(1 for v in outs.values()
+                                      if len(v) > 1)
+    assert snap["prefill_chunk_steps"] > 0
+    assert snap["prefill_interleave_ratio"] is not None
+
+    path = tmp_path / "trace.jsonl"
+    ledger.write_jsonl(str(path))
+    trace = load_trace(str(path))
+    assert trace["meta"]["paged"] is True
+    assert trace["meta"]["page_size"] == 16
+    assert trace["steps"] == ledger.step_records
+    assert trace["requests"] == ledger.request_records
+    assert trace["summary"] == snap
+
+
+# -------------------------------------------------------------- lifecycle
+def test_frontend_lifecycle_errors(tiny_model_params):
+    model, params = tiny_model_params
+    eng = _engine(model, params)
+    fe = AsyncFrontend(eng)
+    with pytest.raises(RuntimeError, match="not running"):
+        fe.submit(np.zeros(4, np.int32))
+
+    async def double_start():
+        async with AsyncFrontend(eng) as fe2:
+            with pytest.raises(RuntimeError, match="already started"):
+                fe2.start()
+
+    asyncio.run(double_start())
+
+
+def test_async_recurrent_slab_arch():
+    """Config-zoo smoke: a recurrent (non-attention) arch serves through
+    the async front end on the slab path (no paging, exact prefill)."""
+    cfg = ArchConfig(name="fe-rg", family="hybrid", n_layers=2,
+                     d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                     vocab=256, head_dim=16, block_pattern=("rglru",))
+    model = build_model(cfg, QuantPolicy(compute_dtype="float32"),
+                        remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params,
+                        EngineCfg(batch_slots=1, max_len=64))
+    prompts = _prompts((5, 8), seed=10)
+    outs, _, reasons = _async(eng, prompts, [2, 2])
+    assert all(len(v) == 2 for v in outs.values())
+    assert all(r == "max_new_tokens" for r in reasons.values())
