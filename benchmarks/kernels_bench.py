@@ -38,7 +38,15 @@ emulation — correctness, not speed), so the numbers that matter are:
      MetricsLedger — per-request TTFT/TPOT distributions land in
      ``EXPERIMENTS/bench_cache/serve_trace.jsonl`` (the JSONL trace
      speedup.py reads back); the run must be token-for-token identical
-     to the drained loop and show zero quantized-path fallbacks.
+     to the drained loop and show zero quantized-path fallbacks,
+ 10. the sharded backends (backends/sharded.py): with >= 2 devices
+     (CI forces 8 via XLA_FLAGS) a (data, model) mesh is installed and
+     the column-parallel TP matmul, expert-parallel grouped stack, and
+     Hkv-sharded packed-cache decode must each reproduce the
+     single-device kernel BIT-IDENTICALLY with zero ``shard_*``
+     declines — any sharded-path fallback fails the benchmark; the
+     JSON records the per-device packed-weight and KV-pool bytes
+     shrinking by the model-axis factor (see docs/sharding.md).
 
 ``BENCH_SMOKE=1`` (or ``--smoke``) shrinks every shape so CI can run the
 whole file in interpret mode in seconds; results land in
@@ -400,6 +408,63 @@ def main() -> int:
         and sl_ttft["n"] == len(pg_prompts) \
         and sl["requests"] == len(pg_prompts)
 
+    # 10) sharded backends (backends/sharded.py): the same fused kernels
+    #     under shard_map on a (data, model) mesh. Needs >= 2 devices —
+    #     CI forces 8 logical host CPUs via
+    #     XLA_FLAGS=--xla_force_host_platform_device_count=8; on a plain
+    #     single-device run the section records enabled=False and gates
+    #     nothing. Gates when enabled: column-parallel TP, the
+    #     expert-parallel grouped stack, and Hkv-sharded packed-cache
+    #     decode each BIT-IDENTICAL to the single-device kernel, and
+    #     zero "shard_*" declines anywhere on the sharded path. The
+    #     headline numbers are the per-device bytes: the N-split packed
+    #     weight and the Hkv-split KV pool both shrink by the
+    #     model-axis factor (block tables replicate, bytes-negligible).
+    sh_devices = jax.device_count()
+    sh_enabled = sh_devices >= 2
+    sh_tp = 2
+    sh_col_bit = sh_ep_bit = sh_kv_bit = False
+    sh_fallbacks = 0
+    sh_stats = {}
+    sh_pol = QuantPolicy(method="olive", wbits=4, abits=0,
+                         compute_dtype="float32",
+                         backend="pallas_sharded_interpret")
+    wq_sh = quantize_weight(w, sh_pol)           # (K, N), per-channel scale
+    sh_weight_total = wq_sh.nbytes()
+    sh_pool_total = int(pool_pages * pg_ps * bpt)
+    if sh_enabled:
+        from repro.runtime.elastic import MeshPlan
+        backends.configure_mesh(MeshPlan(shape=(sh_devices // sh_tp, sh_tp),
+                                         axis_names=("data", "model"),
+                                         dropped_devices=0))
+        backends.reset_dispatch_stats()
+        try:
+            out_sh_col = backends.dispatch(a, wq_sh, sh_pol,
+                                           site="blocks/0/attn/wq")
+            out_1d_col = backends.dispatch(
+                a, wq_sh, sh_pol.with_backend("pallas_interpret"),
+                site="blocks/0/attn/wq")
+            sh_col_bit = bool(jnp.array_equal(out_sh_col, out_1d_col))
+            out_sh_moe = backends.dispatch(
+                xg, wq_moe,
+                dataclasses.replace(moe_pol,
+                                    backend="pallas_sharded_interpret"))
+            sh_ep_bit = bool(jnp.array_equal(out_sh_moe, out_moe))
+            sh_kv_pol = dataclasses.replace(sh_pol, kv_bits=4)
+            out_sh_dec = backends.decode_attention(qd, kv_cache, posd,
+                                                   policy=sh_kv_pol)
+            out_1d_dec = backends.decode_attention(
+                qd, kv_cache, posd,
+                policy=sh_kv_pol.with_backend("pallas_interpret"))
+            sh_kv_bit = bool(jnp.array_equal(out_sh_dec, out_1d_dec))
+            sh_stats = dict(backends.dispatch_stats())
+            sh_fallbacks = sum(v for tag, v in sh_stats.items()
+                               if "->fallback:shard" in tag)
+        finally:
+            backends.configure_mesh(None)
+        ok = ok and sh_col_bit and sh_ep_bit and sh_kv_bit \
+            and sh_fallbacks == 0
+
     print("# kernel correctness: max rel err "
           f"w4a16={err16:.2e} w4a4={err4:.2e}")
     print(f"# xla decode-matmul {us_q:.0f}us vs plain fp32 {us_p:.0f}us "
@@ -451,6 +516,18 @@ def main() -> int:
           f"{sl['prefill_interleave_ratio']}, "
           f"fallbacks={sl['fallbacks']}, tokens == drained loop: "
           f"{sl_tokens_match}; trace -> {sl_trace_path}")
+    if sh_enabled:
+        print(f"# sharded ({sh_devices} devices, mesh "
+              f"{sh_devices // sh_tp}x{sh_tp}): col TP bit-identical="
+              f"{sh_col_bit} EP bit-identical={sh_ep_bit} "
+              f"Hkv decode bit-identical={sh_kv_bit}, "
+              f"shard fallbacks={sh_fallbacks}; per-device bytes: "
+              f"weight {sh_weight_total}->{sh_weight_total // sh_tp}, "
+              f"kv pool {sh_pool_total}->{sh_pool_total // sh_tp} "
+              f"({sh_tp}x shrink) {sh_stats}")
+    else:
+        print(f"# sharded: skipped ({sh_devices} device; set "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
     us = (time.perf_counter() - t0) * 1e6
     common.save_json("kernels_bench", {
@@ -521,6 +598,24 @@ def main() -> int:
             "fallbacks": sl["fallbacks"],
             "tokens_match_drained": bool(sl_tokens_match),
             "trace": "serve_trace.jsonl",
+        },
+        "sharded": {
+            "enabled": bool(sh_enabled),
+            "devices": int(sh_devices),
+            "mesh": {"data": int(sh_devices // sh_tp) if sh_enabled else 1,
+                     "model": int(sh_tp) if sh_enabled else 1},
+            "tp_bit_identical": bool(sh_col_bit),
+            "ep_bit_identical": bool(sh_ep_bit),
+            "kv_bit_identical": bool(sh_kv_bit),
+            "fallbacks": int(sh_fallbacks),
+            "dispatch_stats": sh_stats,
+            "weight_bytes_total": int(sh_weight_total),
+            "weight_bytes_per_device": int(sh_weight_total // sh_tp)
+            if sh_enabled else int(sh_weight_total),
+            "kv_pool_bytes_total": int(sh_pool_total),
+            "kv_pool_bytes_per_device": int(sh_pool_total // sh_tp)
+            if sh_enabled else int(sh_pool_total),
+            "shrink_factor": int(sh_tp) if sh_enabled else 1,
         },
         "ok": bool(ok),
     })

@@ -14,6 +14,12 @@ Registered backends:
   pallas           — single fused pallas_call: in-kernel activation OVP
                      quantization + VMEM weight decode + scale epilogue
   pallas_interpret — same kernel, CPU interpreter (tests / this container)
+  pallas_sharded   — the fused kernels under shard_map on the configured
+                     mesh (`configure_mesh`): column/row tensor-parallel
+                     2-D matmuls, expert-parallel grouped stacks,
+                     Hkv-sharded decode/prefill attention (backends/sharded.py)
+  pallas_sharded_interpret — the sharded backend over the interpret
+                     kernels (the multi-host-CPU parity twin)
   reference        — pure-jnp fp32 oracle (equivalence tests)
 
 Adding a backend: subclass `QuantizedMatmulBackend`, implement `matmul`
@@ -45,6 +51,8 @@ from .base import (QuantizedMatmulBackend, act_normal_dtype,
                    reset_act_scale_stats, resolve_act_scale)
 from .pallas import PallasBackend, PallasInterpretBackend
 from .reference import ReferenceBackend
+from .sharded import (ShardedPallasBackend, ShardedPallasInterpretBackend,
+                      configure_mesh, current_mesh)
 from .xla import XlaBackend
 
 _REGISTRY: Dict[str, QuantizedMatmulBackend] = {}
@@ -69,17 +77,23 @@ def available() -> list:
 
 
 for _b in (XlaBackend(), PallasBackend(), PallasInterpretBackend(),
-           ReferenceBackend()):
+           ReferenceBackend(), ShardedPallasBackend(),
+           ShardedPallasInterpretBackend()):
     register(_b)
 del _b
 
-# REPRO_FORCE_INTERPRET=1 re-registers "pallas" as the interpret twin, so
-# CI (no TPU) exercises the real kernel code paths — including grouped MoE
-# dispatch — under any config that names the compiled backend.
+# REPRO_FORCE_INTERPRET=1 re-registers "pallas" (and its sharded sibling)
+# as the interpret twin, so CI (no TPU) exercises the real kernel code
+# paths — including grouped MoE dispatch and shard_map wrapping — under
+# any config that names the compiled backend.
 if os.environ.get("REPRO_FORCE_INTERPRET", "0") not in ("", "0"):
     class _ForcedInterpret(PallasInterpretBackend):
         name = "pallas"
+
+    class _ForcedShardedInterpret(ShardedPallasInterpretBackend):
+        name = "pallas_sharded"
     register(_ForcedInterpret())
+    register(_ForcedShardedInterpret())
 
 
 # --------------------------------------------------------------------------
@@ -142,25 +156,35 @@ def count_pallas_calls(fn, *args) -> int:
 
 def dispatch(x: jax.Array, w, policy: QuantPolicy,
              act_scale: Optional[jax.Array] = None,
-             precision=None) -> jax.Array:
+             precision=None, site: str = "") -> jax.Array:
     """Execute x (..., K) @ dequant(w) (K, N) on the policy's backend.
 
     Stacked per-expert weights (3-D `w.data`) take the grouped kernel on
     backends that support them; a `MixedExpertQuant` (per-expert mixed
     precision) dispatches each homogeneous group and stitches the outputs
-    back into expert order. Falls back (one hop) when the requested backend
-    declines the operand layout, recording the machine-readable reason in
-    `dispatch_stats()` instead of asserting mid-trace.
+    back into expert order (backends that cannot split ragged groups —
+    `mixed_expert_decline_reason` — route the whole stack to their
+    fallback). Falls back (one hop) when the requested backend declines
+    the operand layout, recording the machine-readable reason in
+    `dispatch_stats()` instead of asserting mid-trace. `site` is the
+    "/"-joined weight address; layout-aware backends (the sharded one)
+    classify column- vs row-parallel off its leaf name.
     """
     if isinstance(w, MixedExpertQuant):
-        return _dispatch_mixed_experts(x, w, policy, act_scale, precision)
+        backend = get_backend(policy.backend)
+        reason = backend.mixed_expert_decline_reason(x, w, policy)
+        if reason is not None:
+            _record(backend.name, reason, "[stacked]")
+            policy = policy.with_backend(backend.fallback)
+        return _dispatch_mixed_experts(x, w, policy, act_scale, precision,
+                                       site)
     backend = get_backend(policy.backend)
-    reason = backend.decline_reason(x, w, policy)
+    reason = backend.decline_reason(x, w, policy, site=site)
     _record(backend.name, reason, "[stacked]" if w.data.ndim > 2 else "")
     if reason is not None:
         backend = get_backend(backend.fallback)
     return backend.matmul(x, w, policy, act_scale=act_scale,
-                          precision=precision)
+                          precision=precision, site=site)
 
 
 def decode_attention(q: jax.Array, cache, pos: jax.Array, *,
@@ -213,7 +237,7 @@ def prefill_attention(q: jax.Array, cache, positions: jax.Array, *,
 def _dispatch_mixed_experts(x: jax.Array, w: MixedExpertQuant,
                             policy: QuantPolicy,
                             act_scale: Optional[jax.Array],
-                            precision) -> jax.Array:
+                            precision, site: str = "") -> jax.Array:
     """Per-expert mixed precision: run each homogeneous group through the
     registry (so W4 groups and W8 groups each hit the grouped kernel) and
     scatter the group outputs back into the stacked expert order.
@@ -248,7 +272,7 @@ def _dispatch_mixed_experts(x: jax.Array, w: MixedExpertQuant,
                 scale = jnp.take(scale, idx, axis=-2)
         if isinstance(qt, QuantizedTensor):
             outs.append(dispatch(xg, qt, policy, act_scale=scale,
-                                 precision=precision))
+                                 precision=precision, site=site))
         else:  # fp group — the site policy resolved to "no quantization"
             outs.append(jnp.matmul(xg.astype(cdt), qt.astype(cdt),
                                    precision=precision))
@@ -266,4 +290,6 @@ __all__ = ["QuantizedMatmulBackend", "register", "get_backend", "available",
            "act_scale_stats", "reset_act_scale_stats",
            "count_pallas_calls", "quantize_activation",
            "resolve_act_scale", "act_normal_dtype", "XlaBackend",
-           "PallasBackend", "PallasInterpretBackend", "ReferenceBackend"]
+           "PallasBackend", "PallasInterpretBackend", "ReferenceBackend",
+           "ShardedPallasBackend", "ShardedPallasInterpretBackend",
+           "configure_mesh", "current_mesh"]

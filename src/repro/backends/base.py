@@ -27,6 +27,23 @@ docs/backends.md point here):
 | `grouped_lhs_expert_mismatch`   | lhs expert dim != weight stack dim      |
 | `stacked_rank_gt_3`             | >3-D weight stacks are not kernelized   |
 
+Sharded decline codes (`pallas_sharded`, `backends/sharded.py` — the
+fused kernels under `shard_map` on the configured mesh; declines fall
+back one hop to the dense gather path like any other decline):
+
+| code                        | meaning                                    |
+|-----------------------------|--------------------------------------------|
+| `shard_no_mesh`             | no mesh configured (`configure_mesh`)      |
+| `shard_n_indivisible`       | column-parallel N not divisible by the     |
+|                             | "model" axis                               |
+| `shard_k_indivisible`       | row-parallel K does not split into whole   |
+|                             | outlier-victim pairs per shard             |
+| `shard_expert_indivisible`  | grouped stack's E not divisible by "model" |
+| `shard_mixed_expert_group`  | ragged `MixedExpertQuant` groups cannot    |
+|                             | split E evenly (`mixed_expert_decline_reason`) |
+| `shard_hkv_lt_axis`         | fewer KV heads than "model" shards         |
+| `shard_hkv_indivisible`     | Hkv not divisible by the "model" axis      |
+
 Decode-attention decline codes (`decode_attn_decline_reason`, the fused
 KV-cache kernel — see docs/kv_cache.md):
 
@@ -161,19 +178,30 @@ class QuantizedMatmulBackend:
     # on: the unfused pipeline is encode + matmul + scale-multiply.
     dispatches_per_matmul: int = 3
 
-    def decline_reason(self, x, w: QuantizedTensor,
-                       policy: QuantPolicy) -> Optional[str]:
+    def decline_reason(self, x, w: QuantizedTensor, policy: QuantPolicy,
+                       site: str = "") -> Optional[str]:
         """None when this backend can execute the operands; otherwise a
         short stable reason code (e.g. "stacked_rank", "lhs_rank") that
-        dispatch records and `kernels_bench` surfaces."""
+        dispatch records and `kernels_bench` surfaces. `site` is the
+        "/"-joined weight address — layout-aware backends (the sharded
+        one) read the leaf name off it to pick the parallelism class."""
         return None
 
-    def supports(self, x, w: QuantizedTensor, policy: QuantPolicy) -> bool:
-        return self.decline_reason(x, w, policy) is None
+    def supports(self, x, w: QuantizedTensor, policy: QuantPolicy,
+                 site: str = "") -> bool:
+        return self.decline_reason(x, w, policy, site=site) is None
+
+    def mixed_expert_decline_reason(self, x, w, policy) -> Optional[str]:
+        """None when this backend's grouped path can serve each
+        homogeneous group of a per-expert `MixedExpertQuant`; a reason
+        code routes the whole stack to `fallback` instead (the sharded
+        backend declines ragged groups with `shard_mixed_expert_group`).
+        """
+        return None
 
     def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
                act_scale: Optional[jax.Array] = None,
-               precision=None) -> jax.Array:
+               precision=None, site: str = "") -> jax.Array:
         raise NotImplementedError
 
     # -- decode attention over KV caches ----------------------------------

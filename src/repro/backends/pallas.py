@@ -70,8 +70,8 @@ class PallasBackend(QuantizedMatmulBackend):
     fuses_act_encode = True
     dispatches_per_matmul = 1
 
-    def decline_reason(self, x, w: QuantizedTensor,
-                       policy: QuantPolicy) -> Optional[str]:
+    def decline_reason(self, x, w: QuantizedTensor, policy: QuantPolicy,
+                       site: str = "") -> Optional[str]:
         if w.pair_axis % 2 != 0:
             # pairing must run along K (quantize_weight guarantees -2)
             return "pair_axis_not_reduction"
@@ -88,7 +88,7 @@ class PallasBackend(QuantizedMatmulBackend):
 
     def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
                act_scale: Optional[jax.Array] = None,
-               precision=None) -> jax.Array:
+               precision=None, site: str = "") -> jax.Array:
         cdt = jnp.dtype(policy.compute_dtype)
         a_dtype = None
         scale = None

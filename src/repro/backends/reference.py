@@ -29,7 +29,7 @@ class ReferenceBackend(QuantizedMatmulBackend):
 
     def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
                act_scale: Optional[jax.Array] = None,
-               precision=None) -> jax.Array:
+               precision=None, site: str = "") -> jax.Array:
         wd = ovp_dequantize(w, dtype=jnp.float32)
         xd = x.astype(jnp.float32)
         if policy.abits:

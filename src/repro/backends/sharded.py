@@ -1,0 +1,347 @@
+"""Sharded Pallas backend: the fused kernels under `shard_map` on a mesh.
+
+`pallas_sharded` wraps the exact single-device fused kernels — the 2-D
+OVP matmul, the grouped per-expert (MoE) kernel, and the decode/prefill
+attention kernels — in `jax.experimental.shard_map` over a
+`runtime/elastic.py::MeshPlan` mesh, so the packed codes shard without
+re-encoding:
+
+- **TP, column-parallel** (sites whose leaf is in
+  `sharding/rules.py::COL_PARALLEL`, and the default — e.g. `wq`, `wu`,
+  `w_out`): the packed weight `(K/2, N)` and its per-channel scale split
+  N over the "model" axis; the lhs replicates; each shard runs the
+  unmodified fused kernel on its N slice. No collective — outputs
+  concatenate along N, **bit-identical** to the single-device kernel.
+- **TP, row-parallel** (`ROW_PARALLEL` leaves — `wo`, `wd`, …): the lhs
+  and the packed weight split K (whole outlier-victim pairs per shard:
+  the packed row dim `K/2` must divide), per-channel scales replicate,
+  and a `psum` over "model" reduces the partial products — equal to the
+  single-device output up to fp32 reassociation of the K sum.
+- **EP** (grouped stacks `(E, K/2, N)`): the expert grid dim splits over
+  "model"; each shard owns whole expert stacks and their `(E, …)`
+  scales, the lhs splits its matching expert axis. No all-to-all of
+  dequantized weights ever materializes; bit-identical.
+- **KV shard** (decode/prefill attention, slab and paged): every cache
+  leaf carries `Hkv` at axis 2 — slab `(B, S, Hkv, D/2)` and paged pool
+  `(P, ps, Hkv, D/2)` alike — so one spec rule splits the pool bytes,
+  the per-(token, head) scales `(…, Hkv)`, and the staged prefill K/V
+  across "model"; q splits its H axis (contiguous `h = kv*G + g` GQA
+  grouping keeps each query head on the shard that owns its KV head);
+  block tables and positions replicate. Attention is per-head, so both
+  outputs and written page bytes are bit-identical.
+
+The OVP property doing the work is the paper's alignment claim: one byte
+is one outlier-victim pair and each scale travels with its tile, so any
+even split of K — and any split of N / E / Hkv — is re-encoding-free and
+needs no replicated coordination list.
+
+Layouts (or meshes) the backend cannot shard decline with the
+machine-readable `shard_*` codes tabled in `backends/base.py` and fall
+back one hop to the dense gather path, exactly like every other decline.
+Per-expert `MixedExpertQuant` stacks decline whole
+(`shard_mixed_expert_group`): their group membership is static but the
+groups are ragged, so splitting E across the mesh would leave shards
+with unequal stacks.
+
+Mesh state is module-level: `configure_mesh(plan)` builds and installs a
+`jax.sharding.Mesh` from a `MeshPlan` (or accepts a ready `Mesh`);
+`ServingEngine` calls it when `EngineCfg.mesh` is set, and
+`launch/serve.py` exposes `--mesh`. With no mesh configured (or a
+"model" axis of 1) the backend serves exactly like its single-device
+parent.
+
+`pallas_sharded_interpret` is the same backend over the interpret-mode
+kernels — the CPU twin the 8-forced-host-device parity suite
+(`tests/test_sharded_backend.py`) runs against.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.ovp import QuantizedTensor
+from repro.core.policy import QuantPolicy
+from repro.kernels import decode_attn, ops, prefill_attn
+from repro.sharding.rules import ROW_PARALLEL, mesh_axis_sizes
+
+from .base import act_normal_dtype, record_act_scale, resolve_act_scale
+from .pallas import PallasBackend, _static_const_scale
+
+# ---------------------------------------------------------------- mesh state
+_MESH: Optional[Mesh] = None
+
+
+def configure_mesh(plan=None, devices=None) -> Optional[Mesh]:
+    """Install the mesh the sharded backend runs on (module-level state,
+    mirroring the registry itself). `plan` is a
+    `runtime/elastic.py::MeshPlan` (shape + axis names), a ready
+    `jax.sharding.Mesh`, or None to clear. Returns the installed Mesh."""
+    global _MESH
+    if plan is None:
+        _MESH = None
+        return None
+    if isinstance(plan, Mesh):
+        _MESH = plan
+        return plan
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < plan.n_devices:
+        raise ValueError(f"mesh plan {plan.shape} needs {plan.n_devices} "
+                         f"devices, have {len(devs)}")
+    mesh = Mesh(np.asarray(devs[:plan.n_devices]).reshape(plan.shape),
+                plan.axis_names)
+    _MESH = mesh
+    return mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _model_axis() -> int:
+    """Size of the "model" mesh axis; 0 = no mesh configured."""
+    if _MESH is None:
+        return 0
+    return mesh_axis_sizes(_MESH).get("model", 1)
+
+
+def _site_leaf(site: str) -> str:
+    return site.rsplit("/", 1)[-1]
+
+
+class ShardedPallasBackend(PallasBackend):
+    name = "pallas_sharded"
+    interpret = False
+    requires_mesh = True
+
+    # -- quantized matmul --------------------------------------------------
+    def decline_reason(self, x, w: QuantizedTensor, policy: QuantPolicy,
+                       site: str = "") -> Optional[str]:
+        reason = super().decline_reason(x, w, policy, site=site)
+        if reason is not None:
+            return reason
+        tp = _model_axis()
+        if tp == 0:
+            return "shard_no_mesh"
+        if tp == 1:
+            return None              # degenerate mesh: single-device path
+        if w.data.ndim == 3:
+            if w.data.shape[0] % tp != 0:
+                return "shard_expert_indivisible"
+            return None
+        if _site_leaf(site) in ROW_PARALLEL:
+            # K splits in whole outlier-victim pairs: one packed row IS a
+            # pair; int8 codes are one row per value, so two rows per pair
+            rows_per_pair = 1 if w.is_packed else 2
+            if w.data.shape[0] % (tp * rows_per_pair) != 0:
+                return "shard_k_indivisible"
+            return None
+        if w.data.shape[-1] % tp != 0:
+            return "shard_n_indivisible"
+        return None
+
+    def mixed_expert_decline_reason(self, x, w, policy) -> Optional[str]:
+        # ragged static expert groups: splitting E would unbalance shards
+        return "shard_mixed_expert_group"
+
+    def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
+               act_scale: Optional[jax.Array] = None,
+               precision=None, site: str = "") -> jax.Array:
+        tp = _model_axis()
+        if tp <= 1:
+            return super().matmul(x, w, policy, act_scale=act_scale,
+                                  precision=precision, site=site)
+        mesh = _MESH
+        cdt = jnp.dtype(policy.compute_dtype)
+
+        # A-side scale resolution happens OUTSIDE shard_map (on the full
+        # lhs), exactly mirroring the parent — every shard then quantizes
+        # at the same scale, and OVP pair selection is pairwise-local, so
+        # even K splits reproduce the single-device codes.
+        a_dtype = None
+        scale = None
+        static = None
+        if policy.abits:
+            static = _static_const_scale(policy, act_scale)
+            if static is not None:
+                a_dtype = act_normal_dtype(policy)
+                record_act_scale("static")
+            else:
+                scale, a_dtype = resolve_act_scale(x, policy, act_scale)
+
+        ws = jnp.asarray(w.scale)
+        rep = lambda a: P(*([None] * jnp.ndim(a)))
+        interpret = self.interpret
+        grouped = w.data.ndim == 3
+
+        if grouped:
+            x_spec = P(*([None] * (x.ndim - 3)), "model", None, None)
+            wd_spec = P("model", None, None)
+            ws_spec = P("model", *([None] * (ws.ndim - 1))) if ws.ndim \
+                else P()
+            s_spec = None
+            if scale is not None:
+                s_spec = rep(scale)
+                if scale.ndim >= 2 and scale.shape[-2:] == x.shape[-3:-1]:
+                    # per-slot (…, E, C) plane: E rides at axis -2
+                    parts = [None] * scale.ndim
+                    parts[-2] = "model"
+                    s_spec = P(*parts)
+                elif scale.ndim >= 3 and scale.shape[-1] == 1 \
+                        and scale.shape[-3:-1] == x.shape[-3:-1]:
+                    parts = [None] * scale.ndim
+                    parts[-3] = "model"
+                    s_spec = P(*parts)
+            out_spec = P(*([None] * (x.ndim - 3)), "model", None, None)
+
+            def run(xl, wdl, wsl, sl):
+                wl = QuantizedTensor(
+                    data=wdl, scale=wsl, normal_dtype=w.normal_dtype,
+                    pair_axis=w.pair_axis, orig_dim=w.orig_dim)
+                return ops.grouped_ovp_matmul(
+                    xl, wl, a_dtype=a_dtype, act_scale=sl,
+                    static_act_scale=static, out_dtype=cdt,
+                    interpret=interpret)
+        elif _site_leaf(site) in ROW_PARALLEL:
+            x_spec = P(*([None] * (x.ndim - 1)), "model")
+            wd_spec = P("model", None)
+            ws_spec = rep(ws)
+            s_spec = rep(scale) if scale is not None else None
+            out_spec = P(*([None] * x.ndim))
+            local_k = w.orig_dim // tp   # each shard holds K/tp whole pairs
+
+            def run(xl, wdl, wsl, sl):
+                wl = QuantizedTensor(
+                    data=wdl, scale=wsl, normal_dtype=w.normal_dtype,
+                    pair_axis=w.pair_axis, orig_dim=local_k)
+                part = ops.fused_ovp_matmul(
+                    xl, wl, a_dtype=a_dtype, act_scale=sl,
+                    static_act_scale=static, out_dtype=cdt,
+                    interpret=interpret)
+                return jax.lax.psum(part, "model")
+        else:                                       # column-parallel
+            x_spec = P(*([None] * x.ndim))
+            wd_spec = P(None, "model")
+            ws_spec = rep(ws)
+            if ws.ndim and ws.shape[-1] == w.data.shape[-1]:
+                ws_spec = P(*([None] * (ws.ndim - 1)), "model")
+            s_spec = rep(scale) if scale is not None else None
+            out_spec = P(*([None] * (x.ndim - 1)), "model")
+
+            def run(xl, wdl, wsl, sl):
+                wl = QuantizedTensor(
+                    data=wdl, scale=wsl, normal_dtype=w.normal_dtype,
+                    pair_axis=w.pair_axis, orig_dim=w.orig_dim)
+                return ops.fused_ovp_matmul(
+                    xl, wl, a_dtype=a_dtype, act_scale=sl,
+                    static_act_scale=static, out_dtype=cdt,
+                    interpret=interpret)
+
+        if scale is None:
+            sharded = shard_map(lambda xl, wdl, wsl: run(xl, wdl, wsl,
+                                                         None),
+                                mesh=mesh,
+                                in_specs=(x_spec, wd_spec, ws_spec),
+                                out_specs=out_spec, check_rep=False)
+            return sharded(x, w.data, ws)
+        sharded = shard_map(run, mesh=mesh,
+                            in_specs=(x_spec, wd_spec, ws_spec, s_spec),
+                            out_specs=out_spec, check_rep=False)
+        return sharded(x, w.data, ws, scale)
+
+    # -- decode / prefill attention over Hkv-sharded caches ----------------
+    @staticmethod
+    def _cache_hkv(cache) -> Optional[int]:
+        for k in ("k", "k_data"):
+            if cache is not None and k in cache:
+                return int(cache[k].shape[2])
+        return None
+
+    def _hkv_decline(self, cache) -> Optional[str]:
+        tp = _model_axis()
+        if tp == 0:
+            return "shard_no_mesh"
+        if tp == 1:
+            return None
+        hkv = self._cache_hkv(cache)
+        if hkv is None:
+            return None              # parent decline codes already cover it
+        if hkv < tp:
+            return "shard_hkv_lt_axis"
+        if hkv % tp != 0:
+            return "shard_hkv_indivisible"
+        return None
+
+    @staticmethod
+    def _cache_specs(cache):
+        """One spec rule covers slab and paged layouts: every K/V leaf —
+        pool bytes, scales, staged prefill K/V — carries Hkv at axis 2;
+        block tables, src_len, and any other bookkeeping replicate."""
+        specs = {}
+        for name, leaf in cache.items():
+            if name in ("k", "v", "k_data", "v_data", "stage_k",
+                        "stage_v"):
+                specs[name] = P(None, None, "model", None)
+            elif name in ("k_scl", "v_scl"):
+                specs[name] = P(None, None, "model")
+            else:
+                specs[name] = P(*([None] * jnp.ndim(leaf)))
+        return specs
+
+    def decode_attn_decline_reason(self, q, cache) -> Optional[str]:
+        reason = super().decode_attn_decline_reason(q, cache)
+        if reason is not None:
+            return reason
+        return self._hkv_decline(cache)
+
+    def decode_attention(self, q: jax.Array, cache, pos: jax.Array, *,
+                         window: int = 0, ring: int = 0) -> jax.Array:
+        tp = _model_axis()
+        if tp <= 1:
+            return super().decode_attention(q, cache, pos, window=window,
+                                            ring=ring)
+        interpret = self.interpret
+        q_spec = P(None, None, "model", None)
+
+        def run(ql, cl, pl):
+            return decode_attn.fused_decode_attention(
+                ql, cl, pl, window=window, ring=ring, interpret=interpret)
+
+        sharded = shard_map(
+            run, mesh=_MESH,
+            in_specs=(q_spec, self._cache_specs(cache), P(None)),
+            out_specs=q_spec, check_rep=False)
+        return sharded(q, cache, pos)
+
+    def prefill_attn_decline_reason(self, q, cache) -> Optional[str]:
+        reason = super().prefill_attn_decline_reason(q, cache)
+        if reason is not None:
+            return reason
+        return self._hkv_decline(cache)
+
+    def prefill_attention(self, q: jax.Array, cache, positions: jax.Array):
+        tp = _model_axis()
+        if tp <= 1:
+            return super().prefill_attention(q, cache, positions)
+        interpret = self.interpret
+        q_spec = P(None, None, "model", None)
+        cache_specs = self._cache_specs(cache)
+
+        def run(ql, cl, pl):
+            return prefill_attn.fused_prefill_attention(
+                ql, cl, pl, interpret=interpret)
+
+        sharded = shard_map(
+            run, mesh=_MESH,
+            in_specs=(q_spec, cache_specs, P(None, None)),
+            out_specs=(q_spec, cache_specs), check_rep=False)
+        return sharded(q, cache, positions)
+
+
+class ShardedPallasInterpretBackend(ShardedPallasBackend):
+    name = "pallas_sharded_interpret"
+    interpret = True

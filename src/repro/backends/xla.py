@@ -33,7 +33,7 @@ class XlaBackend(QuantizedMatmulBackend):
 
     def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
                act_scale: Optional[jax.Array] = None,
-               precision=None) -> jax.Array:
+               precision=None, site: str = "") -> jax.Array:
         cdt = jnp.dtype(policy.compute_dtype)
         wd = ovp_dequantize(w, dtype=cdt)
         if policy.abits:

@@ -103,7 +103,7 @@ def qmatmul(x: jax.Array, w: Weight, policy: QuantPolicy, site: str = "",
                 and act_scale is None and policy.static_act_scale is None):
             raise _calibration.MissingStaticScaleError([site or "<unknown>"])
         return backends.dispatch(x, w, policy, act_scale=act_scale,
-                                 precision=precision)
+                                 precision=precision, site=site)
     # raw weights
     if policy.enabled and policy.qat and policy.method == "olive":
         # QAT path: STE fake-quant on W (and A if configured)

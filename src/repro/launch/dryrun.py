@@ -28,7 +28,7 @@ import jax
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, quant: str,
              out_dir: str, force: bool = False,
-             mesh_override=None) -> dict:
+             mesh_override=None, calibration=None) -> dict:
     from repro.configs import get_config, get_shape
     from repro.configs.base import shape_applicable
     from repro.launch import mesh as meshmod
@@ -58,7 +58,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, quant: str,
         meshmod.make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
     try:
-        cell = build_cell(arch, shape_name, mesh, quant=quant)
+        cell = build_cell(arch, shape_name, mesh, quant=quant,
+                          calibration=calibration)
         lowered = lower_cell(cell)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -111,6 +112,12 @@ def main():
                                                        "both"])
     ap.add_argument("--quant", default="none",
                     choices=["none", "olive", "olive_kv", "olive_w8"])
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="CalibrationArtifact JSON: lower the quantized "
+                         "serve cells with static calibrated activation "
+                         "scales baked in (act_scale_mode='static'; see "
+                         "docs/calibration.md). Ignored for --quant none "
+                         "and train shapes.")
     ap.add_argument("--out", default="EXPERIMENTS/dryrun")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -125,7 +132,8 @@ def main():
         for shape in shapes:
             for mk in meshes:
                 rec = run_cell(arch, shape, mk, args.quant, args.out,
-                               force=args.force)
+                               force=args.force,
+                               calibration=args.calibration)
                 st = rec["status"]
                 n_ok += st == "ok"
                 n_skip += st == "skipped"

@@ -136,6 +136,16 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="async mode: print every token the step it is "
                          "sampled (one line per request completion too)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="comma-separated mesh axis sizes for the "
+                         "sharded backends, e.g. '4,2' for a "
+                         "(data=4, model=2) mesh over 8 devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 forces logical CPU devices). Installs "
+                         "the mesh via backends.configure_mesh so "
+                         "--backend pallas_sharded[_interpret] "
+                         "tensor/expert/KV-shards the quantized serve "
+                         "path (see docs/sharding.md)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the step/request JSONL metrics trace "
                          "(serve/metrics.py vocabulary) to PATH; works "
@@ -203,10 +213,28 @@ def main():
         params = quantize_params(params, policy)
         print(f"[serve] PTQ ({args.quant}) in {time.time()-t0:.1f}s")
 
+    mesh_plan = None
+    if args.mesh:
+        from repro.runtime.elastic import MeshPlan
+        sizes = tuple(int(s) for s in args.mesh.split(","))
+        if len(sizes) != 2 or any(s < 1 for s in sizes):
+            ap.error(f"--mesh wants two positive sizes 'data,model', "
+                     f"got {args.mesh!r}")
+        if sizes[0] * sizes[1] > jax.device_count():
+            ap.error(f"--mesh {args.mesh} needs {sizes[0] * sizes[1]} "
+                     f"devices, have {jax.device_count()} (set "
+                     f"XLA_FLAGS=--xla_force_host_platform_device_count"
+                     f"=N before launch)")
+        mesh_plan = MeshPlan(shape=sizes, axis_names=("data", "model"),
+                             dropped_devices=0)
+        print(f"[serve] mesh: data={sizes[0]} model={sizes[1]} over "
+              f"{jax.device_count()} devices")
+
     page_pool = PagePoolCfg(page_size=args.paged) if args.paged else None
     eng = ServingEngine(model, params, EngineCfg(
         batch_slots=args.slots, max_len=args.max_len,
-        page_pool=page_pool, prefill_chunk=args.prefill_chunk))
+        page_pool=page_pool, prefill_chunk=args.prefill_chunk,
+        mesh=mesh_plan))
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab,
                             size=int(rng.integers(4, 32)))

@@ -756,12 +756,12 @@ def moe_layer(p, x, cfg, policy: PolicyLike, capacity_factor=None,
     xg = logical(xg, "batch", "expert", "expert_cap", "embed")
 
     ew = p["experts"]
-    h = _expert_ein(xg, ew["wg"], rp(policy, site, "experts/wg"))
-    u = _expert_ein(xg, ew["wu"], rp(policy, site, "experts/wu"))
+    h = _expert_ein(xg, ew["wg"], *rps(policy, site, "experts/wg"))
+    u = _expert_ein(xg, ew["wu"], *rps(policy, site, "experts/wu"))
     hh = jax.nn.silu(h) * u
     hh = logical(hh, "batch", "expert", "expert_cap", "ffn")
     yg = _expert_ein(hh, ew["wd"],
-                     rp(policy, site, "experts/wd"))    # (B, E, cap, d)
+                     *rps(policy, site, "experts/wd"))  # (B, E, cap, d)
     yg = logical(yg, "batch", "expert", "expert_cap", "embed")
 
     def combine_row(yg_r, dest_r, st_r, sw_r, keep_r):
@@ -783,7 +783,7 @@ def moe_layer(p, x, cfg, policy: PolicyLike, capacity_factor=None,
     return y.astype(x.dtype), aux
 
 
-def _expert_ein(xg, w, policy: QuantPolicy):
+def _expert_ein(xg, w, policy: QuantPolicy, site: str = ""):
     """([B,] E, C, K) x (E, K, F) -> ([B,] E, C, F) quantized matmul.
 
     Quantized per-expert weights go through the backend registry like every
@@ -802,7 +802,7 @@ def _expert_ein(xg, w, policy: QuantPolicy):
     if isinstance(w, (QuantizedTensor, MixedExpertQuant)):
         from repro import backends
         w_only = dataclasses.replace(policy, abits=0)
-        return backends.dispatch(xg, w, w_only)
+        return backends.dispatch(xg, w, w_only, site=site)
     eq = "eck,ekf->ecf" if xg.ndim == 3 else "beck,ekf->becf"
     return jnp.einsum(eq, xg.astype(cdt), w.astype(cdt))
 

@@ -152,6 +152,8 @@ def analyze(compiled, n_chips: int,
     """
     from . import hlo_stats
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # older jax: one dict per device
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     st = hlo_stats.analyze_hlo(hlo)
     mem = compiled.memory_analysis()

@@ -160,6 +160,13 @@ class EngineCfg:
     # prefill (non-bucketable block patterns) the cache previously grew
     # one entry per distinct prompt length, without bound.
     prefill_cache_cap: int = 8
+    # device mesh for the sharded backends: a `runtime.elastic.MeshPlan`
+    # (or a built `jax.sharding.Mesh`), installed via
+    # `backends.configure_mesh` at engine construction so the
+    # `pallas_sharded*` backends see it. None leaves any process-level
+    # mesh untouched — without one those backends decline every call with
+    # `shard_no_mesh` and serve through their dense fallback.
+    mesh: Optional[object] = None
 
 
 class ServingEngine:
@@ -181,6 +188,10 @@ class ServingEngine:
         # typo'd backend name fails here, not mid-trace on first prefill
         for name in model.policy.backends():
             backends.get_backend(name)
+        if cfg.mesh is not None:
+            # install the mesh BEFORE any trace so the sharded backends'
+            # decline checks see the real model-axis size from step one
+            backends.configure_mesh(cfg.mesh)
         # static-scale completeness: every quantized site that will
         # quantize activations at a calibrated scale must actually have
         # one. Fails at construction with the full site list (the
@@ -664,6 +675,41 @@ class ServingEngine:
         if self.paged:
             st["page_pool"] = self.pool.stats()
         return st
+
+    def device_pool_stats(self) -> Dict[str, object]:
+        """Per-device KV-pool footprint (paged mode).
+
+        Under an installed mesh the sharded backends split every pool
+        data/scale leaf along `Hkv` over the "model" axis, so each device
+        holds `1/model` of the pool bytes; block tables replicate (they
+        are bytes-negligible index arrays). Without a mesh this degrades
+        to the single-device view (`n_devices=1`). Occupancy is the SAME
+        gauge on every shard — pages allocate globally, shards differ
+        only in which heads of a page they hold — so the per-device list
+        repeats the pool's occupancy once per model-axis shard.
+        """
+        if not self.paged:
+            return {"n_devices": 1, "pool_bytes_total": 0,
+                    "pool_bytes_per_device": 0,
+                    "occupancy_per_device": []}
+        mesh = backends.current_mesh()
+        tp = 1
+        if mesh is not None:
+            from repro.sharding.rules import mesh_axis_sizes
+            tp = mesh_axis_sizes(mesh).get("model", 1) or 1
+        total = 0
+        flat = jax.tree_util.tree_flatten_with_path(self.caches)[0]
+        for kp, leaf in flat:
+            name = str(getattr(kp[-1], "key", getattr(kp[-1], "idx",
+                                                      kp[-1])))
+            if name in ("k", "v", "k_data", "v_data", "k_scl", "v_scl",
+                        "stage_k", "stage_v"):
+                total += int(leaf.size * leaf.dtype.itemsize)
+        occ = float(self.pool.stats()["occupancy"])
+        return {"n_devices": int(tp),
+                "pool_bytes_total": int(total),
+                "pool_bytes_per_device": int(total // tp),
+                "occupancy_per_device": [occ] * int(tp)}
 
     def defrag(self):
         """Compact live pages onto the low end of the pool (paged mode):

@@ -29,6 +29,10 @@ table; all times are `time.monotonic()` seconds):
 | `pool_occupancy`   | `PagePool` used/total pages after the step        |
 | `pool_fragmentation` | free fraction of the pool's live span (the      |
 |                    | holes `defrag()` would compact)                   |
+| `pool_device_occupancy` | per-device pool-occupancy gauge (list, one  |
+|                    | entry per "model"-axis shard of the installed     |
+|                    | mesh; `[occupancy]` when unsharded) — see         |
+|                    | docs/sharding.md                                  |
 | `prefill_interleave_ratio` | of steps that ran a prefill chunk, the    |
 |                    | fraction that also decoded a non-empty batch      |
 |                    | (1.0 = chunked prefill never stalled decode)      |
@@ -136,6 +140,12 @@ class MetricsLedger:
             rec["pool_used_pages"] = pool.used_pages
             rec["pool_fragmentation"] = pool.fragmentation()
             rec["pool_alloc_failures"] = pool.alloc_failures
+            if hasattr(engine, "device_pool_stats"):
+                # per-device pool-occupancy gauge: under a sharded mesh
+                # each "model"-axis shard holds 1/tp of the pool bytes
+                # at the SAME page occupancy (pages allocate globally)
+                rec["pool_device_occupancy"] = \
+                    engine.device_pool_stats()["occupancy_per_device"]
         if delta:
             rec["dispatch"] = dict(delta)
         self.step_records.append(rec)
@@ -195,6 +205,14 @@ class MetricsLedger:
                 [r.get("pool_occupancy") for r in steps])
             snap["pool_fragmentation"] = _dist(
                 [r.get("pool_fragmentation") for r in steps])
+        if steps and "pool_device_occupancy" in steps[0]:
+            per_dev = [r.get("pool_device_occupancy") or [] for r in steps]
+            snap["pool_device_occupancy"] = {
+                "n_devices": max((len(p) for p in per_dev), default=0),
+                "peak": max((max(p) for p in per_dev if p), default=0.0),
+                "final": (per_dev[-1] if per_dev and per_dev[-1]
+                          else []),
+            }
         return snap
 
     def write_jsonl(self, path: str) -> None:

@@ -34,11 +34,27 @@ REPLICATED_NAMES = {"gamma_scale", "beta_shift", "a_param", "fgate_bias",
 
 
 def mesh_axis_sizes(mesh) -> Dict[str, int]:
-    """Axis-name -> size for Mesh and AbstractMesh alike."""
+    """Axis-name -> size for Mesh and AbstractMesh alike.
+
+    Current JAX exposes an axis-name -> size mapping as `.shape` on both;
+    older AbstractMesh returned a plain size tuple, which zips against
+    `.axis_names`. Only that tuple-shaped case is caught: a mesh with no
+    `.shape`/`.axis_names` at all, or with mismatched lengths, raises
+    instead of being silently treated as unsharded (touching
+    `AbstractMesh.devices` is never safe — it raises ValueError, which a
+    bare hasattr/except used to swallow).
+    """
+    shape = mesh.shape
     try:
-        return dict(mesh.shape)
-    except Exception:
-        return dict(zip(mesh.axis_names, mesh.devices.shape))
+        return dict(shape)
+    except (TypeError, ValueError):
+        pass                      # legacy plain size tuple
+    names = tuple(mesh.axis_names)
+    sizes = tuple(shape)
+    if len(names) != len(sizes):
+        raise ValueError(f"mesh axis_names {names!r} do not match mesh "
+                         f"shape {sizes!r}")
+    return dict(zip(names, sizes))
 
 
 SMALL_MODEL_PARAMS = int(2e9)   # below this, TP hurts: go pure DP/FSDP

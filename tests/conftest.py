@@ -1,5 +1,12 @@
 """Shared pytest fixtures.
 
+Multi-device setup: the sharded-backend parity suite needs a real
+multi-device `jax.devices()` view, so the XLA host platform is forced to
+8 logical CPU devices BEFORE jax initializes (the flag is read once at
+backend init — setting it after `import jax` has already created the
+backend is a no-op). An externally provided
+`xla_force_host_platform_device_count` (e.g. CI's env) wins.
+
 The tier-1 suite runs every module in one process; on JAX-CPU each
 module's jitted programs stay resident in XLA's executable cache for the
 life of the process. With the full suite that accumulation segfaults the
@@ -11,11 +18,32 @@ cost is a handful of recompiles.
 """
 from __future__ import annotations
 
-import jax
-import pytest
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax  # noqa: E402  (must come after the XLA_FLAGS export above)
+import pytest  # noqa: E402
 
 
 @pytest.fixture(autouse=True, scope="module")
 def _bound_xla_executable_cache():
     yield
     jax.clear_caches()
+
+
+@pytest.fixture(scope="session")
+def forced_devices():
+    """The forced 8-logical-device view for multi-device tests.
+
+    Skips (rather than fails) when the host could not be forced — e.g. a
+    TPU runtime where the host-platform flag does not apply — so the
+    sharded parity suite degrades gracefully off-CI.
+    """
+    devs = jax.devices()
+    if len(devs) < 8:
+        pytest.skip(f"needs 8 forced host devices, have {len(devs)}")
+    return devs

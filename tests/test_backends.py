@@ -76,9 +76,10 @@ class TestRegistry:
         class Doubling(backends.XlaBackend):
             name = "xla_doubled"
 
-            def matmul(self, x, wq, policy, act_scale=None, precision=None):
+            def matmul(self, x, wq, policy, act_scale=None,
+                       precision=None, site=""):
                 return 2.0 * super().matmul(x, wq, policy,
-                                            act_scale, precision)
+                                            act_scale, precision, site)
 
         backends.register(Doubling())
         try:

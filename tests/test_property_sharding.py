@@ -1,0 +1,123 @@
+"""Property tests for sharding/rules.py and runtime/elastic.py.
+
+Hypothesis sweeps the input lattice the example tests can't: arbitrary
+leaf shapes × mesh sizes for `param_spec` (every axis a spec assigns
+must DIVIDE that dim — the alternative is replication, never a crash or
+a ragged shard), and arbitrary device counts for `plan_mesh` /
+`resize_plan` (every device is either in the mesh or reported dropped,
+the global batch always divides the data axis so per-device token
+counts stay integral, and a same-count resize is an exact no-op).
+
+Hypothesis ships in tests/requirements-optional.txt (CI installs it);
+locally absent -> the module skips.
+"""
+from __future__ import annotations
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.runtime.elastic import plan_mesh, resize_plan  # noqa: E402
+from repro.sharding.rules import (COL_PARALLEL, ROW_PARALLEL,  # noqa: E402
+                                  param_spec)
+
+
+class K:
+    def __init__(self, key):
+        self.key = key
+
+
+CFG = get_config("yi-6b")
+
+LEAF_NAMES = sorted(COL_PARALLEL | ROW_PARALLEL) + [
+    "table", "w_out", "gamma_scale", "b_out", "scale", "kernel"]
+
+leaf = st.sampled_from(LEAF_NAMES)
+dims = st.integers(min_value=1, max_value=12).map(lambda n: 2 * n)
+shapes = st.lists(dims, min_size=1, max_size=4).map(tuple)
+axis = st.sampled_from([1, 2, 3, 4, 8])
+
+
+def _axes_product(entry, sizes):
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= sizes[a]
+    return n
+
+
+@settings(max_examples=200, deadline=None)
+@given(name=leaf, shape=shapes, data=axis, model=axis,
+       dp_only=st.booleans(), under_experts=st.booleans())
+def test_param_spec_divides_or_replicates(name, shape, data, model,
+                                          dp_only, under_experts):
+    """Whatever the leaf/mesh combination, param_spec never crashes and
+    every mesh axis it assigns divides its dim exactly."""
+    path = (K("blocks"), K("0"), K("attn"), K(name))
+    if under_experts:
+        path = (K("blocks"), K("0"), K("moe"), K("experts"), K(name))
+    sizes = {"data": data, "model": model}
+    spec = param_spec(path, shape, CFG, sizes, dp_only=dp_only)
+    assert isinstance(spec, P)
+    assert len(spec) == len(shape)
+    for dim, entry in zip(shape, spec):
+        assert dim % _axes_product(entry, sizes) == 0, (
+            f"{name}: spec {spec} does not divide shape {shape} "
+            f"under {sizes}")
+
+
+@settings(max_examples=200, deadline=None)
+@given(n=st.integers(min_value=1, max_value=511),
+       prefer=st.sampled_from([1, 2, 4, 8, 16]),
+       gb=st.sampled_from([8, 64, 256, 384, 512]))
+def test_plan_mesh_invariants(n, prefer, gb):
+    plan = plan_mesh(n, prefer_model=prefer, global_batch=gb)
+    data, model = plan.shape[-2], plan.shape[-1]
+    # single-pod fleet (n < 512): every device is in the mesh or dropped
+    assert plan.n_devices + plan.dropped_devices == n
+    assert plan.dropped_devices >= 0
+    # the model axis is a power of two capped by the preference
+    assert model & (model - 1) == 0
+    assert model <= prefer
+    # per-device token counts stay integral
+    assert gb % data == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(n=st.integers(min_value=1, max_value=511),
+       m=st.integers(min_value=1, max_value=511),
+       gb=st.sampled_from([64, 256, 512]))
+def test_resize_plan_token_round_trip(n, m, gb):
+    """Grow/shrink n -> m: the new plan obeys the same token-count
+    invariants and dp_ratio reports exactly the data-parallel rescale
+    (what the batch splitter uses to re-apportion tokens)."""
+    old = plan_mesh(n, global_batch=gb)
+    r = resize_plan(old, m, global_batch=gb)
+    new = r["new_plan"]
+    assert new.n_devices + new.dropped_devices == m
+    assert gb % new.shape[-2] == 0
+    assert r["tp_changed"] == (new.shape[-1] != old.shape[-1])
+    assert r["needs_reshard"] == (new.shape != old.shape)
+    expect = (new.n_devices / new.shape[-1]) / \
+        max(old.n_devices / old.shape[-1], 1)
+    assert r["dp_ratio"] == pytest.approx(expect)
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=st.integers(min_value=1, max_value=511),
+       gb=st.sampled_from([64, 256]))
+def test_resize_plan_same_count_is_noop(n, gb):
+    """Resizing to the device count the old plan actually uses must be
+    an exact round trip: same shape, no reshard, dp_ratio 1."""
+    old = plan_mesh(n, global_batch=gb)
+    r = resize_plan(old, old.n_devices, global_batch=gb)
+    assert r["new_plan"].shape == old.shape
+    assert not r["needs_reshard"]
+    assert not r["tp_changed"]
+    assert r["dp_ratio"] == pytest.approx(1.0)

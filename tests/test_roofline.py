@@ -68,10 +68,68 @@ class TestFlops:
         assert st.bytes >= 10 * one_pass * 0.8
 
 
-@pytest.mark.skipif(jax.device_count() < 2,
-                    reason="needs >1 device (run under dryrun flags)")
 class TestCollectives:
-    pass
+    """Collective analysis on REAL multi-device HLO: conftest forces 8
+    host CPU devices (XLA_FLAGS), so these compile actual shard_map
+    programs instead of skipping (the seed's `device_count() < 2` guard
+    never ran anywhere)."""
+
+    @staticmethod
+    def _mesh42(devs):
+        from jax.sharding import Mesh
+        return Mesh(np.asarray(devs[:8]).reshape(4, 2),
+                    ("data", "model"))
+
+    def test_psum_compiles_to_all_reduce(self, forced_devices):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        mesh = self._mesh42(forced_devices)
+
+        def f(x):
+            return shard_map(lambda xl: jax.lax.psum(xl, "model"),
+                             mesh=mesh, in_specs=P(None, "model"),
+                             out_specs=P(None, None),
+                             check_rep=False)(x)
+
+        txt = _compile_text(f, jax.ShapeDtypeStruct((8, 16), jnp.float32))
+        colls = count_collectives(txt)
+        assert sum(n for k, n in colls.items()
+                   if k.startswith("all-reduce")) >= 1, colls
+        cb = collective_bytes(txt)
+        assert cb["total"] > 0
+
+    def test_row_parallel_sharded_matmul_psums(self, forced_devices):
+        """The sharded backend's row-parallel path must lower to an
+        all-reduce (the K-partial psum); column-parallel must lower to
+        NO collective at all — that is why it stays bit-identical."""
+        from repro import backends
+        from repro.backends import configure_mesh
+        from repro.core.policy import QuantPolicy
+        from repro.core.qlinear import quantize_weight
+        from repro.runtime.elastic import MeshPlan
+
+        pol = QuantPolicy(method="olive", wbits=4,
+                          compute_dtype="float32",
+                          backend="pallas_sharded_interpret")
+        w = jnp.asarray(np.random.default_rng(0)
+                        .standard_normal((64, 64)), jnp.float32)
+        wq = quantize_weight(w, pol)
+        configure_mesh(MeshPlan(shape=(4, 2),
+                                axis_names=("data", "model"),
+                                dropped_devices=0))
+        try:
+            sd = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+            row = _compile_text(
+                lambda x: backends.dispatch(x, wq, pol,
+                                            site="blocks/0/attn/wo"), sd)
+            col = _compile_text(
+                lambda x: backends.dispatch(x, wq, pol,
+                                            site="blocks/0/attn/wq"), sd)
+        finally:
+            configure_mesh(None)
+        assert sum(n for k, n in count_collectives(row).items()
+                   if k.startswith("all-reduce")) >= 1
+        assert count_collectives(col) == {}
 
 
 def test_collective_bytes_parser_units():

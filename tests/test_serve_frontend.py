@@ -50,10 +50,10 @@ def _prompts(sizes, seed=0):
 
 
 def _engine(model, params, page_pool=None, prefill_chunk=0,
-            batch_slots=2, max_len=128, backend=None):
+            batch_slots=2, max_len=128, backend=None, mesh=None):
     return ServingEngine(model, params, EngineCfg(
         batch_slots=batch_slots, max_len=max_len, backend=backend,
-        page_pool=page_pool, prefill_chunk=prefill_chunk))
+        page_pool=page_pool, prefill_chunk=prefill_chunk, mesh=mesh))
 
 
 def _drained(eng, prompts, max_news, metrics=None):
@@ -184,6 +184,49 @@ def test_async_matches_drained_quantized_paged():
     assert snap["requests"] == len(prompts)
 
 
+def test_async_sharded_matches_single_device_golden(forced_devices):
+    """The SAME golden config as test_async_matches_drained_quantized_
+    paged, served on `pallas_sharded_interpret` over a (4, 2) mesh: the
+    async sharded run must be token-for-token identical to the
+    single-device drained run, with zero fallbacks (every matmul and
+    both attention paths took the sharded kernels) and the per-device
+    pool gauge showing both model-axis shards."""
+    KB = "pallas_interpret"
+    SB = "pallas_sharded_interpret"
+    from repro.backends import configure_mesh
+    from repro.runtime.elastic import MeshPlan
+    pol = QuantPolicy(method="olive", kv_bits=4, compute_dtype="float32",
+                      backend=KB)
+    model = build_model(TINY, pol, remat=False)
+    params = model.init(jax.random.PRNGKey(1))
+    prompts = _prompts((5, 9, 40), seed=2)
+    max_news = [4, 3, 5]
+
+    golden = _drained(
+        _engine(model, params, page_pool=PagePoolCfg(page_size=16),
+                prefill_chunk=16, max_len=64, backend=KB),
+        prompts, max_news)
+    try:
+        ledger = MetricsLedger()
+        backends.reset_dispatch_stats()
+        eng = _engine(model, params, page_pool=PagePoolCfg(page_size=16),
+                      prefill_chunk=16, max_len=64, backend=SB,
+                      mesh=MeshPlan(shape=(4, 2),
+                                    axis_names=("data", "model"),
+                                    dropped_devices=0))
+        outs, _, _ = _async(eng, prompts, max_news, metrics=ledger)
+        assert outs == golden
+        snap = ledger.snapshot()
+        assert snap["fallbacks"] == 0, snap["dispatch"]
+        assert any(k.startswith(SB) for k in snap["dispatch"]), \
+            snap["dispatch"]
+        assert snap["pool_device_occupancy"]["n_devices"] == 2
+        assert all(len(r["pool_device_occupancy"]) == 2
+                   for r in ledger.step_records)
+    finally:
+        configure_mesh(None)
+
+
 # ------------------------------------------------------------------ TTFT
 def test_ttft_monotone_in_queue_position(tiny_model_params):
     """batch_slots=1 serializes admission, so TTFT must be monotone in
@@ -259,6 +302,12 @@ def test_metrics_snapshot_and_jsonl_roundtrip(tiny_model_params, tmp_path):
                                       if len(v) > 1)
     assert snap["prefill_chunk_steps"] > 0
     assert snap["prefill_interleave_ratio"] is not None
+    # per-device pool gauge: unsharded engine = one device, whose entry
+    # is exactly the pool occupancy of that step
+    assert all(r["pool_device_occupancy"] == [r["pool_occupancy"]]
+               for r in ledger.step_records)
+    assert snap["pool_device_occupancy"]["n_devices"] == 1
+    assert snap["pool_device_occupancy"]["final"] == [0.0]
 
     path = tmp_path / "trace.jsonl"
     ledger.write_jsonl(str(path))

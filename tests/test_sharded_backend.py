@@ -1,0 +1,360 @@
+"""8-device sharded-backend parity suite (ISSUE 9's headline proof).
+
+Runs on 8 forced host CPU devices (conftest.py sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before jax
+imports) and pins the `pallas_sharded_interpret` contracts from
+docs/sharding.md:
+
+- TP column-parallel 2-D matmul is BIT-identical to the single-device
+  fused kernel across int4 weight-only, flint4 W4A4, and W4A8 — the
+  packed codes shard along N without re-encoding;
+- TP row-parallel (`wo`/`wd` sites) splits K in whole outlier-victim
+  pairs and psums — equal up to fp32 reassociation only;
+- EP splits the grouped kernel's expert grid dim — bit-identical;
+- Hkv-sharded decode AND paged cache-write prefill attention are
+  bit-identical, including every written pool byte;
+- a quantized paged ENGINE run on the sharded backend is
+  token-for-token identical to the single-device engine, with ZERO
+  sharded-path fallbacks and a per-device pool footprint of 1/tp;
+- unshardable layouts decline with the machine-readable `shard_*`
+  codes tabled in backends/base.py and fall back to the dense path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.backends import configure_mesh
+from repro.configs.base import ArchConfig
+from repro.core.policy import QuantPolicy
+from repro.core.qlinear import _quantize_mixed_experts, quantize_params, \
+    quantize_weight
+from repro.models import layers as L
+from repro.models.model import build_model
+from repro.runtime.elastic import MeshPlan
+from repro.serve.engine import EngineCfg, ServingEngine
+from repro.serve.paging import PagePoolCfg
+
+KB = "pallas_interpret"          # single-device reference twin
+SB = "pallas_sharded_interpret"  # backend under test
+
+PLAN42 = MeshPlan(shape=(4, 2), axis_names=("data", "model"),
+                  dropped_devices=0)
+
+
+def _pol(**kw):
+    base = dict(method="olive", wbits=4, abits=0,
+                compute_dtype="float32", backend=SB)
+    base.update(kw)
+    return QuantPolicy(**base)
+
+
+# weight/activation precision grid the parity tests sweep
+CASES = {
+    "int4_weight_only": dict(),
+    "flint4_w4a4": dict(abits=4, w_normal_dtype="flint4",
+                        a_normal_dtype="flint4"),
+    "w4a8": dict(abits=8),
+}
+
+
+@pytest.fixture()
+def mesh42(forced_devices):
+    """(data=4, model=2) mesh over the 8 forced devices; stats reset so
+    every test asserts its own dispatch ledger; mesh cleared on exit so
+    no other module ever sees sharded state."""
+    mesh = configure_mesh(PLAN42)
+    backends.reset_dispatch_stats()
+    yield mesh
+    configure_mesh(None)
+
+
+def _assert_no_shard_fallbacks():
+    bad = {k: v for k, v in backends.dispatch_stats().items()
+           if "->fallback:shard" in k}
+    assert not bad, f"sharded path fell back: {bad}"
+
+
+def _served(suffix=""):
+    return backends.dispatch_stats().get(f"{SB}{suffix}", 0)
+
+
+# ------------------------------------------------------------------ registry
+def test_sharded_backends_registered():
+    avail = backends.available()
+    assert "pallas_sharded" in avail
+    assert "pallas_sharded_interpret" in avail
+
+
+# ------------------------------------------------------------ 2-D TP matmul
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_col_parallel_bit_identical(mesh42, case):
+    pol = _pol(**CASES[case])
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    wq = quantize_weight(w, pol)
+    y = backends.dispatch(x, wq, pol, site="blocks/0/attn/wq")
+    ref = backends.dispatch(x, wq, pol.with_backend(KB),
+                            site="blocks/0/attn/wq")
+    assert _served() == 1
+    _assert_no_shard_fallbacks()
+    # no-collective column split: outputs must be BIT-identical
+    assert np.array_equal(np.asarray(y), np.asarray(ref))
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_row_parallel_psum_close(mesh42, case):
+    pol = _pol(**CASES[case])
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    wq = quantize_weight(w, pol)
+    y = backends.dispatch(x, wq, pol, site="blocks/0/attn/wo")
+    ref = backends.dispatch(x, wq, pol.with_backend(KB),
+                            site="blocks/0/attn/wo")
+    assert _served() == 1
+    _assert_no_shard_fallbacks()
+    # the psum reassociates the fp32 K-sum: allclose, not array_equal
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_expert_parallel_bit_identical(mesh42):
+    pol = _pol()
+    rng = np.random.default_rng(5)
+    xg = jnp.asarray(rng.standard_normal((4, 3, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 64, 128)), jnp.float32)
+    wq = quantize_weight(w, pol)
+    y = backends.dispatch(xg, wq, pol, site="blocks/0/moe/experts/wg")
+    ref = backends.dispatch(xg, wq, pol.with_backend(KB),
+                            site="blocks/0/moe/experts/wg")
+    assert _served("[stacked]") == 1
+    _assert_no_shard_fallbacks()
+    assert np.array_equal(np.asarray(y), np.asarray(ref))
+
+
+# --------------------------------------------------- Hkv-sharded attention
+def _packed_slab(rng, b, s, hkv, d):
+    cache = L.make_kv_cache(b, s, hkv, d, kv_bits=4)
+    return {
+        "k_data": jnp.asarray(
+            rng.integers(0, 256, size=cache["k_data"].shape), jnp.uint8),
+        "v_data": jnp.asarray(
+            rng.integers(0, 256, size=cache["v_data"].shape), jnp.uint8),
+        "k_scl": jnp.asarray(
+            rng.uniform(0.05, 0.4, size=cache["k_scl"].shape),
+            jnp.float32),
+        "v_scl": jnp.asarray(
+            rng.uniform(0.05, 0.4, size=cache["v_scl"].shape),
+            jnp.float32),
+    }
+
+
+def _fill_pool(rng, cache):
+    out = dict(cache)
+    for name in ("k_data", "v_data"):
+        out[name] = jnp.asarray(
+            rng.integers(0, 256, size=cache[name].shape), jnp.uint8)
+    for name in ("k_scl", "v_scl"):
+        out[name] = jnp.asarray(
+            rng.uniform(0.05, 0.4, size=cache[name].shape), jnp.float32)
+    return out
+
+
+def test_decode_attention_slab_bit_identical(mesh42):
+    rng = np.random.default_rng(6)
+    pol = _pol(kv_bits=4)
+    cache = _packed_slab(rng, b=2, s=32, hkv=4, d=16)
+    q = jnp.asarray(rng.standard_normal((2, 1, 8, 16)), jnp.float32)
+    pos = jnp.asarray([5, 17], jnp.int32)
+    y = backends.decode_attention(q, cache, pos, policy=pol)
+    ref = backends.decode_attention(q, cache, pos,
+                                    policy=pol.with_backend(KB))
+    assert _served("[decode_attn]") == 1
+    _assert_no_shard_fallbacks()
+    # per-head attention: the Hkv shard changes nothing, bit for bit
+    assert np.array_equal(np.asarray(y), np.asarray(ref))
+
+
+def test_decode_attention_paged_bit_identical(mesh42):
+    rng = np.random.default_rng(7)
+    pol = _pol(kv_bits=4)
+    cache = _fill_pool(rng, L.make_paged_kv_cache(
+        8, 8, batch_slots=2, pages_per_row=2, n_kv=4, head_dim=16,
+        kv_bits=4))
+    cache["block_table"] = jnp.asarray([[1, 4], [2, 6]], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((2, 1, 8, 16)), jnp.float32)
+    pos = jnp.asarray([5, 11], jnp.int32)
+    y = backends.decode_attention(q, cache, pos, policy=pol)
+    ref = backends.decode_attention(q, cache, pos,
+                                    policy=pol.with_backend(KB))
+    assert _served("[decode_attn]") == 1
+    _assert_no_shard_fallbacks()
+    assert np.array_equal(np.asarray(y), np.asarray(ref))
+
+
+def test_prefill_attention_paged_bit_identical(mesh42):
+    rng = np.random.default_rng(8)
+    pol = _pol(kv_bits=4)
+    cache = L.make_paged_kv_cache(8, 8, batch_slots=1, pages_per_row=2,
+                                  n_kv=4, head_dim=16, kv_bits=4)
+    cache["block_table"] = jnp.asarray([[3, 5]], jnp.int32)
+    cache["stage_k"] = jnp.asarray(
+        rng.standard_normal((1, 16, 4, 16)), jnp.float32)
+    cache["stage_v"] = jnp.asarray(
+        rng.standard_normal((1, 16, 4, 16)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((1, 8, 8, 16)), jnp.float32)
+    positions = jnp.arange(8, 16, dtype=jnp.int32)[None]
+    y, new = backends.prefill_attention(q, cache, positions, policy=pol)
+    ref_y, ref_new = backends.prefill_attention(
+        q, cache, positions, policy=pol.with_backend(KB))
+    assert _served("[prefill_attn]") == 1
+    _assert_no_shard_fallbacks()
+    assert np.array_equal(np.asarray(y), np.asarray(ref_y))
+    # the fused quantize-and-write must land identical PAGE BYTES too
+    for name in ("k_data", "v_data", "k_scl", "v_scl"):
+        assert np.array_equal(np.asarray(new[name]),
+                              np.asarray(ref_new[name])), name
+
+
+# ------------------------------------------------------------- engine runs
+TINY = ArchConfig(name="shard-tiny", family="dense", n_layers=2,
+                  d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                  vocab=256, head_dim=16, block_pattern=("attn",))
+
+
+def _drain(model, params, backend, mesh=None):
+    eng = ServingEngine(model, params, EngineCfg(
+        batch_slots=2, max_len=64, backend=backend,
+        page_pool=PagePoolCfg(page_size=16), prefill_chunk=16,
+        mesh=mesh))
+    rng = np.random.default_rng(2)
+    for n, mn in zip((5, 9, 40), (4, 3, 5)):
+        eng.submit(rng.integers(0, TINY.vocab, size=n).astype(np.int32),
+                   max_new_tokens=mn)
+    done = eng.run_until_drained()
+    return eng, {r.uid: list(r.out_tokens) for r in done}
+
+
+def test_engine_token_parity_sharded_vs_single(forced_devices):
+    """Quantized (W4 + packed-KV4) paged+chunked serving on the sharded
+    backend over a (4, 2) mesh, token-for-token vs single device."""
+    pol = _pol(kv_bits=4, backend=KB)
+    model = build_model(TINY, pol, remat=False)
+    params = quantize_params(model.init(jax.random.PRNGKey(1),
+                                        dtype=jnp.float32), pol)
+    try:
+        _, ref = _drain(model, params, KB)
+        backends.reset_dispatch_stats()
+        eng, outs = _drain(model, params, SB, mesh=PLAN42)
+        stats = backends.dispatch_stats()
+        # every matmul + both attention paths served sharded, zero falls
+        assert any(k.startswith(SB) for k in stats), stats
+        _assert_no_shard_fallbacks()
+        assert outs == ref
+        dps = eng.device_pool_stats()
+        assert dps["n_devices"] == 2
+        assert dps["pool_bytes_per_device"] * 2 == dps["pool_bytes_total"]
+        assert len(dps["occupancy_per_device"]) == 2
+    finally:
+        configure_mesh(None)
+
+
+def test_engine_cfg_without_mesh_falls_back_densely(forced_devices):
+    """No mesh configured: the sharded backend declines every call with
+    `shard_no_mesh` and the dense fallback still serves correct tokens."""
+    configure_mesh(None)
+    pol = _pol(kv_bits=4, backend=KB)
+    model = build_model(TINY, pol, remat=False)
+    params = quantize_params(model.init(jax.random.PRNGKey(1),
+                                        dtype=jnp.float32), pol)
+    _, ref = _drain(model, params, KB)
+    backends.reset_dispatch_stats()
+    _, outs = _drain(model, params, SB)   # mesh=None on purpose
+    stats = backends.dispatch_stats()
+    assert any("->fallback:shard_no_mesh" in k for k in stats), stats
+    assert outs == ref
+
+
+# ------------------------------------------------------ decline vocabulary
+def test_decline_no_mesh(forced_devices):
+    configure_mesh(None)
+    pol = _pol()
+    wq = quantize_weight(jnp.ones((64, 128), jnp.float32), pol)
+    b = backends.get_backend(SB)
+    assert b.decline_reason(jnp.ones((4, 64)), wq, pol,
+                            site="blocks/0/attn/wq") == "shard_no_mesh"
+
+
+@pytest.mark.parametrize("shape,site,code", [
+    ((64, 65), "blocks/0/attn/wq", "shard_n_indivisible"),
+    ((66, 64), "blocks/0/attn/wo", "shard_k_indivisible"),
+])
+def test_decline_tp_indivisible(mesh42, shape, site, code):
+    pol = _pol()
+    wq = quantize_weight(jnp.ones(shape, jnp.float32), pol)
+    b = backends.get_backend(SB)
+    x = jnp.ones((4, shape[0]), jnp.float32)
+    assert b.decline_reason(x, wq, pol, site=site) == code
+
+
+def test_decline_k_pair_straddle_int8(mesh42):
+    """int8 codes are UNPACKED (two rows per outlier-victim pair): a K
+    split must keep whole pairs, so rows % (tp * 2) gates the row path."""
+    pol = _pol(wbits=8)
+    b = backends.get_backend(SB)
+    # 70 rows: divisible by tp=2 but 70 % (2*2) != 0 — a shard boundary
+    # would cut a pair in half
+    wq = quantize_weight(jnp.ones((70, 64), jnp.float32), pol)
+    assert wq.data.shape[0] == 70           # unpacked: one row per value
+    x = jnp.ones((4, 70), jnp.float32)
+    assert b.decline_reason(x, wq, pol, site="blocks/0/attn/wo") \
+        == "shard_k_indivisible"
+    # 72 rows = 36 whole pairs per shard boundary: serves
+    wq = quantize_weight(jnp.ones((72, 64), jnp.float32), pol)
+    x = jnp.ones((4, 72), jnp.float32)
+    assert b.decline_reason(x, wq, pol, site="blocks/0/attn/wo") is None
+
+
+def test_decline_expert_indivisible(mesh42):
+    pol = _pol()
+    wq = quantize_weight(jnp.ones((3, 64, 128), jnp.float32), pol)
+    b = backends.get_backend(SB)
+    xg = jnp.ones((3, 2, 64), jnp.float32)
+    assert b.decline_reason(xg, wq, pol, site="blocks/0/moe/experts/wg") \
+        == "shard_expert_indivisible"
+
+
+def test_decline_hkv(mesh42):
+    rng = np.random.default_rng(9)
+    b = backends.get_backend(SB)
+    q1 = jnp.ones((2, 1, 4, 16), jnp.float32)
+    assert b.decode_attn_decline_reason(
+        q1, _packed_slab(rng, 2, 32, hkv=1, d=16)) == "shard_hkv_lt_axis"
+    q3 = jnp.ones((2, 1, 6, 16), jnp.float32)
+    assert b.decode_attn_decline_reason(
+        q3, _packed_slab(rng, 2, 32, hkv=3, d=16)) \
+        == "shard_hkv_indivisible"
+
+
+def test_mixed_expert_group_declines_whole(mesh42):
+    """Ragged per-expert precision groups decline in one piece and the
+    dense fallback output matches the xla backend exactly."""
+    pol = _pol()
+    w = jnp.asarray(np.random.default_rng(10)
+                    .standard_normal((4, 64, 128)), jnp.float32)
+    mixed = _quantize_mixed_experts(
+        w, [pol, pol, _pol(wbits=8), _pol(wbits=8)])
+    xg = jnp.asarray(np.random.default_rng(11)
+                     .standard_normal((4, 3, 64)), jnp.float32)
+    y = backends.dispatch(xg, mixed, pol, site="blocks/0/moe/experts/wg")
+    stats = backends.dispatch_stats()
+    assert any("->fallback:shard_mixed_expert_group" in k
+               for k in stats), stats
+    ref = backends.dispatch(xg, mixed, pol.with_backend("xla"),
+                            site="blocks/0/moe/experts/wg")
+    assert np.array_equal(np.asarray(y), np.asarray(ref))

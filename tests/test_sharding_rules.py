@@ -9,7 +9,8 @@ import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs import ARCHS, get_config
-from repro.sharding.rules import (cache_pspecs, make_rules, param_spec,
+from repro.sharding.rules import (cache_pspecs, make_rules,
+                                  mesh_axis_sizes, param_spec,
                                   params_pspecs)
 
 
@@ -129,6 +130,39 @@ class TestParamSpecs:
                            K("gamma_scale")), (16, 4096), cfg,
                           {"data": 2, "model": 2})
         assert spec == P(None, None)
+
+
+class TestMeshAxisSizes:
+    """Regression: `mesh_axis_sizes` used to hide EVERY failure behind a
+    bare `except Exception` — a genuinely malformed mesh came back as
+    `{}` (silently unsharded). Now only the legacy tuple-shaped
+    AbstractMesh case is translated; bad meshes raise."""
+
+    def test_real_mesh(self, forced_devices):
+        from jax.sharding import Mesh
+        mesh = Mesh(np.asarray(forced_devices[:8]).reshape(4, 2),
+                    ("data", "model"))
+        assert mesh_axis_sizes(mesh) == {"data": 4, "model": 2}
+
+    def test_abstract_mesh(self, mesh22):
+        assert mesh_axis_sizes(mesh22) == {"data": 2, "model": 2}
+
+    def test_legacy_tuple_shape(self):
+        class Legacy:
+            shape = (4, 2)
+            axis_names = ("data", "model")
+        assert mesh_axis_sizes(Legacy()) == {"data": 4, "model": 2}
+
+    def test_mismatched_lengths_raise(self):
+        class Bad:
+            shape = (4, 2, 1)
+            axis_names = ("data", "model")
+        with pytest.raises(ValueError, match="do not match"):
+            mesh_axis_sizes(Bad())
+
+    def test_shapeless_object_raises(self):
+        with pytest.raises(AttributeError):
+            mesh_axis_sizes(object())
 
 
 class TestCachePSpecs:
