@@ -1,0 +1,84 @@
+"""`repro.analysis` — the repo-native static contract checker.
+
+OliVe's encoding is *locally* checkable: one byte is one outlier-victim
+pair, every scale travels with its tile, and every dispatch decline is a
+registered code. This package turns those conventions into enforced
+contracts, runnable as ``python -m repro.analysis`` (nonzero exit on
+findings) and as pytest (`tests/test_analysis.py`). Four passes:
+
+- **vocabulary** (`vocab.py`) — AST-scans `backends/` and `kernels/` for
+  decline-code and dispatch-stats string literals and checks them against
+  `backends/base.py::DECLINE_CODES` (+ the quoted copies in
+  docs/backends.md and docs/sharding.md).
+- **kernels** (`kernels.py`) — traces every registered `pallas_call`
+  abstractly and checks grid/block divisibility, pair-aligned K tiling,
+  page-size == decode-KV-tile, declared output aliasing, and a per-kernel
+  VMEM footprint budget; sweeps the sharded row-parallel K-split
+  predicate against the OVP pairing ground truth.
+- **policies** (`policies.py`) — resolves every preset `PolicyProgram`
+  (and any calibration artifact) against the real param trees of the
+  config zoo, flagging dead rules, shadowed precedence, and globs that
+  match nothing.
+- **hygiene** (`hygiene.py`) — keeps bare/overbroad `except` handlers
+  out of `src/repro/` (the typed-error pattern from `sharding/rules.py`).
+
+`sanitize.py` is the runtime side: ``REPRO_SANITIZE=1`` turns on
+`jax_debug_nans`, checkify assertions inside the OVP encode/decode
+paths, and the serving engine's jit-trace-count audit. See
+docs/static_analysis.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer finding. `code` is a stable finding id (see
+    docs/static_analysis.md), `where` a file/symbol anchor, `message`
+    the human-readable defect statement."""
+    code: str
+    where: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.code} {self.where}: {self.message}"
+
+
+PASS_NAMES = ("vocab", "kernels", "policies", "hygiene")
+
+
+def run_pass(name: str, fixtures: Sequence[str] = (),
+             vmem_budget: Optional[int] = None) -> List[Finding]:
+    """Run one pass by name. `fixtures` are extra .py files (seeded-
+    violation modules) folded into the pass's scan/case set."""
+    # pass modules import jax/the repo lazily so `import repro.analysis`
+    # (e.g. from core/ovp.py's sanitizer hook) stays dependency-free
+    if name == "vocab":
+        from . import vocab
+        return vocab.check(fixtures=fixtures)
+    if name == "kernels":
+        from . import kernels
+        return kernels.check(fixtures=fixtures, vmem_budget=vmem_budget)
+    if name == "policies":
+        from . import policies
+        return policies.check(fixtures=fixtures)
+    if name == "hygiene":
+        from . import hygiene
+        return hygiene.check(fixtures=fixtures)
+    raise KeyError(f"unknown analysis pass {name!r}; "
+                   f"options: {PASS_NAMES}")
+
+
+def run_all(passes: Sequence[str] = PASS_NAMES,
+            fixtures: Sequence[str] = (),
+            vmem_budget: Optional[int] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for name in passes:
+        findings.extend(run_pass(name, fixtures=fixtures,
+                                 vmem_budget=vmem_budget))
+    return findings
+
+
+__all__ = ["Finding", "PASS_NAMES", "run_pass", "run_all"]

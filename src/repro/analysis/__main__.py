@@ -1,0 +1,90 @@
+"""CLI: ``python -m repro.analysis`` — exit nonzero on any finding.
+
+Runs all four passes by default; see docs/static_analysis.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import PASS_NAMES, run_all
+
+
+def sanitize_smoke() -> int:
+    """Tiny end-to-end serving smoke under REPRO_SANITIZE=1: the
+    pallas_interpret backend, checkified decode/prefill, and the
+    jit-trace-count audit. Returns the number of failures (0 = pass)."""
+    import os
+    os.environ["REPRO_SANITIZE"] = "1"
+    from repro.analysis import sanitize
+    sanitize.configure()
+
+    import jax
+    import numpy as np
+    from repro.configs.base import ArchConfig
+    from repro.core.policy import QuantPolicy
+    from repro.core.qlinear import quantize_params
+    from repro.models.model import build_model
+    from repro.serve.engine import EngineCfg, ServingEngine
+
+    cfg = ArchConfig(name="analysis-smoke", family="dense", n_layers=2,
+                     d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                     vocab=256, head_dim=16, block_pattern=("attn",))
+    policy = QuantPolicy(method="olive", wbits=4, abits=4, kv_bits=4,
+                         backend="pallas_interpret",
+                         compute_dtype="float32")
+    model = build_model(cfg, policy, remat=False)
+    # quantize_params self-functionalizes its staged checks when the
+    # sanitizer is on, so the smoke calls it like any other caller.
+    params = quantize_params(model.init(jax.random.PRNGKey(0)), policy)
+    engine = ServingEngine(model, params,
+                           EngineCfg(batch_slots=2, max_len=64))
+    rng = np.random.default_rng(0)
+    for n in (5, 9):   # two prompts, one 16-bucket, one shared trace
+        engine.submit(rng.integers(1, cfg.vocab, size=n).astype(np.int32),
+                      max_new_tokens=4)
+    engine.run_until_drained()
+    audit = sanitize.audit_traces(engine)
+    print(f"sanitize smoke OK: {audit}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static contract checker: vocabulary, kernel "
+                    "contracts, policy resolution, exception hygiene.")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=PASS_NAMES, default=None,
+                    help="run only this pass (repeatable; default: all)")
+    ap.add_argument("--fixture", action="append", default=[],
+                    help="extra .py module folded into the scan/case set "
+                         "(seeded-violation fixtures)")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="per-kernel live-block budget in bytes "
+                         "(default: REPRO_VMEM_BUDGET or 16 MiB)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as a JSON array")
+    ap.add_argument("--sanitize-smoke", action="store_true",
+                    help="instead of the static passes, run the "
+                         "REPRO_SANITIZE=1 serving engine smoke")
+    args = ap.parse_args(argv)
+
+    if args.sanitize_smoke:
+        return sanitize_smoke()
+
+    findings = run_all(passes=tuple(args.passes or PASS_NAMES),
+                       fixtures=tuple(args.fixture),
+                       vmem_budget=args.vmem_budget)
+    if args.json:
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f)
+        print(f"repro.analysis: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,165 @@
+"""Policy pass: resolve preset programs against the real config zoo.
+
+The site universe is built the way serving builds it: every arch in
+`repro.configs.ARCHS` (reduced size), model constructed with a
+layer-addressed program so the param tree unrolls to `layers/<i>/...`
+addresses, `jax.eval_shape` over `model.init` (no memory, no compile),
+`qlinear.tree_paths` + `is_linear_weight` to keep exactly the sites the
+quantizer resolves — plus the per-layer `layers/<i>/attn/kv` cache
+addresses for attention archs.
+
+Checks, over every preset `PolicyProgram` (flat presets compile to
+all-"compat" rule fans and are exempt — see `core.policy.Rule`):
+
+- **POL_DEAD_RULE** — an authored rule pattern matches no site of any
+  arch in the zoo: the rule can never fire, usually a renamed module or
+  a typo'd glob.
+- **POL_SHADOWED** — an authored rule matches sites, but on every one of
+  them an earlier rule matches first: first-match-wins precedence makes
+  the rule unreachable.
+- **POL_DEAD_GLOB** — a calibration-artifact scale key (exact or
+  fnmatch glob) matches no site: the calibrated scale would silently
+  never apply.
+
+Fixture modules may define `analysis_programs() -> [(name, program)]`
+and/or `analysis_artifacts() -> [(name, {key: scale})]` to fold seeded
+violations into the same checks.
+"""
+from __future__ import annotations
+
+import fnmatch
+import importlib.util
+import re
+from pathlib import Path
+from typing import Dict, List, Sequence, Set, Tuple
+
+from . import Finding
+
+
+_UNIVERSES: Dict[str, List[str]] = {}
+
+
+def site_universes() -> Dict[str, List[str]]:
+    """{arch_name: [site, ...]} for the whole zoo, unrolled layout.
+    Memoized — the zoo's shapes are process-constant."""
+    if _UNIVERSES:
+        return _UNIVERSES
+    import jax
+    from repro.configs import ARCHS
+    from repro.core.policy import get_program
+    from repro.core.qlinear import is_linear_weight, tree_paths
+    from repro.models.model import build_model
+
+    universes: Dict[str, List[str]] = {}
+    for name, cfg in ARCHS.items():
+        cfg = cfg.reduced()
+        # a layer-addressed program forces the unrolled `layers/<i>/...`
+        # layout, the one per-layer rules resolve against
+        program = get_program("olive_mixed_w48", n_layers=cfg.n_layers)
+        model = build_model(cfg, program, remat=False)
+        params_sds = jax.eval_shape(
+            lambda m=model: m.init(jax.random.PRNGKey(0)))
+        sites = [path for path, w in tree_paths(params_sds)
+                 if is_linear_weight(path, w)]
+        layer_ids = {m.group(1) for s in sites
+                     for m in [re.match(r"layers/(\d+)/", s)] if m}
+        if any("attn/" in s for s in sites):
+            sites += [f"layers/{i}/attn/kv" for i in sorted(layer_ids)]
+        universes[name] = sites
+    _UNIVERSES.update(universes)
+    return _UNIVERSES
+
+
+def _first_match(program, site: str) -> int:
+    for i, rule in enumerate(program.rules):
+        if rule.matches(site):
+            return i
+    return -1
+
+
+def _check_program(name: str, builders,
+                   universes: Dict[str, List[str]]) -> List[Finding]:
+    """`builders` maps arch name -> the program instantiated for that
+    arch (layer-addressed presets depend on n_layers)."""
+    findings: List[Finding] = []
+    # authored rule identity is (index-in-program, pattern); programs for
+    # different archs share structure, so indexes line up
+    matched: Dict[int, Set[str]] = {}
+    reached: Set[int] = set()
+    patterns: Dict[int, str] = {}
+    for arch, sites in universes.items():
+        program = builders[arch]
+        authored = {i for i, r in enumerate(program.rules)
+                    if r.origin != "compat"}
+        for i in authored:
+            patterns[i] = program.rules[i].pattern
+        for site in sites:
+            hit = _first_match(program, site)
+            for i in authored:
+                if program.rules[i].matches(site):
+                    matched.setdefault(i, set()).add(f"{arch}:{site}")
+            if hit in authored:
+                reached.add(hit)
+    for i, pattern in sorted(patterns.items()):
+        if i not in matched:
+            findings.append(Finding(
+                "POL_DEAD_RULE", f"{name}[{i}]",
+                f"rule pattern {pattern!r} matches no site of any arch "
+                f"in the config zoo"))
+        elif i not in reached:
+            findings.append(Finding(
+                "POL_SHADOWED", f"{name}[{i}]",
+                f"rule pattern {pattern!r} matches sites but an earlier "
+                f"rule always wins (first-match precedence)"))
+    return findings
+
+
+def _check_artifact(name: str, scales,
+                    all_sites: List[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    keys = scales.keys() if hasattr(scales, "keys") else \
+        [k for k, _ in scales]
+    for key in keys:
+        low = key.lower()
+        if not any(key == s or fnmatch.fnmatchcase(s.lower(), low)
+                   for s in all_sites):
+            findings.append(Finding(
+                "POL_DEAD_GLOB", f"{name}[{key}]",
+                f"calibration scale key {key!r} matches no site of any "
+                f"arch in the config zoo"))
+    return findings
+
+
+def _load_fixture(path: Path):
+    spec = importlib.util.spec_from_file_location(
+        f"_analysis_fixture_{path.stem}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def check(fixtures: Sequence[str] = ()) -> List[Finding]:
+    from repro.core.policy import PROGRAM_PRESETS
+
+    universes = site_universes()
+    all_sites = [s for sites in universes.values() for s in sites]
+    findings: List[Finding] = []
+
+    for name, make in PROGRAM_PRESETS.items():
+        from repro.configs import ARCHS
+        builders = {arch: make(cfg.reduced().n_layers)
+                    for arch, cfg in ARCHS.items()}
+        findings.extend(_check_program(name, builders, universes))
+
+    for f in fixtures:
+        if not str(f).endswith(".py"):
+            continue
+        mod = _load_fixture(Path(f))
+        for name, program in getattr(mod, "analysis_programs",
+                                     lambda: [])():
+            builders = {arch: program for arch in universes}
+            findings.extend(_check_program(name, builders, universes))
+        for name, scales in getattr(mod, "analysis_artifacts",
+                                    lambda: [])():
+            findings.extend(_check_artifact(name, scales, all_sites))
+    return findings

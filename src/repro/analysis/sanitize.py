@@ -1,0 +1,103 @@
+"""REPRO_SANITIZE=1 — the runtime sanitizer mode.
+
+Three wires, all off (zero overhead, not even a traced op) unless the
+environment variable is set when the computation is built:
+
+- `configure()` flips `jax_debug_nans` on, so any NaN materializing in a
+  jitted step raises at the op that produced it instead of surfacing as
+  garbage logits ten layers later.
+- `check(pred, msg)` is a gated `checkify.check`: the OVP encode/decode
+  paths (`core/ovp.py`) assert scale positivity and finiteness through
+  it. The checks functionalize under jit when the enclosing computation
+  is built by `jit_checked` (the serving engine does this for its decode
+  and prefill steps); eager callers get the check evaluated immediately.
+- the serving engine counts every jit trace it takes
+  (`ServingEngine.trace_audit()`); `audit_traces(engine)` turns an
+  unexpected retrace — a trace the bucket/stage-length cache should have
+  absorbed — into a hard failure of the engine smoke.
+
+This module imports nothing from the rest of the repo, so any layer
+(core, kernels, serve) can hook it without cycles.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict
+
+import jax
+from jax.experimental import checkify
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+def configure() -> None:
+    """Install the global sanitizer config (idempotent). No-op unless
+    REPRO_SANITIZE=1."""
+    if enabled():
+        jax.config.update("jax_debug_nans", True)
+
+
+def check(pred, msg: str, **fmt) -> None:
+    """Sanitizer assertion; nothing unless REPRO_SANITIZE=1 (the gate is
+    a Python branch, so disabled runs trace zero extra ops).
+
+    Concrete predicates assert immediately. Traced predicates become
+    `checkify.check`s, which require the enclosing computation to be
+    functionalized — build it with `jit_checked` (the serving engine's
+    steps) or run it through `run_checked` (one-shot staged calls like
+    `quantize_params`)."""
+    if not enabled():
+        return
+    if isinstance(pred, jax.core.Tracer):
+        checkify.check(pred, msg, **fmt)
+    elif not bool(pred):
+        raise AssertionError("REPRO_SANITIZE: " + msg.format(**fmt))
+
+
+def jit_checked(fn: Callable) -> Callable:
+    """`jax.jit(fn)`, plus checkify functionalization when sanitizing.
+
+    The returned callable has the jit signature of `fn`: under
+    REPRO_SANITIZE=1 it runs `jit(checkify(fn))`, throws on any failed
+    `check` (as a `JaxRuntimeError` naming the check), and returns the
+    payload — so call sites don't branch on the mode.
+    """
+    if not enabled():
+        return jax.jit(fn)
+    checked = jax.jit(checkify.checkify(fn, errors=checkify.user_checks))
+
+    def wrapper(*args, **kwargs):
+        err, out = checked(*args, **kwargs)
+        err.throw()
+        return out
+
+    return wrapper
+
+
+def run_checked(fn: Callable, *args, **kwargs):
+    """Run one staged call (something that vmaps/scans internally, e.g.
+    `quantize_params`) with its sanitizer checks functionalized; plain
+    call when not sanitizing."""
+    if not enabled():
+        return fn(*args, **kwargs)
+    err, out = checkify.checkify(fn, errors=checkify.user_checks)(
+        *args, **kwargs)
+    err.throw()
+    return out
+
+
+def audit_traces(engine) -> Dict[str, int]:
+    """The jit-trace-count audit: returns the engine's `trace_audit()`
+    ledger and raises if any trace happened that the prefill bucket /
+    stage-length cache (or the single decode jit) should have absorbed.
+    The sanitize engine smoke (`python -m repro.analysis
+    --sanitize-smoke`) fails on exactly this."""
+    audit = engine.trace_audit()
+    if audit["unexpected_retraces"]:
+        raise AssertionError(
+            f"unexpected jit retraces under REPRO_SANITIZE=1: {audit} — "
+            f"a shape/dtype/weak-type drifted between calls that should "
+            f"share one trace")
+    return audit

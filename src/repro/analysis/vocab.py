@@ -1,0 +1,186 @@
+"""Vocabulary pass: decline codes and stats keys vs the base.py registry.
+
+Three directions of drift, all fatal:
+
+- **code -> registry**: AST-scan every module under `backends/` and
+  `kernels/` for decline-code string literals — returns inside
+  `*decline*` functions and arguments to `decline(...)` — plus
+  `record_act_scale(...)` keys and `"[...]"` dispatch markers; every one
+  must be registered in `backends/base.py` (VOCAB_UNREGISTERED_CODE,
+  VOCAB_BAD_STATS_KEY).
+- **registry -> code**: every registered decline code must be produced
+  somewhere in the scanned source — a code nothing can return is dead
+  vocabulary (VOCAB_UNUSED_CODE).
+- **registry <-> docs**: the quoted tables in docs/backends.md and
+  docs/sharding.md must list exactly the registered codes — nothing
+  missing (VOCAB_UNDOCUMENTED_CODE), nothing stale
+  (VOCAB_DOC_DRIFT).
+
+Fixture files (seeded violations) are scanned with the same AST walk but
+are exempt from the registry->code and doc directions (a fixture only
+*adds* literals, it cannot un-document a code).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, List, Sequence, Set, Tuple
+
+from . import Finding
+
+REPO = Path(__file__).resolve().parents[3]
+SRC = REPO / "src" / "repro"
+SCAN_DIRS = (SRC / "backends", SRC / "kernels")
+DOC_VOCAB = (
+    # (path, heading of the section holding the quoted tables)
+    (REPO / "docs" / "backends.md", "Decline and dispatch vocabulary"),
+    (REPO / "docs" / "sharding.md", "Sharded decline vocabulary"),
+)
+
+# decline codes are lower_snake identifiers from these families; the
+# filter keeps ordinary string literals ("int8", "model", error text)
+# and the `*_decline_reason` accessor names out of the scan
+_CODE_RE = re.compile(
+    r"^(?:shard|decode|paged|prefill|grouped|stacked|lhs|pair)_[a-z0-9_]+$")
+
+
+def looks_like_code(s: str) -> bool:
+    return bool(_CODE_RE.match(s)) and not s.endswith("_reason")
+
+
+def _const_strings(node: ast.AST) -> Iterable[str]:
+    """String constants reachable from an expression node (covers plain
+    constants, `a if c else b`, boolean ops)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            yield sub.value
+
+
+def scan_file(path: Path) -> Tuple[List[Tuple[str, str]],
+                                   List[Tuple[str, str]],
+                                   List[Tuple[str, str]]]:
+    """Returns (decline_literals, act_scale_keys, markers) as
+    (literal, where) pairs for one python file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    declines: List[Tuple[str, str]] = []
+    act_keys: List[Tuple[str, str]] = []
+    markers: List[Tuple[str, str]] = []
+    rel = path.name
+
+    class V(ast.NodeVisitor):
+        def __init__(self):
+            self.fn_stack: List[str] = []
+
+        def visit_FunctionDef(self, node):
+            self.fn_stack.append(node.name)
+            self.generic_visit(node)
+            self.fn_stack.pop()
+
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_Return(self, node):
+            fn = self.fn_stack[-1] if self.fn_stack else ""
+            if node.value is not None and "decline" in fn:
+                for s in _const_strings(node.value):
+                    if looks_like_code(s):
+                        declines.append((s, f"{rel}::{fn}:{node.lineno}"))
+            self.generic_visit(node)
+
+        def visit_Call(self, node):
+            name = ""
+            if isinstance(node.func, ast.Name):
+                name = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                name = node.func.attr
+            where = f"{rel}:{node.lineno}"
+            if name in ("decline", "_registered"):
+                for arg in node.args:
+                    for s in _const_strings(arg):
+                        declines.append((s, where))
+            if name == "record_act_scale":
+                for arg in node.args:
+                    for s in _const_strings(arg):
+                        act_keys.append((s, where))
+            self.generic_visit(node)
+
+        def visit_Constant(self, node):
+            if isinstance(node.value, str) and node.value.startswith("[") \
+                    and node.value.endswith("]") and len(node.value) > 2 \
+                    and node.value[1:-1].isidentifier():
+                markers.append((node.value, f"{rel}:{node.lineno}"))
+
+    V().visit(tree)
+    return declines, act_keys, markers
+
+
+def _doc_codes(path: Path, heading: str) -> Set[str]:
+    """Backtick tokens that look like decline codes, taken from one
+    heading's section only (up to the next `## `)."""
+    text = path.read_text()
+    m = re.search(rf"^##+\s+{re.escape(heading)}\s*$", text, re.MULTILINE)
+    if m is None:
+        return set()
+    section = text[m.end():]
+    nxt = re.search(r"^## ", section, re.MULTILINE)
+    if nxt:
+        section = section[:nxt.start()]
+    return {tok for tok in re.findall(r"`([a-z0-9_]+)`", section)
+            if looks_like_code(tok)}
+
+
+def check(fixtures: Sequence[str] = ()) -> List[Finding]:
+    from repro.backends.base import (ACT_SCALE_KEYS, ALL_DECLINE_CODES,
+                                     DISPATCH_MARKERS)
+    findings: List[Finding] = []
+
+    repo_files = sorted(p for d in SCAN_DIRS for p in d.glob("*.py"))
+    fixture_files = [Path(f) for f in fixtures if str(f).endswith(".py")]
+
+    produced: Set[str] = set()
+    for path, is_fixture in [(p, False) for p in repo_files] \
+            + [(p, True) for p in fixture_files]:
+        declines, act_keys, markers = scan_file(path)
+        for code, where in declines:
+            if code in ALL_DECLINE_CODES:
+                if not is_fixture:
+                    produced.add(code)
+            else:
+                findings.append(Finding(
+                    "VOCAB_UNREGISTERED_CODE", where,
+                    f"decline literal {code!r} is not registered in "
+                    f"backends.base.DECLINE_CODES"))
+        for key, where in act_keys:
+            if key not in ACT_SCALE_KEYS:
+                findings.append(Finding(
+                    "VOCAB_BAD_STATS_KEY", where,
+                    f"act-scale stats key {key!r} not in ACT_SCALE_KEYS "
+                    f"{ACT_SCALE_KEYS}"))
+        for marker, where in markers:
+            if marker not in DISPATCH_MARKERS:
+                findings.append(Finding(
+                    "VOCAB_BAD_STATS_KEY", where,
+                    f"dispatch marker {marker!r} not in DISPATCH_MARKERS "
+                    f"{DISPATCH_MARKERS}"))
+
+    for code in sorted(ALL_DECLINE_CODES - produced):
+        findings.append(Finding(
+            "VOCAB_UNUSED_CODE", "backends/base.py::DECLINE_CODES",
+            f"registered decline code {code!r} is produced nowhere in "
+            f"backends/ or kernels/"))
+
+    documented: Set[str] = set()
+    for path, heading in DOC_VOCAB:
+        codes = _doc_codes(path, heading)
+        documented |= codes
+        for code in sorted(codes - ALL_DECLINE_CODES):
+            findings.append(Finding(
+                "VOCAB_DOC_DRIFT", f"{path.name}#{heading}",
+                f"doc table lists {code!r}, which is not a registered "
+                f"decline code"))
+    for code in sorted(ALL_DECLINE_CODES - documented):
+        findings.append(Finding(
+            "VOCAB_UNDOCUMENTED_CODE", "docs/backends.md+docs/sharding.md",
+            f"registered decline code {code!r} appears in neither quoted "
+            f"doc table"))
+    return findings

@@ -30,8 +30,9 @@ docs/backends.md.
 Observability: `dispatch_stats()` (served / declined-with-reason counts
 per backend) and `act_scale_stats()` (static vs dynamic A-side scale
 resolutions). The key vocabulary for both — and the full
-`decline_reason` code table — lives in `backends/base.py`'s module
-docstring.
+`decline_reason` code registry — is machine-readable in
+`backends/base.py` (`DECLINE_CODES` / `DISPATCH_KEYS` /
+`DISPATCH_MARKERS` / `ACT_SCALE_KEYS`), re-exported here.
 """
 from __future__ import annotations
 
@@ -46,9 +47,12 @@ import numpy as np
 from repro.core.ovp import MixedExpertQuant, QuantizedTensor
 from repro.core.policy import QuantPolicy
 
-from .base import (QuantizedMatmulBackend, act_normal_dtype,
-                   act_scale_stats, quantize_activation,
-                   reset_act_scale_stats, resolve_act_scale)
+from .base import (ACT_SCALE_KEYS, ALL_DECLINE_CODES, DECLINE_CODES,
+                   DISPATCH_KEYS, DISPATCH_MARKERS,
+                   QuantizedMatmulBackend, act_normal_dtype,
+                   act_scale_stats, decline, dispatch_key,
+                   quantize_activation, reset_act_scale_stats,
+                   resolve_act_scale)
 from .pallas import PallasBackend, PallasInterpretBackend
 from .reference import ReferenceBackend
 from .sharded import (ShardedPallasBackend, ShardedPallasInterpretBackend,
@@ -116,9 +120,10 @@ def dispatch_stats() -> Dict[str, int]:
 
 def _record(backend_name: str, reason: Optional[str],
             marker: str = "") -> None:
-    tag = backend_name if reason is None \
-        else f"{backend_name}->fallback:{reason}"
-    _DISPATCH_STATS[tag + marker] += 1
+    # dispatch_key validates both the reason code and the marker against
+    # the base.py registry, so a typo'd decline string fails at the
+    # dispatch site instead of surfacing as a mystery stats key
+    _DISPATCH_STATS[dispatch_key(backend_name, reason, marker)] += 1
 
 
 def count_pallas_calls(fn, *args) -> int:
@@ -284,6 +289,8 @@ def _dispatch_mixed_experts(x: jax.Array, w: MixedExpertQuant,
 
 
 __all__ = ["QuantizedMatmulBackend", "register", "get_backend", "available",
+           "DECLINE_CODES", "ALL_DECLINE_CODES", "DISPATCH_KEYS",
+           "DISPATCH_MARKERS", "ACT_SCALE_KEYS", "decline", "dispatch_key",
            "dispatch", "decode_attention", "prefill_attention",
            "dispatch_stats",
            "reset_dispatch_stats",

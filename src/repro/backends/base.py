@@ -14,75 +14,20 @@ delegates to `quantize_activation` below. Under
 explicitly) replaces the dynamic 3σ computation; a static-mode call with
 no scale raises `MissingStaticScaleError` instead of silently recomputing.
 
-Machine-readable dispatch vocabulary (shared by every backend; this table
-is the single source of truth — `pallas.py`/`xla.py`/`reference.py` and
-docs/backends.md point here):
+Machine-readable dispatch vocabulary: the `DECLINE_CODES` registry below
+is the single source of truth for every `decline_reason` code, grouped by
+the dispatch family that produces it (matmul / sharded / decode_attn /
+prefill_attn). Backends return codes through `decline()` — which rejects
+anything unregistered at the return site — and the quoted copy in
+docs/backends.md (sharded table: docs/sharding.md) is cross-checked
+against this registry by the vocabulary pass of `repro.analysis`.
 
-| `decline_reason` code           | meaning                                 |
-|---------------------------------|-----------------------------------------|
-| `None`                          | backend serves this operand layout      |
-| `pair_axis_not_reduction`       | weight pairs not packed along K         |
-| `lhs_rank_lt_2`                 | 2-D weight needs an (…, M, K) lhs       |
-| `grouped_lhs_rank_lt_3`         | stacked weight needs an (…, E, C, K) lhs|
-| `grouped_lhs_expert_mismatch`   | lhs expert dim != weight stack dim      |
-| `stacked_rank_gt_3`             | >3-D weight stacks are not kernelized   |
-
-Sharded decline codes (`pallas_sharded`, `backends/sharded.py` — the
-fused kernels under `shard_map` on the configured mesh; declines fall
-back one hop to the dense gather path like any other decline):
-
-| code                        | meaning                                    |
-|-----------------------------|--------------------------------------------|
-| `shard_no_mesh`             | no mesh configured (`configure_mesh`)      |
-| `shard_n_indivisible`       | column-parallel N not divisible by the     |
-|                             | "model" axis                               |
-| `shard_k_indivisible`       | row-parallel K does not split into whole   |
-|                             | outlier-victim pairs per shard             |
-| `shard_expert_indivisible`  | grouped stack's E not divisible by "model" |
-| `shard_mixed_expert_group`  | ragged `MixedExpertQuant` groups cannot    |
-|                             | split E evenly (`mixed_expert_decline_reason`) |
-| `shard_hkv_lt_axis`         | fewer KV heads than "model" shards         |
-| `shard_hkv_indivisible`     | Hkv not divisible by the "model" axis      |
-
-Decode-attention decline codes (`decode_attn_decline_reason`, the fused
-KV-cache kernel — see docs/kv_cache.md):
-
-| code                      | meaning                                     |
-|---------------------------|---------------------------------------------|
-| `decode_q_tokens_gt_1`    | decode kernel serves one query token only   |
-| `decode_no_kv_cache`      | cache dict carries no k / k_data leaf       |
-| `decode_empty_cache`      | zero-length cache (nothing to attend)       |
-| `decode_head_dim_odd`     | even/odd plane split needs an even head dim |
-| `paged_no_pool`           | block_table present but no pool k/k_data    |
-| `paged_table_rank`        | block table is not a 2-D integer array      |
-| `paged_page_misaligned`   | page size not an even int >= 2              |
-
-Prefill-attention decline codes (`prefill_attn_decline_reason`, the fused
-cache-write prefill kernel over PAGED caches — `kernels/prefill_attn.py`;
-the slab engine keeps the blockwise-attention + splice pipeline and never
-reaches this dispatch):
-
-| code                       | meaning                                    |
-|----------------------------|--------------------------------------------|
-| `prefill_not_paged`        | cache carries no block_table (slab layout) |
-| `prefill_no_stage`         | no stage_k/stage_v raw-K/V staging leaves  |
-| `prefill_batch_gt_1`       | kernel serves one request row at a time    |
-| `prefill_stage_misaligned` | stage length not a whole number of pages,  |
-|                            | or the table backs fewer pages than tiles  |
-
-`dispatch_stats()` counter keys (trace-time, one per traced matmul site):
-
-| key shape                           | meaning                             |
-|-------------------------------------|-------------------------------------|
-| `"<backend>"`                       | served on the requested backend     |
-| `"<backend>->fallback:<reason>"`    | declined; ran on `backend.fallback` |
-| `"...[stacked]"` suffix             | the weight was a 3-D expert stack   |
-| `"...[decode_attn]"` suffix         | a decode-attention site (not matmul)|
-| `"...[prefill_attn]"` suffix        | a paged prefill site (not matmul)   |
-
-`act_scale_stats()` counter keys (this module): `"static"` /
+`DISPATCH_KEYS` documents the `dispatch_stats()` counter-key shapes
+(`"<backend>"`, `"<backend>->fallback:<reason>"`), `DISPATCH_MARKERS`
+the site-kind suffixes (`[stacked]`, `[decode_attn]`, `[prefill_attn]`),
+and `ACT_SCALE_KEYS` the `act_scale_stats()` keys (`"static"` /
 `"dynamic"` — how each traced quantized-activation matmul resolved its
-A-side scale. A static-serving engine must show `dynamic == 0`.
+A-side scale; a static-serving engine must show `dynamic == 0`).
 
 This module must not import `repro.core.qlinear` (qlinear routes through
 the registry; importing it back would be a cycle).
@@ -98,6 +43,98 @@ import jax.numpy as jnp
 from repro.core.ovp import QuantizedTensor, ovp_quantize
 from repro.core.policy import QuantPolicy
 from repro.core.quantizer import sigma_init_scale
+
+# ==========================================================================
+# The canonical decline / dispatch vocabulary (machine-readable registry)
+# ==========================================================================
+# family -> {code: meaning}. `None` always means "backend serves this
+# operand layout" and is never registered. Removing or renaming a code
+# here is an API change: docs/backends.md + docs/sharding.md quote these
+# tables and `repro.analysis` fails on any drift between the three.
+DECLINE_CODES: Dict[str, Dict[str, str]] = {
+    # decline_reason(x, w, policy) — the quantized-matmul dispatch
+    "matmul": {
+        "pair_axis_not_reduction": "weight pairs not packed along K",
+        "lhs_rank_lt_2": "2-D weight needs an (…, M, K) lhs",
+        "grouped_lhs_rank_lt_3": "stacked weight needs an (…, E, C, K) lhs",
+        "grouped_lhs_expert_mismatch": "lhs expert dim != weight stack dim",
+        "stacked_rank_gt_3": ">3-D weight stacks are not kernelized",
+    },
+    # pallas_sharded (backends/sharded.py): the fused kernels under
+    # shard_map; declines fall back one hop like any other decline
+    "sharded": {
+        "shard_no_mesh": "no mesh configured (configure_mesh)",
+        "shard_n_indivisible":
+            'column-parallel N not divisible by the "model" axis',
+        "shard_k_indivisible":
+            "row-parallel K does not split into whole outlier-victim "
+            "pairs per shard",
+        "shard_expert_indivisible":
+            'grouped stack\'s E not divisible by the "model" axis',
+        "shard_mixed_expert_group":
+            "ragged MixedExpertQuant groups cannot split E evenly",
+        "shard_hkv_lt_axis": 'fewer KV heads than "model" shards',
+        "shard_hkv_indivisible": 'Hkv not divisible by the "model" axis',
+    },
+    # decode_attn_decline_reason — the fused KV-cache decode kernel
+    "decode_attn": {
+        "decode_q_tokens_gt_1": "decode kernel serves one query token only",
+        "decode_no_kv_cache": "cache dict carries no k / k_data leaf",
+        "decode_empty_cache": "zero-length cache (nothing to attend)",
+        "decode_head_dim_odd":
+            "even/odd plane split needs an even head dim",
+        "paged_no_pool": "block_table present but no pool k/k_data",
+        "paged_table_rank": "block table is not a 2-D integer array",
+        "paged_page_misaligned": "page size not an even int >= 2",
+    },
+    # prefill_attn_decline_reason — the fused cache-write prefill kernel
+    # over PAGED caches (the slab engine keeps prefill-then-splice and
+    # never reaches this dispatch). Paged-layout defects reuse the
+    # paged_*/decode_* codes above.
+    "prefill_attn": {
+        "prefill_not_paged": "cache carries no block_table (slab layout)",
+        "prefill_no_stage": "no stage_k/stage_v raw-K/V staging leaves",
+        "prefill_batch_gt_1": "kernel serves one request row at a time",
+        "prefill_stage_misaligned":
+            "stage length not a whole number of pages, or the table "
+            "backs fewer pages than tiles",
+    },
+}
+
+ALL_DECLINE_CODES = frozenset(
+    code for family in DECLINE_CODES.values() for code in family)
+
+# dispatch_stats() key shapes (trace-time, one count per traced site)
+DISPATCH_KEYS: Dict[str, str] = {
+    "<backend>": "served on the requested backend",
+    "<backend>->fallback:<reason>": "declined; ran on backend.fallback",
+}
+# site-kind suffixes appended to either key shape
+DISPATCH_MARKERS: Tuple[str, ...] = ("[stacked]", "[decode_attn]",
+                                     "[prefill_attn]")
+# act_scale_stats() keys — A-side scale resolution per traced matmul
+ACT_SCALE_KEYS: Tuple[str, ...] = ("static", "dynamic")
+
+
+def decline(code: Optional[str]) -> Optional[str]:
+    """Validate-and-return for decline codes: `None` (served) passes
+    through; a registered code returns itself; anything else is a bug at
+    the return site, not a mystery key in dispatch stats downstream."""
+    if code is not None and code not in ALL_DECLINE_CODES:
+        raise KeyError(f"unregistered decline code {code!r}; add it to "
+                       f"backends.base.DECLINE_CODES")
+    return code
+
+
+def dispatch_key(backend_name: str, reason: Optional[str] = None,
+                 marker: str = "") -> str:
+    """Build one `dispatch_stats()` counter key from the registered
+    vocabulary (the only writer; see DISPATCH_KEYS / DISPATCH_MARKERS)."""
+    if marker and marker not in DISPATCH_MARKERS:
+        raise KeyError(f"unregistered dispatch marker {marker!r}")
+    key = backend_name if reason is None \
+        else f"{backend_name}->fallback:{decline(reason)}"
+    return key + marker
 
 
 def act_normal_dtype(policy: QuantPolicy) -> str:
@@ -122,6 +159,9 @@ def act_scale_stats() -> Dict[str, int]:
 
 
 def record_act_scale(kind: str) -> None:
+    if kind not in ACT_SCALE_KEYS:
+        raise KeyError(f"unregistered act-scale key {kind!r}; "
+                       f"options: {ACT_SCALE_KEYS}")
     _ACT_SCALE_STATS[kind] += 1
 
 
@@ -240,9 +280,9 @@ class QuantizedMatmulBackend:
         over this (q, cache) layout; the dense base path needs only the
         paged layout itself (block_table + stage leaves)."""
         if cache is None or "block_table" not in cache:
-            return "prefill_not_paged"
+            return decline("prefill_not_paged")
         if "stage_k" not in cache or "stage_v" not in cache:
-            return "prefill_no_stage"
+            return decline("prefill_no_stage")
         return None
 
     def prefill_attention(self, q: jax.Array, cache, positions: jax.Array):

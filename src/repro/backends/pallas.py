@@ -31,7 +31,9 @@ with length/ring/window masking in-kernel from the traced position
 to the dense XLA path (see docs/kv_cache.md).
 
 Decline-reason codes and the `dispatch_stats()` / `act_scale_stats()` key
-vocabulary are documented once, in `backends/base.py`'s module docstring.
+vocabulary are registered once, in `backends/base.py::DECLINE_CODES` (and
+`DISPATCH_KEYS` / `ACT_SCALE_KEYS`); every reason this backend returns
+goes through `decline()` so unregistered codes fail at the return site.
 
 `pallas_interpret` is the same backend with `interpret=True` — the CPU
 emulation used by tests and this container; numerics are identical.
@@ -47,7 +49,7 @@ from repro.core.ovp import QuantizedTensor
 from repro.core.policy import QuantPolicy
 from repro.kernels import decode_attn, ops, prefill_attn
 
-from .base import (QuantizedMatmulBackend, act_normal_dtype,
+from .base import (QuantizedMatmulBackend, act_normal_dtype, decline,
                    record_act_scale, resolve_act_scale)
 
 
@@ -74,17 +76,17 @@ class PallasBackend(QuantizedMatmulBackend):
                        site: str = "") -> Optional[str]:
         if w.pair_axis % 2 != 0:
             # pairing must run along K (quantize_weight guarantees -2)
-            return "pair_axis_not_reduction"
+            return decline("pair_axis_not_reduction")
         if w.data.ndim == 2:
-            return None if x.ndim >= 2 else "lhs_rank_lt_2"
+            return None if x.ndim >= 2 else decline("lhs_rank_lt_2")
         if w.data.ndim == 3:
             # grouped path: lhs must carry the matching expert dim at -3
             if x.ndim < 3:
-                return "grouped_lhs_rank_lt_3"
+                return decline("grouped_lhs_rank_lt_3")
             if x.shape[-3] != w.data.shape[0]:
-                return "grouped_lhs_expert_mismatch"
+                return decline("grouped_lhs_expert_mismatch")
             return None
-        return "stacked_rank_gt_3"
+        return decline("stacked_rank_gt_3")
 
     def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
                act_scale: Optional[jax.Array] = None,
@@ -116,7 +118,9 @@ class PallasBackend(QuantizedMatmulBackend):
     fuses_decode_attention = True
 
     def decode_attn_decline_reason(self, q, cache) -> Optional[str]:
-        return decode_attn.decline_reason(q, cache)
+        # the kernel module names the reason; decline() re-validates it
+        # against the base.py registry at the backend boundary
+        return decline(decode_attn.decline_reason(q, cache))
 
     def decode_attention(self, q: jax.Array, cache, pos: jax.Array, *,
                          window: int = 0, ring: int = 0) -> jax.Array:
@@ -128,7 +132,7 @@ class PallasBackend(QuantizedMatmulBackend):
     fuses_prefill_attention = True
 
     def prefill_attn_decline_reason(self, q, cache) -> Optional[str]:
-        return prefill_attn.prefill_decline_reason(q, cache)
+        return decline(prefill_attn.prefill_decline_reason(q, cache))
 
     def prefill_attention(self, q: jax.Array, cache, positions: jax.Array):
         return prefill_attn.fused_prefill_attention(

@@ -36,8 +36,9 @@ even split of K — and any split of N / E / Hkv — is re-encoding-free and
 needs no replicated coordination list.
 
 Layouts (or meshes) the backend cannot shard decline with the
-machine-readable `shard_*` codes tabled in `backends/base.py` and fall
-back one hop to the dense gather path, exactly like every other decline.
+machine-readable `shard_*` codes registered in
+`backends/base.py::DECLINE_CODES` and fall back one hop to the dense
+gather path, exactly like every other decline.
 Per-expert `MixedExpertQuant` stacks decline whole
 (`shard_mixed_expert_group`): their group membership is static but the
 groups are ragged, so splitting E across the mesh would leave shards
@@ -69,7 +70,8 @@ from repro.core.policy import QuantPolicy
 from repro.kernels import decode_attn, ops, prefill_attn
 from repro.sharding.rules import ROW_PARALLEL, mesh_axis_sizes
 
-from .base import act_normal_dtype, record_act_scale, resolve_act_scale
+from .base import (act_normal_dtype, decline, record_act_scale,
+                   resolve_act_scale)
 from .pallas import PallasBackend, _static_const_scale
 
 # ---------------------------------------------------------------- mesh state
@@ -113,6 +115,24 @@ def _site_leaf(site: str) -> str:
     return site.rsplit("/", 1)[-1]
 
 
+def row_shard_pair_aligned(k_rows: int, tp: int, packed: bool) -> bool:
+    """Does a row-parallel K split over `tp` shards land every shard on
+    whole outlier-victim pairs?
+
+    `k_rows` is the K extent of the STORED code array (`w.data.shape[0]`):
+    packed nibbles carry two 4-bit codes — one whole pair — per row, so
+    any even split of rows preserves pairs; int8 codes are one value per
+    row, so each shard additionally needs an even row count. This is the
+    pure predicate behind `shard_k_indivisible`; `repro.analysis` sweeps
+    it against the OVP pairing ground truth (pair = 2 adjacent K values)
+    so the guard and the encoding can never drift apart silently.
+    """
+    if k_rows % tp != 0:
+        return False                     # ragged shards: K must divide
+    values_per_row = 2 if packed else 1
+    return (k_rows // tp) * values_per_row % 2 == 0
+
+
 class ShardedPallasBackend(PallasBackend):
     name = "pallas_sharded"
     interpret = False
@@ -126,27 +146,26 @@ class ShardedPallasBackend(PallasBackend):
             return reason
         tp = _model_axis()
         if tp == 0:
-            return "shard_no_mesh"
+            return decline("shard_no_mesh")
         if tp == 1:
             return None              # degenerate mesh: single-device path
         if w.data.ndim == 3:
             if w.data.shape[0] % tp != 0:
-                return "shard_expert_indivisible"
+                return decline("shard_expert_indivisible")
             return None
         if _site_leaf(site) in ROW_PARALLEL:
             # K splits in whole outlier-victim pairs: one packed row IS a
             # pair; int8 codes are one row per value, so two rows per pair
-            rows_per_pair = 1 if w.is_packed else 2
-            if w.data.shape[0] % (tp * rows_per_pair) != 0:
-                return "shard_k_indivisible"
+            if not row_shard_pair_aligned(w.data.shape[0], tp, w.is_packed):
+                return decline("shard_k_indivisible")
             return None
         if w.data.shape[-1] % tp != 0:
-            return "shard_n_indivisible"
+            return decline("shard_n_indivisible")
         return None
 
     def mixed_expert_decline_reason(self, x, w, policy) -> Optional[str]:
         # ragged static expert groups: splitting E would unbalance shards
-        return "shard_mixed_expert_group"
+        return decline("shard_mixed_expert_group")
 
     def matmul(self, x: jax.Array, w: QuantizedTensor, policy: QuantPolicy,
                act_scale: Optional[jax.Array] = None,
@@ -264,16 +283,16 @@ class ShardedPallasBackend(PallasBackend):
     def _hkv_decline(self, cache) -> Optional[str]:
         tp = _model_axis()
         if tp == 0:
-            return "shard_no_mesh"
+            return decline("shard_no_mesh")
         if tp == 1:
             return None
         hkv = self._cache_hkv(cache)
         if hkv is None:
             return None              # parent decline codes already cover it
         if hkv < tp:
-            return "shard_hkv_lt_axis"
+            return decline("shard_hkv_lt_axis")
         if hkv % tp != 0:
-            return "shard_hkv_indivisible"
+            return decline("shard_hkv_indivisible")
         return None
 
     @staticmethod

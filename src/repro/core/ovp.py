@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize
+
 from .datatypes import (ABFLOAT_FOR_NORMAL, ID4, ID8, NORMAL_MAX, AbfloatSpec,
                         abfloat_decode, abfloat_encode, normal_decode,
                         normal_encode)
@@ -54,6 +56,9 @@ def ovp_encode_codes(u: jax.Array, normal_dtype: str = "int4",
     v = _move_pair_axis(u, pair_axis)
     if v.shape[-1] % 2 != 0:
         raise ValueError(f"pair axis length {v.shape[-1]} must be even")
+    sanitize.check(jnp.all(jnp.isfinite(v)),
+                   "ovp_encode_codes: non-finite scaled input (NaN/Inf "
+                   "upstream of the encoder, or a zero/garbage scale)")
     x0, x1 = v[..., 0::2], v[..., 1::2]
     a0, a1 = jnp.abs(x0), jnp.abs(x1)
 
@@ -83,6 +88,10 @@ def ovp_decode_codes(codes: jax.Array, normal_dtype: str = "int4",
 
     c = _move_pair_axis(codes, pair_axis)
     n0, n1 = c[..., 0::2], c[..., 1::2]
+    sanitize.check(~jnp.any((n0 == ident) & (n1 == ident)),
+                   "ovp_decode_codes: both codes of a pair hold the "
+                   "identifier — not a valid OVP encoding (corrupt or "
+                   "misaligned code stream)")
 
     # if my neighbour holds the identifier, I am the outlier (abfloat);
     # if I hold it, I am the victim (0); otherwise I am a normal value.
@@ -205,6 +214,8 @@ def ovp_quantize(x: jax.Array, scale: jax.Array, normal_dtype: str = "int4",
                  pair_axis: int = -1) -> QuantizedTensor:
     """Quantize a real tensor with OVP at a given scale."""
     scale = jnp.asarray(scale, dtype=jnp.float32)
+    sanitize.check(jnp.all((scale > 0) & jnp.isfinite(scale)),
+                   "ovp_quantize: scale must be positive and finite")
     u = x.astype(jnp.float32) / scale
     codes = ovp_encode_codes(u, normal_dtype, spec, pair_axis)
     # store pair_axis negative: stays correct if leading batch/stack dims

@@ -110,9 +110,17 @@ class QuantPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class Rule:
-    """One pattern -> policy entry of a PolicyProgram."""
+    """One pattern -> policy entry of a PolicyProgram.
+
+    `origin` tags where the rule came from: "" for authored rules
+    (presets, `with_rules`, CLI), "compat" for the legacy-flag synonym
+    fan compiled by `from_policy` (those patterns deliberately cover
+    naming conventions — `*ffn*`, `*attention*` — that no current model
+    uses, so `repro.analysis`'s dead-rule check exempts them).
+    """
     pattern: str
     policy: QuantPolicy
+    origin: str = ""
 
     def matches(self, site: str) -> bool:
         return fnmatch.fnmatchcase(site.lower(), self.pattern.lower())
@@ -189,7 +197,8 @@ class PolicyProgram:
     def replace_all(self, **kw) -> "PolicyProgram":
         """`dataclasses.replace` applied to every rule policy + default."""
         return PolicyProgram(
-            rules=tuple(Rule(r.pattern, dataclasses.replace(r.policy, **kw))
+            rules=tuple(Rule(r.pattern, dataclasses.replace(r.policy, **kw),
+                             origin=r.origin)
                         for r in self.rules),
             default=dataclasses.replace(self.default, **kw),
             name=self.name)
@@ -242,16 +251,17 @@ class PolicyProgram:
         f = on if policy.quantize_ffn else off
         e = on if policy.quantize_embed else off
         r = on if policy.quantize_router else off
-        rules = (
-            Rule("*embed*", e), Rule("*lm_head*", e),
-            Rule("*router*", r),
-            Rule("*attn*", a), Rule("*attention*", a),
-            Rule("*wq*", a), Rule("*wk*", a), Rule("*wv*", a),
-            Rule("*wo*", a),
-            Rule("*mlp*", f), Rule("*ffn*", f), Rule("*expert*", f),
-            Rule("*wi*", f), Rule("*wu*", f), Rule("*wg*", f),
-            Rule("*wd*", f),
-        )
+        rules = tuple(
+            Rule(p, pol, origin="compat") for p, pol in (
+                ("*embed*", e), ("*lm_head*", e),
+                ("*router*", r),
+                ("*attn*", a), ("*attention*", a),
+                ("*wq*", a), ("*wk*", a), ("*wv*", a),
+                ("*wo*", a),
+                ("*mlp*", f), ("*ffn*", f), ("*expert*", f),
+                ("*wi*", f), ("*wu*", f), ("*wg*", f),
+                ("*wd*", f),
+            ))
         return cls(rules=rules, default=f, name=name or "compat")
 
 

@@ -27,6 +27,7 @@ from . import baselines
 from . import calibration as _calibration
 from .ovp import MixedExpertQuant, QuantizedTensor
 from .policy import PolicyLike, QuantPolicy, resolve
+from repro.analysis import sanitize
 from .quantizer import (QuantSpec, fake_quant_ste, quantize,
                         sigma_init_scale)
 
@@ -231,7 +232,15 @@ def quantize_params(params, policy: PolicyLike, min_size: int = 4096):
     """
     if not policy.enabled:
         return params
+    if sanitize.enabled():
+        # PTQ stages the OVP scale search under lax.map, so the sanitizer
+        # checks inside must be functionalized here at the entry point.
+        return sanitize.run_checked(_quantize_params, params, policy,
+                                    min_size)
+    return _quantize_params(params, policy, min_size)
 
+
+def _quantize_params(params, policy: PolicyLike, min_size: int):
     treedef = jax.tree_util.tree_structure(params, is_leaf=_qt_leaf)
     out = []
     for path, w in tree_paths(params):

@@ -188,7 +188,22 @@ def xla_decode_attention(q: jax.Array, cache, pos: jax.Array, *,
 # Decline vocabulary (machine-readable; recorded in dispatch_stats())
 # --------------------------------------------------------------------------
 def decline_reason(q: jax.Array, cache) -> Optional[str]:
-    """None when the fused kernel can serve this (q, cache) layout."""
+    """None when the fused kernel can serve this (q, cache) layout; codes
+    are registered in `backends/base.py::DECLINE_CODES["decode_attn"]`
+    (validated by `_registered` below and re-checked at the backend
+    boundary by `decline()`)."""
+    return _registered(_decline_reason(q, cache))
+
+
+def _registered(code: Optional[str]) -> Optional[str]:
+    # lazy import: backends imports this module at registry construction,
+    # so a module-level `from repro.backends.base import decline` would
+    # cycle; by the first dispatch the registry is fully imported
+    from repro.backends.base import decline
+    return decline(code)
+
+
+def _decline_reason(q: jax.Array, cache) -> Optional[str]:
     if q.shape[1] != 1:
         return "decode_q_tokens_gt_1"
     paged = "block_table" in cache

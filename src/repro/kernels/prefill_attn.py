@@ -62,8 +62,13 @@ def prefill_decline_reason(q: jax.Array, cache) -> Optional[str]:
     """None when the fused prefill kernel serves this (q, cache) layout.
 
     The fused path exists for PAGED caches (slab prefill keeps the
-    blockwise-attention + splice pipeline); see backends/base.py for the
-    code table."""
+    blockwise-attention + splice pipeline); codes are registered in
+    `backends/base.py::DECLINE_CODES` and validated on return."""
+    from repro.kernels.decode_attn import _registered
+    return _registered(_prefill_decline_reason(q, cache))
+
+
+def _prefill_decline_reason(q: jax.Array, cache) -> Optional[str]:
     if cache is None or "block_table" not in cache:
         return "prefill_not_paged"
     if "stage_k" not in cache or "stage_v" not in cache:

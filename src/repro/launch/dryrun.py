@@ -90,7 +90,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, quant: str,
             "collective_ops": colls,
             "roofline": roof.as_dict(),
         }
-    except Exception as e:  # a failing cell is a bug — record it loudly
+    except (ValueError, TypeError, KeyError, AttributeError,
+            AssertionError, NotImplementedError, RuntimeError) as e:
+        # a failing cell is a bug — record it loudly (RuntimeError covers
+        # XlaRuntimeError: lowering/compile failures land here)
         rec = {"cell": tag, "status": "error",
                "error": f"{type(e).__name__}: {e}",
                "trace": traceback.format_exc()[-2000:]}

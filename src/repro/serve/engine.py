@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import backends
+from repro.analysis import sanitize
 from repro.core.calibration import (CalibrationArtifact,
                                     MissingStaticScaleError,
                                     apply_calibration, static_scale_misses,
@@ -174,6 +175,9 @@ class ServingEngine:
     jitted steps over the mesh via pjit; see launch/serve.py)."""
 
     def __init__(self, model: Model, params, cfg: EngineCfg):
+        # REPRO_SANITIZE=1: jax_debug_nans + checkified steps + the
+        # trace audit (no-op otherwise; see repro.analysis.sanitize)
+        sanitize.configure()
         if cfg.backend is not None and \
                 model.policy.backends() != frozenset((cfg.backend,)):
             # shallow-copy so the override never leaks into other users of
@@ -234,6 +238,9 @@ class ServingEngine:
         self._bucket_ok = all(bt in ("attn", "moe")
                               for bt in model.cfg.block_pattern)
         self.prefill_traces = 0  # trace counter (tests assert bucket reuse)
+        self.decode_traces = 0   # the single decode jit should trace once
+        self._prefill_jits = 0   # jit entries built (traces > jits means
+        #                          a jitted entry silently retraced)
         self.prefill_cache_evictions = 0
         self.prefill_chunks_run = 0
         self.steps_run = 0
@@ -284,6 +291,7 @@ class ServingEngine:
             return jnp.take(logits, length - 1, axis=1), new_caches
 
         def decode_step(params, caches, tokens, pos):
+            self.decode_traces += 1
             logits, new_caches, _ = self.model.forward(
                 params, {"tokens": tokens, "pos": pos}, mode="decode",
                 caches=caches)
@@ -303,7 +311,7 @@ class ServingEngine:
                            tokens.shape[1] - 1)
             return jnp.take(logits, idx, axis=1), new_caches
 
-        self._decode = jax.jit(decode_step)
+        self._decode = sanitize.jit_checked(decode_step)
         self._prefill = prefill_one  # jit per prompt-length bucket below
         self._prefill_chunk = prefill_chunk
         # LRU over jitted prefill entries (keyed by bucket / stage length)
@@ -333,12 +341,28 @@ class ServingEngine:
         if key in cache:
             cache.move_to_end(key)
             return cache[key]
-        jitted = jax.jit(fn)
+        jitted = sanitize.jit_checked(fn)
+        self._prefill_jits += 1
         cache[key] = jitted
         while len(cache) > max(1, self.cfg.prefill_cache_cap):
             cache.popitem(last=False)
             self.prefill_cache_evictions += 1
         return jitted
+
+    def trace_audit(self) -> Dict[str, int]:
+        """Jit-trace ledger for the sanitizer's retrace audit: a prefill
+        trace the bucket/stage-length cache should have absorbed, or a
+        decode jit tracing more than once, counts as unexpected (a
+        shape/dtype/weak-type drifted between calls meant to share one
+        trace). `repro.analysis.sanitize.audit_traces` fails on it."""
+        return {
+            "prefill_traces": self.prefill_traces,
+            "prefill_jits": self._prefill_jits,
+            "decode_traces": self.decode_traces,
+            "unexpected_retraces":
+                max(0, self.prefill_traces - self._prefill_jits)
+                + max(0, self.decode_traces - 1),
+        }
 
     # ------------------------------------------------- paged-cache helpers
     @staticmethod

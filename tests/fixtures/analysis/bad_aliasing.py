@@ -1,0 +1,31 @@
+"""Seeded violation: a kernel that rewrites a pool operand without
+declaring input_output_aliases.
+
+Pages no grid step touches would come back uninitialized instead of
+intact — the kernel pass must flag KC_ALIAS_MISSING.
+"""
+
+
+def analysis_cases():
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def build():
+        pool = jnp.zeros((4, 8, 16), jnp.uint8)
+
+        def kernel(p_ref, o_ref):
+            o_ref[...] = p_ref[...] + 1
+
+        def fn(pool):
+            # writes the pool back out, but with no aliasing declared
+            return pl.pallas_call(
+                kernel,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((1, 8, 16), lambda i: (i, 0, 0))],
+                out_specs=pl.BlockSpec((1, 8, 16), lambda i: (i, 0, 0)),
+                out_shape=jax.ShapeDtypeStruct((4, 8, 16), jnp.uint8),
+                interpret=True)(pool)
+        return fn, (pool,)
+
+    return [{"name": "bad_aliasing", "build": build, "min_aliases": 1}]

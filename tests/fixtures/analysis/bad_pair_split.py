@@ -1,0 +1,30 @@
+"""Seeded violation: an int8-codes weight tiled with an odd K block.
+
+Each int8 row is one value, so a 3-row K tile holds one and a half
+outlier-victim pairs — the kernel pass must flag KC_PAIR_SPLIT.
+"""
+
+
+def analysis_cases():
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def build():
+        w = jnp.zeros((96, 64), jnp.uint8)
+
+        def kernel(w_ref, o_ref):
+            o_ref[...] = w_ref[...].astype(jnp.float32)
+
+        def fn(w):
+            return pl.pallas_call(
+                kernel,
+                grid=(96 // 3,),
+                in_specs=[pl.BlockSpec((3, 64), lambda k: (k, 0))],
+                out_specs=pl.BlockSpec((3, 64), lambda k: (k, 0)),
+                out_shape=jax.ShapeDtypeStruct((96, 64), jnp.float32),
+                interpret=True)(w)
+        return fn, (w,)
+
+    return [{"name": "bad_pair_split", "build": build,
+             "pair_blocks": (((96, 64), 0, 1),)}]

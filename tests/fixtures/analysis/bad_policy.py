@@ -1,0 +1,20 @@
+"""Seeded violations for the policy pass: a rule glob no arch's param
+tree can match (POL_DEAD_RULE), a rule an earlier rule always wins over
+(POL_SHADOWED), and a calibration scale key matching no site
+(POL_DEAD_GLOB).
+"""
+
+
+def analysis_programs():
+    from repro.core.policy import (OLIVE_W4A4, OLIVE_W8A8, PolicyProgram,
+                                   Rule)
+    prog = PolicyProgram(
+        rules=(Rule("*conv_stem*", OLIVE_W8A8),        # dead: no such site
+               Rule("*attn*", OLIVE_W8A8),
+               Rule("*attn/wq*", OLIVE_W4A4)),         # shadowed by *attn*
+        default=OLIVE_W4A4, name="bad_policy")
+    return [("bad_policy", prog)]
+
+
+def analysis_artifacts():
+    return [("bad_artifact", {"layers/*/conv_stem/w": 0.5})]

@@ -1,0 +1,11 @@
+"""Seeded violation: a decline function returning an unregistered code.
+
+`repro.analysis`'s vocabulary pass must flag VOCAB_UNREGISTERED_CODE on
+this file; see tests/test_analysis.py.
+"""
+
+
+def decode_attn_decline(q, cache):
+    if q is None:
+        return "decode_q_rank_bad"   # not in backends.base.DECLINE_CODES
+    return None

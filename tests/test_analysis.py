@@ -1,0 +1,139 @@
+"""repro.analysis: the live repo passes every static pass clean, and
+each seeded-violation fixture (tests/fixtures/analysis/) fails exactly
+its pass. Plus the REPRO_SANITIZE=1 runtime hooks."""
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax.numpy as jnp
+import pytest
+
+from repro import analysis
+
+FIX = Path(__file__).parent / "fixtures" / "analysis"
+
+
+def _codes(findings):
+    return {f.code for f in findings}
+
+
+# ---------------------------------------------------------------- clean repo
+def test_vocab_pass_clean():
+    assert analysis.run_pass("vocab") == []
+
+
+def test_hygiene_pass_clean():
+    assert analysis.run_pass("hygiene") == []
+
+
+def test_kernel_pass_clean():
+    assert analysis.run_pass("kernels") == []
+
+
+def test_policy_pass_clean():
+    assert analysis.run_pass("policies") == []
+
+
+def test_unknown_pass_rejected():
+    with pytest.raises(KeyError):
+        analysis.run_pass("nope")
+
+
+# ------------------------------------------------------- seeded violations
+def test_unregistered_decline_code_flagged():
+    found = analysis.run_pass("vocab",
+                              fixtures=(str(FIX / "bad_vocab.py"),))
+    assert "VOCAB_UNREGISTERED_CODE" in _codes(found)
+    assert any("decode_q_rank_bad" in f.message for f in found)
+
+
+def test_pair_misaligned_k_split_flagged():
+    found = analysis.run_pass("kernels",
+                              fixtures=(str(FIX / "bad_pair_split.py"),))
+    assert "KC_PAIR_SPLIT" in _codes(found)
+
+
+def test_undeclared_aliasing_flagged():
+    found = analysis.run_pass("kernels",
+                              fixtures=(str(FIX / "bad_aliasing.py"),))
+    assert "KC_ALIAS_MISSING" in _codes(found)
+
+
+def test_dead_and_shadowed_policy_rules_flagged():
+    found = analysis.run_pass("policies",
+                              fixtures=(str(FIX / "bad_policy.py"),))
+    codes = _codes(found)
+    assert "POL_DEAD_RULE" in codes      # *conv_stem* matches no site
+    assert "POL_SHADOWED" in codes       # *attn/wq* behind *attn*
+    assert "POL_DEAD_GLOB" in codes      # dead calibration scale key
+
+
+def test_broad_except_flagged():
+    found = analysis.run_pass("hygiene",
+                              fixtures=(str(FIX / "bad_hygiene.py"),))
+    assert "HYG_BROAD_EXCEPT" in _codes(found)
+
+
+def test_vmem_budget_enforced():
+    # an absurdly small budget must trip every traced kernel
+    found = analysis.run_pass("kernels", vmem_budget=64)
+    assert "KC_VMEM_BUDGET" in _codes(found)
+
+
+# ------------------------------------------------------------- sanitizer
+def test_sanitize_disabled_is_noop(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    from repro.analysis import sanitize
+    assert not sanitize.enabled()
+    sanitize.check(False, "never raises when disabled")
+
+
+def test_sanitize_eager_check_raises(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    from repro.analysis import sanitize
+    sanitize.check(True, "fine")
+    with pytest.raises(AssertionError, match="boom"):
+        sanitize.check(False, "boom")
+
+
+def test_sanitize_jit_checked_throws_on_failed_check(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    from repro.analysis import sanitize
+
+    def f(x):
+        sanitize.check(jnp.all(x > 0), "non-positive input")
+        return x * 2
+
+    g = sanitize.jit_checked(f)
+    assert (g(jnp.ones(3)) == 2).all()
+    with pytest.raises(Exception, match="non-positive input"):
+        g(-jnp.ones(3))
+
+
+def test_sanitize_ovp_encode_rejects_nonfinite(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    from repro.core import ovp
+    ovp.ovp_encode_codes(jnp.zeros((2, 4)))      # clean input passes
+    with pytest.raises(AssertionError, match="non-finite"):
+        ovp.ovp_encode_codes(jnp.full((2, 4), jnp.nan))
+
+
+def test_sanitize_ovp_decode_rejects_double_identifier(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    from repro.core import ovp
+    from repro.core.datatypes import ID4
+    bad = jnp.full((2, 4), ID4, jnp.uint8)       # every pair double-ident
+    with pytest.raises(AssertionError, match="identifier"):
+        ovp.ovp_decode_codes(bad)
+
+
+def test_trace_audit_flags_unexpected_retrace():
+    from repro.analysis import sanitize
+
+    class FakeEngine:
+        def trace_audit(self):
+            return {"prefill_traces": 3, "prefill_jits": 1,
+                    "decode_traces": 1, "unexpected_retraces": 2}
+
+    with pytest.raises(AssertionError, match="retraces"):
+        sanitize.audit_traces(FakeEngine())

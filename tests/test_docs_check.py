@@ -10,8 +10,9 @@ in-tree `README.md`s under `src/` — and fails on:
 - backtick code spans that look like repo file paths (optionally with a
   `::symbol` suffix) but point at nothing — paths resolve against the
   doc's own directory, the repo root, `src/`, and `src/repro/`;
-- `--flag` tokens that no argparse definition in `src/repro/launch/` or
-  `benchmarks/` declares (docs describing nonexistent CLI flags).
+- `--flag` tokens that no argparse definition in `src/repro/launch/`,
+  `src/repro/analysis/`, or `benchmarks/` declares (docs describing
+  nonexistent CLI flags).
 
 Pure stdlib + grep-style regexes: no markdown parser dependency.
 """
@@ -112,7 +113,9 @@ def test_backtick_paths_exist(md):
 
 def _declared_cli_flags() -> set:
     flags = set()
-    for src_dir in [REPO / "src" / "repro" / "launch", REPO / "benchmarks"]:
+    for src_dir in [REPO / "src" / "repro" / "launch",
+                    REPO / "src" / "repro" / "analysis",
+                    REPO / "benchmarks"]:
         for py in src_dir.glob("*.py"):
             flags.update(ARGPARSE_FLAG_RE.findall(py.read_text()))
     return flags
@@ -121,15 +124,16 @@ def _declared_cli_flags() -> set:
 @pytest.mark.parametrize("md", DOC_FILES, ids=lambda p: str(p.relative_to(REPO)))
 def test_cli_flags_exist(md):
     """Every --flag a doc mentions must be declared by some argparse in
-    launch/ or benchmarks/ — docs referencing removed or misspelled
-    flags fail here (checked inside code fences too: that's where the
-    copy-paste commands live)."""
+    launch/, analysis/, or benchmarks/ — docs referencing removed or
+    misspelled flags fail here (checked inside code fences too: that's
+    where the copy-paste commands live)."""
     declared = _declared_cli_flags()
     bad = [f for f in FLAG_RE.findall(md.read_text())
            if f not in declared
            and not f.startswith(EXTERNAL_FLAG_PREFIXES)]
     assert not bad, (f"{sorted(set(bad))} not declared by any argparse in "
-                     f"src/repro/launch/ or benchmarks/")
+                     f"src/repro/launch/, src/repro/analysis/, or "
+                     f"benchmarks/")
 
 
 def test_launch_serve_flags_documented():
